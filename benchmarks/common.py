@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import DenseComm
+from repro.core.topology import complete, ring
+from repro.core import make_optimizer
+from repro.data.synthetic import ClassStreamCfg, class_batch
+from repro.models.resnet import resnet20_init, resnet20_loss
+from repro.train.trainer import SimTrainer
+
+K = 8          # paper: ring of 8 workers
+WIDTH = 4      # reduced ResNet20 width for CPU benchmark scale
+STEPS = 90   # enough for PD-SGDM to close the gap to C-SGDM (paper Fig.1)
+
+
+def stacked_resnet(K=K, width=WIDTH, seed=0):
+    p = resnet20_init(jax.random.PRNGKey(seed), width=width)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), p)
+
+
+def make_opt(name, k=K, p=4, eta=0.1, gamma=0.4, compressor=None):
+    comm = DenseComm(complete(k) if name == "c_sgdm" else ring(k))
+    return make_optimizer(name, comm, eta=eta, mu=0.9, p=p, gamma=gamma,
+                          weight_decay=1e-4, compressor=compressor)
+
+
+def train_resnet(opt, k=K, steps=STEPS, seed=0, batch=16):
+    cfg = ClassStreamCfg(batch=batch, n_workers=k, seed=seed)
+    trainer = SimTrainer(resnet20_loss, opt)
+    params = stacked_resnet(k)
+    t0 = time.time()
+    params, state, hist = trainer.train(
+        params, lambda t: class_batch(cfg, t), steps, log_every=5)
+    return hist, (time.time() - t0) / steps
+
+
+def csv_row(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret mode) vs pure-jnp oracle.
+
+Interpret-mode wall time is a CPU emulation — correctness harness, not TPU
+performance.  Derived column reports bytes touched so the HBM-bound roofline
+claim (the reason these kernels exist) is auditable: each kernel's traffic
+is the stream count × matrix bytes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+from repro.kernels.momentum import BLOCK_ROWS
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    rows = BLOCK_ROWS * 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (rows, 1024))
+    m = jnp.zeros_like(x)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (rows, 1024))
+    nbytes = x.size * 4
+
+    from repro.kernels.momentum import momentum_update
+    us = _time(momentum_update, x, m, g, 0.1, mu=0.9, wd=1e-4)
+    csv_row("kernel/momentum_pallas_interpret", us,
+            f"streams=5;bytes={5*nbytes}")
+    us = _time(jax.jit(lambda *a: ref.momentum_update_ref(
+        *a, mu=0.9, wd=1e-4)), x, m, g, 0.1)
+    csv_row("kernel/momentum_jnp_ref", us, f"bytes={8*nbytes}")
+
+    from repro.kernels.sign_compress import (sign_pack_pallas,
+                                             sign_unpack_pallas)
+    us = _time(sign_pack_pallas, x)
+    csv_row("kernel/sign_pack_pallas_interpret", us,
+            f"in={nbytes};out={nbytes//32 + rows*4}")
+    pk, sl = ops.sign_pack(x)
+    us = _time(sign_unpack_pallas, pk, sl[:, 0])
+    csv_row("kernel/sign_unpack_pallas_interpret", us,
+            f"compression_ratio={nbytes/(pk.size + sl.size*4):.1f}x")
+    us = _time(jax.jit(ref.sign_pack_ref), x)
+    csv_row("kernel/sign_pack_jnp_ref", us, f"in={nbytes}")
+
+    from repro.kernels.gossip_mix import gossip_mix
+    t3 = (x, g, m + 1.0)
+    us = _time(gossip_mix, t3, weights=(1 / 3, 1 / 3, 1 / 3))
+    csv_row("kernel/gossip_mix_pallas_interpret", us,
+            f"streams=4;bytes={4*nbytes}")
+    us = _time(jax.jit(lambda t: ref.gossip_mix_ref(t, (1/3, 1/3, 1/3))), t3)
+    csv_row("kernel/gossip_mix_jnp_ref", us, f"bytes={4*nbytes}")
+
+
+if __name__ == "__main__":
+    main()

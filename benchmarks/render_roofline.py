@@ -1,0 +1,44 @@
+"""Render the §Roofline markdown table from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline [--mesh 16x16] \
+      >> EXPERIMENTS.md
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+
+    recs = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        r = json.load(open(path))
+        if r.get("skipped") or r.get("mesh") != args.mesh or r.get("tag"):
+            continue
+        recs.append(r)
+
+    print(f"\n### Baseline roofline table ({args.mesh}, "
+          f"{len(recs)} pairs; terms in ms per compiled call)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful | wire GB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = r["terms"]
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
+              f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+              f"{t['dominant']} | {r['useful_flops_ratio']:.2f} | "
+              f"{r['wire_bytes_per_device']/1e9:.2f} |")
+    doms = {}
+    for r in recs:
+        d = r["terms"]["dominant"]
+        doms[d] = doms.get(d, 0) + 1
+    print(f"\nDominant-term census: {doms}.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline table aggregator: reads artifacts/dryrun/*.json (deliverable g).
+
+Emits one CSV row per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO ratio, and per-device memory.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+ARTIFACTS = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return [r for r in recs if not r.get("skipped")]
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        csv_row("roofline/missing", 0.0,
+                f"no artifacts under {ARTIFACTS}; run repro.launch.dryrun")
+        return
+    for r in recs:
+        t = r["terms"]
+        total_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("tag"):
+            name += f"/{r['tag']}"
+        csv_row(
+            name, total_us,
+            f"compute_ms={t['compute_s']*1e3:.2f};"
+            f"memory_ms={t['memory_s']*1e3:.2f};"
+            f"collective_ms={t['collective_s']*1e3:.2f};"
+            f"dominant={t['dominant']};"
+            f"useful_ratio={r['useful_flops_ratio']:.2f};"
+            f"wire_gb={r['wire_bytes_per_device']/1e9:.3f};"
+            f"hbm_arg_gb={r['memory']['argument_bytes']/1e9:.2f}")
+    doms = {}
+    for r in recs:
+        doms[r["terms"]["dominant"]] = doms.get(r["terms"]["dominant"], 0) + 1
+    csv_row("roofline/summary", 0.0,
+            f"pairs={len(recs)};dominant_counts={doms}")
+
+
+if __name__ == "__main__":
+    main()

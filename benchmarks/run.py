@@ -1,0 +1,40 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run fig1 fig3   # a subset
+"""
+import sys
+import time
+
+SECTIONS = ["fig1", "fig2", "fig3", "speedup", "kernels", "roofline"]
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if a in SECTIONS] or SECTIONS
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "fig1" in want:
+        from benchmarks import fig1_pdsgdm
+        fig1_pdsgdm.main()
+    if "fig2" in want:
+        from benchmarks import fig2_comm_cost
+        fig2_comm_cost.main()
+    if "fig3" in want:
+        from benchmarks import fig3_cpdsgdm
+        fig3_cpdsgdm.main()
+    if "speedup" in want:
+        from benchmarks import speedup
+        speedup.main()
+    if "kernels" in want:
+        from benchmarks import kernels_micro
+        kernels_micro.main()
+    if "roofline" in want:
+        from benchmarks import roofline
+        roofline.main()
+    print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},sections={want}")
+
+
+if __name__ == '__main__':
+    main()

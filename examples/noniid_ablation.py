@@ -1,0 +1,46 @@
+"""Ablation: data heterogeneity (non-IID Dirichlet splits) × communication
+period p.
+
+The paper's Assumption 4 bounds per-worker gradients uniformly; in practice
+heterogeneity is where decentralized methods diverge from centralized ones.
+Workers draw labels from Dirichlet(α) class distributions — small α =
+strongly non-IID — and we sweep p to show the consensus/staleness trade-off.
+
+  PYTHONPATH=src python examples/noniid_ablation.py
+"""
+import jax
+
+from repro.core import make_optimizer
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+from repro.data.synthetic import ClassStreamCfg, class_batch
+from repro.models.resnet import resnet20_init, resnet20_loss
+from repro.train.trainer import SimTrainer
+
+import jax.numpy as jnp
+
+K, STEPS = 8, 50
+
+
+def stacked(width=4):
+    p = resnet20_init(jax.random.PRNGKey(0), width=width)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), p)
+
+
+print(f"{'alpha':>8}{'p':>4}{'final loss':>12}{'comm MB':>9}")
+for alpha in [None, 1.0, 0.1]:
+    for p in [1, 4, 16]:
+        cfg = ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=alpha)
+        opt = make_optimizer("pd_sgdm", DenseComm(ring(K)), eta=0.1,
+                             mu=0.9, p=p, weight_decay=1e-4)
+        trainer = SimTrainer(resnet20_loss, opt)
+        _, _, h = trainer.train(stacked(), lambda t: class_batch(cfg, t),
+                                STEPS, log_every=STEPS - 1)
+        label = "IID" if alpha is None else f"{alpha:g}"
+        print(f"{label:>8}{p:>4}{h.loss[-1]:>12.4f}{h.comm_mb[-1]:>9.2f}")
+print("\nreading: within every alpha row the loss degrades as p grows — "
+      "the staleness Theorem 1 prices via p²G²/ρ².  Note the *local* loss "
+      "is easier under strong non-IID (a worker seeing few classes has a "
+      "simpler problem); judge heterogeneity on the averaged model over "
+      "the global distribution (SimTrainer's eval_fn hook).")

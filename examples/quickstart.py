@@ -1,0 +1,43 @@
+"""Quickstart: decentralized momentum SGD (PD-SGDM) in ~40 lines.
+
+8 workers on a ring train a tiny LM with local momentum steps and gossip
+every p=4 iterations; then the same run with sign-compressed gossip
+(CPD-SGDM) shows the ~30× communication saving at matching loss.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.core import (CPDSGDMConfig, CPDSGDM, PDSGDM, PDSGDMConfig,
+                        SignCompressor)
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+from repro.data.synthetic import LMStreamCfg, lm_batch
+from repro.models import make_model
+from repro.train.trainer import SimTrainer
+
+K = 8  # workers on a ring (the paper's setup)
+
+model = make_model(ModelCfg(
+    name="tiny-lm", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab=256))
+
+# every worker starts from the same x0 (Algorithm 1 input)
+params0 = jax.vmap(lambda _: model.init(jax.random.PRNGKey(0)))(
+    jnp.arange(K))
+data = LMStreamCfg(vocab=256, seq_len=32, batch=4, n_workers=K)
+
+for label, opt in [
+    ("PD-SGDM  (Alg.1, full-precision gossip)",
+     PDSGDM(PDSGDMConfig(eta=0.3, mu=0.9, p=4), DenseComm(ring(K)))),
+    ("CPD-SGDM (Alg.2, 1-bit sign gossip)",
+     CPDSGDM(CPDSGDMConfig(eta=0.3, mu=0.9, p=4, gamma=0.4),
+             DenseComm(ring(K)), SignCompressor())),
+]:
+    trainer = SimTrainer(lambda p, b: model.loss(p, b), opt)
+    _, _, hist = trainer.train(params0, lambda t: lm_batch(data, t),
+                               steps=60, log_every=20)
+    print(f"{label}\n  loss {hist.loss[0]:.3f} -> {hist.loss[-1]:.3f}   "
+          f"communicated {hist.comm_mb[-1]:.2f} MB\n")

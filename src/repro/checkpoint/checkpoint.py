@@ -1,0 +1,88 @@
+"""Pytree checkpointing: npz payload + JSON treedef manifest.
+
+Works for params, optimizer state (incl. CPD's x̂ trees), and data-stream
+cursors.  Arrays are gathered to host (fine at example scale; a real
+multi-host deployment would swap in a distributed array serializer behind
+the same ``save``/``restore`` interface).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+_STEP_RE = re.compile(r"step_(\d+)")
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload, dtypes = {}, {}
+    for i, l in enumerate(leaves):
+        arr = np.asarray(l)
+        dtypes[f"leaf_{i}"] = arr.dtype.name
+        if arr.dtype.name in _VIEW_AS:
+            # npz cannot serialize extension dtypes: store a bit-view and
+            # record the logical dtype in the manifest
+            arr = arr.view(_VIEW_AS[arr.dtype.name])
+        payload[f"leaf_{i}"] = arr
+    return payload, dtypes, treedef
+
+
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def save(ckpt_dir: str, step: int, **trees) -> str:
+    """save(dir, step, params=..., opt_state=..., ...) -> path."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    manifest = {"step": step, "trees": {}, "dtypes": {}}
+    for name, tree in trees.items():
+        payload, dtypes, treedef = _flatten(tree)
+        np.savez(os.path.join(path, f"{name}.npz"), **payload)
+        manifest["trees"][name] = str(treedef)
+        manifest["dtypes"][name] = dtypes
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def restore(ckpt_dir: str, step: int, templates: Dict[str, Any]):
+    """Restore named trees using structure templates (e.g. from init)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for name, template in templates.items():
+        data = np.load(os.path.join(path, f"{name}.npz"))
+        dtypes = manifest.get("dtypes", {}).get(name, {})
+        leaves_t, treedef = jax.tree_util.tree_flatten(template)
+        leaves = []
+        for i in range(len(leaves_t)):
+            arr = data[f"leaf_{i}"]
+            dt = dtypes.get(f"leaf_{i}")
+            if dt in _VIEW_AS:
+                import ml_dtypes
+                arr = arr.view(getattr(ml_dtypes, dt))
+            leaves.append(jnp.asarray(arr))
+        for l, t in zip(leaves, leaves_t):
+            if hasattr(t, "shape") and tuple(l.shape) != tuple(t.shape):
+                raise ValueError(
+                    f"{name}: checkpoint leaf {l.shape} != template {t.shape}")
+        out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.fullmatch(d))]
+    return max(steps) if steps else None

@@ -1,0 +1,1 @@
+"""Architecture configs (assigned pool + the paper's own model) and shapes."""

@@ -1,0 +1,155 @@
+"""Config schema: model architecture, parallelism, optimizer, input shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["LayerSpec", "ModelCfg", "ParallelCfg", "OptimCfg", "RunCfg"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One position in the repeating block pattern."""
+    mixer: str = "attn"      # "attn" | "mla" | "mamba"
+    ffn: str = "dense"       # "dense" | "moe" | "dense+moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    arch_type: str                  # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    norm: str = "rmsnorm"           # rmsnorm | layernorm | nonparametric
+    qkv_bias: bool = False
+    window: Optional[int] = None    # sliding-window attention
+    rope_theta: float = 10000.0
+    gated_mlp: bool = True
+    tie_embeddings: bool = False
+    # --- block pattern (repeated n_layers / len(pattern) times)
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    # --- MoE
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_groups: int = 1             # per-group dispatch (see moe.MoECfg)
+    # --- MLA (minicpm3)
+    use_mla: bool = False
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # --- SSM (mamba2 / jamba)
+    ssm_state: int = 128
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # lower the group->head B/C expansion as broadcast instead of
+    # gather/repeat (perf iteration; semantically identical)
+    ssm_bcast_groups: bool = False
+    # --- input modality
+    input_mode: str = "tokens"      # tokens | embeds | vlm
+    n_patches: int = 1024           # vlm: patch-embedding prefix length
+    # --- dtypes
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # --- citation for the assigned-architecture pool
+    source: str = ""
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers {self.n_layers} not divisible by "
+                f"pattern length {len(self.pattern)}")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def n_repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    def params_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for spec in self.pattern:
+            n = self.n_repeats
+            if spec.mixer == "attn":
+                total += n * d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                total += n * self.n_heads * hd * d
+            elif spec.mixer == "mla":
+                qk = self.qk_nope_dim + self.qk_rope_dim
+                total += n * (d * self.q_lora_rank
+                              + self.q_lora_rank * self.n_heads * qk
+                              + d * self.kv_lora_rank + d * self.qk_rope_dim
+                              + self.kv_lora_rank * self.n_heads
+                              * (self.qk_nope_dim + self.v_head_dim)
+                              + self.n_heads * self.v_head_dim * d)
+            elif spec.mixer == "mamba":
+                di = self.ssm_expand * d
+                conv = di + 2 * self.ssm_state
+                total += n * (d * (2 * di + 2 * self.ssm_state
+                                   + di // self.ssm_headdim)
+                              + 4 * conv + di * d)
+            if spec.ffn in ("dense", "dense+moe"):
+                total += n * d * f * (3 if self.gated_mlp else 2)
+            if spec.ffn in ("moe", "dense+moe"):
+                total += n * (d * self.n_experts
+                              + self.n_experts * d * f
+                              * (3 if self.gated_mlp else 2))
+        return total
+
+    def active_params_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.params_count()
+        dense_cfg = dataclasses.replace(
+            self, n_experts=max(self.top_k, 1),
+            pattern=self.pattern)
+        return dense_cfg.params_count()
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCfg:
+    """How an arch maps onto the mesh.
+
+    profile "A": decentralized worker per ("pod","data") index, TP on model.
+    profile "B": worker per pod; FSDP over data + TP over model inside.
+    """
+    profile: str = "A"
+    topology: str = "ring"          # gossip graph between workers
+    remat: str = "full"             # none | full
+    fsdp_min_size: int = 2 ** 16    # don't shard tiny leaves
+    # --- perf-iteration levers (defaults = paper-faithful baseline) ---
+    inner: str = "tp"               # profile A inner parallelism: tp | dp
+    attn_ctx_shard: bool = False    # context-parallel attention core
+    moe_token_shard: bool = False   # constrain MoE token/expert sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimCfg:
+    name: str = "pd_sgdm"           # pd_sgdm | cpd_sgdm | c_sgdm | d_sgd | ...
+    eta: float = 0.1
+    mu: float = 0.9
+    p: int = 4
+    gamma: float = 0.4
+    weight_decay: float = 1e-4
+    compressor: str = "sign"        # for cpd_sgdm / choco
+    use_kernel: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCfg:
+    model: ModelCfg
+    parallel: ParallelCfg = ParallelCfg()
+    optim: OptimCfg = OptimCfg()

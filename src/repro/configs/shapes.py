@@ -1,0 +1,88 @@
+"""The four assigned input shapes + ShapeDtypeStruct builders for dry-runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+
+__all__ = ["InputShape", "SHAPES", "train_batch_specs", "train_batch_arrays"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _batch_struct(cfg: ModelCfg, batch: int, seq: int, with_labels: bool):
+    """Per-worker batch ShapeDtypeStructs honouring the input modality."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    elif cfg.input_mode == "embeds":
+        out["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cd)
+    elif cfg.input_mode == "vlm":
+        npatch = min(cfg.n_patches, seq // 2)
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, npatch, cfg.d_model), cd)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq - npatch), jnp.int32)
+    if with_labels:
+        ls = seq if cfg.input_mode != "vlm" else seq - min(cfg.n_patches,
+                                                           seq // 2)
+        out["labels"] = jax.ShapeDtypeStruct((batch, ls), jnp.int32)
+    return out
+
+
+def train_batch_specs(cfg: ModelCfg, shape: InputShape, n_workers: int):
+    """Stacked (n_workers, per_worker_batch, ...) batch specs."""
+    assert shape.global_batch % n_workers == 0, (
+        f"global_batch {shape.global_batch} % workers {n_workers}")
+    per = shape.global_batch // n_workers
+    base = _batch_struct(cfg, per, shape.seq_len,
+                         with_labels=shape.kind == "train")
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct((n_workers,) + sds.shape, sds.dtype)
+
+    return {k: stack(v) for k, v in base.items()}
+
+
+def train_batch_arrays(cfg: ModelCfg, n_workers: int, per_batch: int,
+                       seq: int, key, with_labels: bool = True):
+    """Concrete random batch with the same structure (for smoke/examples)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = jax.random.randint(
+            k1, (n_workers, per_batch, seq), 0, cfg.vocab)
+    elif cfg.input_mode == "embeds":
+        out["embeds"] = jax.random.normal(
+            k1, (n_workers, per_batch, seq, cfg.d_model), cd)
+    elif cfg.input_mode == "vlm":
+        npatch = min(cfg.n_patches, seq // 2)
+        out["patch_embeds"] = jax.random.normal(
+            k1, (n_workers, per_batch, npatch, cfg.d_model), cd)
+        out["tokens"] = jax.random.randint(
+            k2, (n_workers, per_batch, seq - npatch), 0, cfg.vocab)
+    if with_labels:
+        ls = seq if cfg.input_mode != "vlm" else seq - min(cfg.n_patches,
+                                                           seq // 2)
+        out["labels"] = jax.random.randint(
+            k3, (n_workers, per_batch, ls), 0, cfg.vocab)
+    return out

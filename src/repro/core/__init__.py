@@ -1,0 +1,28 @@
+"""Core contribution: PD-SGDM / CPD-SGDM decentralized optimizers.
+
+Public API::
+
+    from repro.core import (topology, make_compressor, DenseComm, ShardedComm,
+                            PDSGDM, PDSGDMConfig, CPDSGDM, CPDSGDMConfig,
+                            make_optimizer)
+"""
+from repro.core import schedules, topology
+from repro.core.baselines import CSGDM, choco_sgd, d_sgd, make_optimizer, pd_sgd
+from repro.core.compression import (Compressor, IdentityCompressor,
+                                    QSGDCompressor, RandKCompressor,
+                                    SignCompressor, TopKCompressor,
+                                    contraction_ratio, make_compressor)
+from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
+from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
+from repro.core.topology import Topology, make_topology, spectral_gap
+
+__all__ = [
+    "topology", "schedules",
+    "Topology", "make_topology", "spectral_gap",
+    "Compressor", "IdentityCompressor", "SignCompressor", "TopKCompressor",
+    "RandKCompressor", "QSGDCompressor", "make_compressor", "contraction_ratio",
+    "CommBackend", "DenseComm", "ShardedComm",
+    "PDSGDM", "PDSGDMConfig", "CPDSGDM", "CPDSGDMConfig",
+    "CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer",
+]

@@ -1,0 +1,93 @@
+"""Baselines the paper compares against (all built from PD/CPD machinery).
+
+* **C-SGDM** — centralized momentum SGD (the paper's Fig. 1 reference):
+  gradients are globally averaged every step, replicas stay bitwise
+  identical.  Implemented as gradient-mixing with the complete topology so
+  the dense and sharded backends share code with the decentralized methods.
+* **D-SGD**  [Lian et al. '17] — gossip every step, no momentum.
+* **PD-SGD** [Li et al. '19]  — periodic gossip, no momentum.
+* **CHOCO-SGD** [Koloskova et al. '19] — compressed gossip every step,
+  no momentum, no periodicity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.compression import Compressor
+from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
+from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
+from repro.core.topology import complete
+
+__all__ = ["CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer"]
+
+
+class CSGDM(PDSGDM):
+    """Centralized momentum SGD: all-reduce mean of gradients every step.
+
+    Uses the same ``CommBackend`` mixing primitive, but applied to *gradients*
+    with the complete topology (W = 11ᵀ/K ⇒ mixing == exact mean).
+    """
+
+    def __init__(self, config: PDSGDMConfig, comm: CommBackend):
+        cfg = dataclasses.replace(config, p=1)
+        super().__init__(cfg, comm)
+        if comm.topology.name != "complete":
+            raise ValueError("C-SGDM requires the complete topology (mean)")
+
+    def local_step(self, state, params, grads):
+        grads = self.comm.mix(grads)       # the centralized all-reduce
+        return super().local_step(state, params, grads)
+
+    def comm_round(self, state, params):
+        return params, state               # params never drift
+
+
+def d_sgd(eta: float, comm: CommBackend, weight_decay: float = 0.0) -> PDSGDM:
+    return PDSGDM(PDSGDMConfig(eta=eta, mu=0.0, p=1, weight_decay=weight_decay), comm)
+
+
+def pd_sgd(eta: float, p: int, comm: CommBackend,
+           weight_decay: float = 0.0) -> PDSGDM:
+    return PDSGDM(PDSGDMConfig(eta=eta, mu=0.0, p=p, weight_decay=weight_decay), comm)
+
+
+def choco_sgd(eta: float, gamma: float, comm: CommBackend,
+              compressor: Compressor | None = None,
+              weight_decay: float = 0.0) -> CPDSGDM:
+    cfg = CPDSGDMConfig(eta=eta, mu=0.0, p=1, gamma=gamma,
+                        weight_decay=weight_decay)
+    return CPDSGDM(cfg, comm, compressor)
+
+
+def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
+                   mu: float = 0.9, p: int = 4, gamma: float = 0.4,
+                   weight_decay: float = 0.0, compressor=None,
+                   lr_schedule=None, use_kernel: bool = False):
+    """Factory used by configs / launchers / benchmarks."""
+    name = name.lower().replace("-", "_")
+    if name in ("pd_sgdm", "pdsgdm"):
+        return PDSGDM(PDSGDMConfig(eta=eta, mu=mu, p=p,
+                                   weight_decay=weight_decay,
+                                   lr_schedule=lr_schedule,
+                                   use_kernel=use_kernel), comm)
+    if name in ("cpd_sgdm", "cpdsgdm"):
+        return CPDSGDM(CPDSGDMConfig(eta=eta, mu=mu, p=p, gamma=gamma,
+                                     weight_decay=weight_decay,
+                                     lr_schedule=lr_schedule,
+                                     use_kernel=use_kernel), comm, compressor)
+    if name in ("c_sgdm", "csgdm"):
+        K = comm.topology.n_workers
+        comp_comm = type(comm)(complete(K), **(
+            {"axis_names": comm.axis_names} if isinstance(comm, ShardedComm) else {}))
+        return CSGDM(PDSGDMConfig(eta=eta, mu=mu, p=1,
+                                  weight_decay=weight_decay,
+                                  lr_schedule=lr_schedule,
+                                  use_kernel=use_kernel), comp_comm)
+    if name in ("d_sgd", "dsgd"):
+        return d_sgd(eta, comm, weight_decay)
+    if name in ("pd_sgd", "pdsgd"):
+        return pd_sgd(eta, p, comm, weight_decay)
+    if name in ("choco_sgd", "chocosgd", "choco"):
+        return choco_sgd(eta, gamma, comm, compressor, weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,167 @@
+"""CPD-SGDM — Communication-efficient PD-SGDM (paper Algorithm 2).
+
+Local loop identical to PD-SGDM; at a communication round (mod(t+1,p)==0)::
+
+    x⁽ᵏ⁾ₜ₊₁ = x⁽ᵏ⁾ₜ₊½ + γ Σⱼ w_kj (x̂⁽ʲ⁾ₜ − x̂⁽ᵏ⁾ₜ)        (line 6, consensus)
+    q⁽ᵏ⁾ₜ   = Q(x⁽ᵏ⁾ₜ₊₁ − x̂⁽ᵏ⁾ₜ)                        (line 7, compress)
+    send q⁽ᵏ⁾ / recv q⁽ʲ⁾ for j ∈ N_k                    (line 8)
+    x̂⁽ʲ⁾ₜ₊₁ = x̂⁽ʲ⁾ₜ + q⁽ʲ⁾                              (line 9, error comp.)
+
+Key TPU adaptation: with the sign compressor and the sharded backend the
+payload crossing the interconnect is the *bit-packed* ``(uint8 signs, f32
+block scales)`` pair — the HLO ``collective-permute`` genuinely moves ~1/16th
+(bf16) of the raw bytes, so the dry-run roofline reflects the paper's
+compression claim rather than modelling it.
+
+Auxiliary copies: each worker stores x̂ for itself and for each neighbour
+(``xhat_nbrs``), updated only from received compressed payloads — neighbours'
+x̂ are never shipped at full precision (that would defeat the point).  In the
+dense simulation backend all copies coincide, so only the canonical stacked
+x̂ is stored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import (Compressor, SignCompressor, sign_pack,
+                                    sign_unpack)
+from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
+
+__all__ = ["CPDSGDMConfig", "CPDSGDM"]
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class CPDSGDMConfig(PDSGDMConfig):
+    gamma: float = 0.4               # consensus step size γ (paper: 0.4/0.5)
+    packed_wire: bool = True         # bit-pack sign payloads for ppermute
+
+
+class CPDSGDM(PDSGDM):
+    """Algorithm 2.  Inherits the local momentum step from PD-SGDM."""
+
+    def __init__(self, config: CPDSGDMConfig, comm: CommBackend,
+                 compressor: Optional[Compressor] = None):
+        super().__init__(config, comm)
+        self.compressor = compressor if compressor is not None else SignCompressor()
+        if isinstance(comm, ShardedComm) and comm.topology.name == "complete":
+            raise ValueError(
+                "CPD-SGDM sharded backend needs a shift-structured topology "
+                "(ring/torus/exponential); 'complete' has no neighbour state.")
+
+    # -- state -----------------------------------------------------------------
+    def init(self, params):
+        state = super().init(params)
+        f32 = lambda t: tmap(lambda x: x.astype(jnp.float32), t)
+        # x̂₀ = x₀: the first round's q then encodes only the local drift.
+        state["xhat"] = f32(params)
+        if isinstance(self.comm, ShardedComm):
+            state["xhat_nbrs"] = {
+                self._key(ax, sh): f32(params)
+                for (ax, sh, _w) in self.comm.nonself_shifts()
+            }
+        return state
+
+    @staticmethod
+    def _key(ax: int, sh: int) -> str:
+        return f"ax{ax}_sh{sh:+d}"
+
+    # -- compression helpers -----------------------------------------------------
+    def _apply_Q(self, tree, step):
+        """Q leaf-wise; per-worker under the dense (worker-stacked) backend."""
+        comp = self.compressor
+        base = jax.random.PRNGKey(17)
+
+        def per_leaf(i, leaf):
+            key = jax.random.fold_in(jax.random.fold_in(base, i), step)
+            if isinstance(self.comm, DenseComm):
+                K = leaf.shape[0]
+                keys = jax.random.split(key, K)
+                return jax.vmap(comp.apply)(leaf, keys)
+            return comp.apply(leaf, key)
+
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        q = [per_leaf(i, l) for i, l in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(treedef, q)
+
+    def _use_packed(self) -> bool:
+        return (self.config.packed_wire
+                and isinstance(self.compressor, SignCompressor)
+                and isinstance(self.comm, ShardedComm))
+
+    # -- communication round (Alg. 2 lines 6-9) ------------------------------------
+    def comm_round(self, state, params):
+        cfg = self.config
+        gamma = jnp.float32(cfg.gamma)
+        xhat = state["xhat"]
+
+        # line 6: consensus from *locally stored* copies — zero communication.
+        if isinstance(self.comm, ShardedComm):
+            mixhat = tmap(lambda x: x * jnp.float32(self.comm.self_weight()), xhat)
+            for (ax, sh, w) in self.comm.nonself_shifts():
+                nbr = state["xhat_nbrs"][self._key(ax, sh)]
+                mixhat = tmap(lambda a, b: a + jnp.float32(w) * b, mixhat, nbr)
+        else:
+            mixhat = self.comm.mix(xhat)
+        params_new = tmap(
+            lambda x, mh, h: (x.astype(jnp.float32) + gamma * (mh - h)).astype(x.dtype),
+            params, mixhat, xhat)
+
+        diff = tmap(lambda x, h: x.astype(jnp.float32) - h, params_new, xhat)
+
+        new_state = dict(state)
+        if self._use_packed():
+            # lines 7-9 with bit-packed wire format (the TPU-native path).
+            block = self.compressor.block
+            leaves, treedef = jax.tree_util.tree_flatten(diff)
+            packs = [sign_pack(l, block) for l in leaves]
+            q_self = [
+                sign_unpack(p, s, l.size, l.shape, jnp.float32, block)
+                for (p, s), l in zip(packs, leaves)
+            ]
+            new_state["xhat"] = jax.tree_util.tree_unflatten(
+                treedef, [h + q for h, q in zip(
+                    jax.tree_util.tree_leaves(xhat), q_self)])
+            nbrs = dict(state["xhat_nbrs"])
+            for (ax, sh, _w) in self.comm.nonself_shifts():
+                k = self._key(ax, sh)
+                recv = [
+                    (self.comm._receive_from(p, ax, sh),
+                     self.comm._receive_from(s, ax, sh))
+                    for (p, s) in packs
+                ]
+                q_recv = [
+                    sign_unpack(p, s, l.size, l.shape, jnp.float32, block)
+                    for (p, s), l in zip(recv, leaves)
+                ]
+                nbrs[k] = jax.tree_util.tree_unflatten(
+                    treedef, [h + q for h, q in zip(
+                        jax.tree_util.tree_leaves(nbrs[k]), q_recv)])
+            new_state["xhat_nbrs"] = nbrs
+        else:
+            q = self._apply_Q(diff, state["step"])
+            new_state["xhat"] = tmap(lambda h, qq: h + qq.astype(jnp.float32),
+                                     xhat, q)
+            if isinstance(self.comm, ShardedComm):
+                nbrs = dict(state["xhat_nbrs"])
+                for (ax, sh, _w) in self.comm.nonself_shifts():
+                    k = self._key(ax, sh)
+                    q_recv = self.comm.receive_tree(q, ax, sh)
+                    nbrs[k] = tmap(lambda h, qq: h + qq.astype(jnp.float32),
+                                   nbrs[k], q_recv)
+                new_state["xhat_nbrs"] = nbrs
+
+        return params_new, new_state
+
+    # -- comm-cost model --------------------------------------------------------------
+    def bytes_per_comm_round(self, params) -> int:
+        from repro.core.gossip import gossip_bytes_per_round
+        bits = self.compressor.wire_bits_per_element(
+            jax.tree_util.tree_leaves(params)[0].dtype)
+        return gossip_bytes_per_round(params, self.comm, bits_per_element=bits)

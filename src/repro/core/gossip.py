@@ -1,0 +1,177 @@
+"""Gossip communication backends.
+
+Two implementations of the same mixing semantics ``x⁽ᵏ⁾ ← Σⱼ w_kj x⁽ʲ⁾``:
+
+* :class:`DenseComm` — single-process simulation.  Every pytree leaf carries a
+  leading worker dimension of size K and mixing is an einsum with the dense
+  mixing matrix ``W``.  This is the mathematically-literal form of the paper's
+  Eq. (4)/(17) and is what the convergence experiments and unit tests run on
+  (CPU, any K).
+
+* :class:`ShardedComm` — production backend, used *inside* ``shard_map``.
+  Each device holds its worker's (model-parallel shard of the) parameters
+  without a worker dimension; neighbour exchange is ``jax.lax.ppermute``
+  (HLO ``collective-permute``) along the named worker mesh axes.  Circulant
+  (ring) and Kronecker-of-circulant (torus) topologies map each weighted
+  shift to one ppermute; the fully-connected topology maps to ``pmean``.
+
+Both expose::
+
+    mix(tree)                -> tree            # Σⱼ w_kj x⁽ʲ⁾
+    shift_views(tree)        -> {(axis,shift): tree}   # raw neighbour tensors
+    weights()                -> {(axis,shift): w}
+
+``shift_views`` is what CPD-SGDM uses to move the *compressed, packed*
+payload ``q`` between neighbours.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+__all__ = ["DenseComm", "ShardedComm", "CommBackend"]
+
+ShiftKey = Tuple[int, int]  # (topology axis, shift)
+
+
+class CommBackend:
+    topology: Topology
+
+    def mix(self, tree):
+        raise NotImplementedError
+
+    def shift_views(self, tree) -> Dict[ShiftKey, object]:
+        raise NotImplementedError
+
+    def weights(self) -> Dict[ShiftKey, float]:
+        return {(ax, sh): w for (ax, sh, w) in self.topology.shifts}
+
+    def nonself_shifts(self):
+        return [(ax, sh, w) for (ax, sh, w) in self.topology.shifts if sh != 0]
+
+    def self_weight(self) -> float:
+        return float(sum(w for (_, sh, w) in self.topology.shifts if sh == 0))
+
+
+@dataclasses.dataclass
+class DenseComm(CommBackend):
+    """Simulation backend: leaves are worker-stacked, leading dim K."""
+
+    topology: Topology
+
+    def __post_init__(self):
+        self._W = jnp.asarray(self.topology.W, dtype=jnp.float32)
+
+    def mix(self, tree):
+        W = self._W
+
+        def _mix(leaf):
+            K = leaf.shape[0]
+            assert K == self.topology.n_workers, (
+                f"leaf worker dim {K} != K={self.topology.n_workers}")
+            flat = leaf.reshape(K, -1)
+            out = (W @ flat.astype(jnp.float32)).astype(leaf.dtype)
+            return out.reshape(leaf.shape)
+
+        return jax.tree_util.tree_map(_mix, tree)
+
+    def _roll(self, leaf, axis: int, shift: int):
+        """Return the view where worker k sees worker (k+shift)'s value."""
+        grid = self.topology.axis_sizes
+        K = leaf.shape[0]
+        g = leaf.reshape(grid + leaf.shape[1:])
+        # worker index along `axis` receives from (idx + shift) -> roll by -shift
+        g = jnp.roll(g, -shift, axis=axis)
+        return g.reshape((K,) + leaf.shape[1:])
+
+    def shift_views(self, tree) -> Dict[ShiftKey, object]:
+        out = {}
+        for (ax, sh, _w) in self.nonself_shifts():
+            out[(ax, sh)] = jax.tree_util.tree_map(
+                lambda leaf: self._roll(leaf, ax, sh), tree)
+        return out
+
+
+@dataclasses.dataclass
+class ShardedComm(CommBackend):
+    """Production backend: ppermute along named mesh axes, inside shard_map.
+
+    ``axis_names[i]`` is the mesh axis carrying topology axis ``i``.
+    """
+
+    topology: Topology
+    axis_names: Tuple[str, ...]
+
+    def __post_init__(self):
+        # 'complete' mixes via pmean over all named axes — grid shape unused.
+        if self.topology.name != "complete" and (
+                len(self.axis_names) != len(self.topology.axis_sizes)):
+            raise ValueError(
+                f"axis_names {self.axis_names} vs grid {self.topology.axis_sizes}")
+
+    def _receive_from(self, x, axis: int, shift: int):
+        """Each worker receives the value held by worker (k+shift) on `axis`."""
+        n = self.topology.axis_sizes[axis]
+        name = self.axis_names[axis]
+        perm = [(j, (j - shift) % n) for j in range(n)]
+        return jax.lax.ppermute(x, name, perm)
+
+    def receive_tree(self, tree, axis: int, shift: int):
+        return jax.tree_util.tree_map(
+            partial(self._receive_from, axis=axis, shift=shift), tree)
+
+    def mix(self, tree):
+        if self.topology.name == "complete":
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.pmean(x, self.axis_names), tree)
+        if self.topology.name == "disconnected":
+            return tree
+
+        # Kronecker factorization: apply the per-axis circulant sequentially.
+        grid = self.topology.axis_sizes
+        per_axis: Dict[int, list] = {}
+        for (ax, sh, w) in self.topology.shifts:
+            per_axis.setdefault(ax, []).append((sh, w))
+
+        def mix_leaf(x):
+            y = x
+            for ax in sorted(per_axis):
+                acc = None
+                for (sh, w) in per_axis[ax]:
+                    v = y if sh == 0 else self._receive_from(y, ax, sh)
+                    term = v.astype(jnp.float32) * jnp.float32(w)
+                    acc = term if acc is None else acc + term
+                y = acc.astype(x.dtype)
+            return y
+
+        return jax.tree_util.tree_map(mix_leaf, tree)
+
+    def shift_views(self, tree) -> Dict[ShiftKey, object]:
+        out = {}
+        for (ax, sh, _w) in self.nonself_shifts():
+            out[(ax, sh)] = self.receive_tree(tree, ax, sh)
+        return out
+
+
+def gossip_bytes_per_round(tree, backend: CommBackend,
+                           bits_per_element: float | None = None) -> int:
+    """Per-worker bytes sent in one communication round (comm-cost model).
+
+    Full precision: degree × Σ leaf bytes.  With compression, pass the
+    compressor's ``wire_bits_per_element``.
+    """
+    total_elems = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+    deg = len(backend.nonself_shifts())
+    if bits_per_element is None:
+        bytes_ = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(tree))
+        return deg * bytes_
+    return int(deg * total_elems * bits_per_element / 8.0)

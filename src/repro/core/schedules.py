@@ -1,0 +1,39 @@
+"""Learning-rate schedules (multiplicative factors; peak LR lives in config).
+
+The paper uses step decay (×0.1 at epoch milestones); we additionally provide
+warmup-cosine for the LM pretraining examples.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "step_decay", "warmup_cosine"]
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def step_decay(milestones: Sequence[int], factor: float = 0.1):
+    """×factor at each milestone step (paper: epochs {150,225} / {30,60,80})."""
+    ms = jnp.asarray(sorted(milestones), jnp.int32)
+
+    def fn(step):
+        n = jnp.sum(step >= ms)
+        return jnp.power(jnp.float32(factor), n.astype(jnp.float32))
+
+    return fn
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_factor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        w = jnp.float32(max(warmup_steps, 1))
+        warm = step / w
+        t = jnp.clip((step - w) / jnp.maximum(total_steps - w, 1.0), 0.0, 1.0)
+        cos = min_factor + (1 - min_factor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < w, warm, cos)
+
+    return fn

@@ -1,0 +1,192 @@
+"""Gossip topologies and mixing matrices (paper §3.2, Assumption 1).
+
+A topology yields a symmetric doubly-stochastic mixing matrix ``W`` over K
+workers.  ``W 1 = 1``, ``1ᵀ W = 1ᵀ``, eigenvalues ``1 = λ₁ ≥ |λ₂| ≥ ...``;
+the spectral gap ``ρ = 1 - |λ₂|`` controls the topology term in Theorems 1/2.
+
+Besides the dense matrix (used by the single-process simulation backend and
+by the tests), each topology exposes its *neighbour structure*
+(``edges(k) -> [(offset_or_index, weight), ...]``) which the sharded backend
+turns into ``jax.lax.ppermute`` schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "ring",
+    "torus",
+    "complete",
+    "exponential",
+    "disconnected",
+    "spectral_gap",
+    "is_doubly_stochastic",
+    "make_topology",
+]
+
+
+def is_doubly_stochastic(W: np.ndarray, atol: float = 1e-8) -> bool:
+    """Check Assumption 1: symmetric, rows/cols sum to one, entries in [0,1]."""
+    W = np.asarray(W, dtype=np.float64)
+    if W.ndim != 2 or W.shape[0] != W.shape[1]:
+        return False
+    ones = np.ones(W.shape[0])
+    return (
+        np.allclose(W, W.T, atol=atol)
+        and np.allclose(W @ ones, ones, atol=atol)
+        and np.allclose(ones @ W, ones, atol=atol)
+        and bool(np.all(W >= -atol))
+        and bool(np.all(W <= 1 + atol))
+    )
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """ρ = 1 - |λ₂|  (Lemma 1).  ρ ∈ (0, 1] for connected non-bipartite W."""
+    W = np.asarray(W, dtype=np.float64)
+    eig = np.sort(np.abs(np.linalg.eigvalsh(W)))[::-1]
+    if len(eig) == 1:
+        return 1.0
+    return float(1.0 - eig[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A gossip graph over ``n_workers`` with doubly-stochastic weights.
+
+    Attributes:
+      name: identifier ("ring", "torus", ...).
+      W: dense (K, K) mixing matrix, numpy float64.
+      shifts: for shift-structured (circulant / Kronecker-of-circulant)
+        topologies, the list of (axis, shift, weight) triples describing the
+        neighbour exchange pattern used by the ppermute backend.  ``axis``
+        indexes into ``axis_sizes``.  ``shift`` of 0 denotes the self weight.
+      axis_sizes: worker-grid shape whose product is K (1-d for ring, 2-d
+        for torus). The sharded backend maps these onto mesh axes.
+    """
+
+    name: str
+    W: np.ndarray
+    shifts: tuple  # ((axis, shift, weight), ...)
+    axis_sizes: tuple
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.W.shape[0])
+
+    @property
+    def rho(self) -> float:
+        return spectral_gap(self.W)
+
+    @property
+    def degree(self) -> int:
+        """Number of non-self neighbours per worker (bytes-on-wire driver)."""
+        return sum(1 for (_, s, _) in self.shifts if s != 0)
+
+    def self_weight(self) -> float:
+        return float(self.W[0, 0])
+
+    def validate(self) -> None:
+        if not is_doubly_stochastic(self.W):
+            raise ValueError(f"topology {self.name}: W is not doubly stochastic")
+        if int(np.prod(self.axis_sizes)) != self.n_workers:
+            raise ValueError(f"topology {self.name}: axis_sizes {self.axis_sizes} != K")
+
+
+def _circulant(K: int, offsets_weights: dict) -> np.ndarray:
+    W = np.zeros((K, K), dtype=np.float64)
+    for off, w in offsets_weights.items():
+        for i in range(K):
+            W[i, (i + off) % K] += w
+    return W
+
+
+def ring(K: int, self_weight: float | None = None) -> Topology:
+    """Ring of K workers (the paper's experimental topology, K=8).
+
+    Default weights: 1/3 self, 1/3 each neighbour (Metropolis for a cycle);
+    for K=2 the ring degenerates to a pair-average; K=1 is identity.
+    """
+    if K == 1:
+        return Topology("ring", np.ones((1, 1)), ((0, 0, 1.0),), (1,))
+    if K == 2:
+        W = np.array([[0.5, 0.5], [0.5, 0.5]])
+        return Topology("ring", W, ((0, 0, 0.5), (0, 1, 0.5)), (2,))
+    ws = 1.0 / 3.0 if self_weight is None else float(self_weight)
+    wn = (1.0 - ws) / 2.0
+    W = _circulant(K, {0: ws, 1: wn, -1: wn})
+    shifts = ((0, 0, ws), (0, 1, wn), (0, -1, wn))
+    return Topology("ring", W, shifts, (K,))
+
+
+def torus(shape: Sequence[int], self_weight: float | None = None) -> Topology:
+    """Kronecker torus W = W_ring(shape[0]) ⊗ … — hierarchical pod×ring mixing.
+
+    Applied by the sharded backend as sequential per-axis ring mixings (the
+    Kronecker structure factorizes); ρ(W) = 1 - max_i |λ₂(W_i)| ... computed
+    exactly from the dense product here.
+    """
+    shape = tuple(int(s) for s in shape)
+    mats = [ring(s, self_weight).W for s in shape]
+    W = mats[0]
+    for M in mats[1:]:
+        W = np.kron(W, M)
+    shifts = []
+    for ax, s in enumerate(shape):
+        sub = ring(s, self_weight)
+        for (_, sh, w) in sub.shifts:
+            shifts.append((ax, sh, w))
+    return Topology("torus", W, tuple(shifts), shape)
+
+
+def complete(K: int) -> Topology:
+    """Fully connected: W = (1/K) 11ᵀ — gossip == exact global average.
+
+    Used by tests to show PD-SGDM(p=1, complete) ≡ centralized momentum SGD.
+    """
+    W = np.full((K, K), 1.0 / K)
+    shifts = tuple((0, s, 1.0 / K) for s in range(K))
+    return Topology("complete", W, shifts, (K,))
+
+
+def exponential(K: int) -> Topology:
+    """One-peer-per-power-of-two expander (hypercube-like), good ρ at low degree."""
+    offs = [0]
+    s = 1
+    while s < K:
+        offs.append(s)
+        offs.append(-s)
+        s *= 2
+    w = 1.0 / len(offs)
+    W = _circulant(K, {o: w for o in offs})
+    # symmetrize (offsets come in ± pairs except when 2s == K aliases)
+    W = (W + W.T) / 2.0
+    shifts = tuple((0, o, w) for o in offs)
+    top = Topology("exponential", W, shifts, (K,))
+    return top
+
+
+def disconnected(K: int) -> Topology:
+    """W = I: no communication at all (lower bound / ablation)."""
+    return Topology("disconnected", np.eye(K), ((0, 0, 1.0),), (K,))
+
+
+def make_topology(name: str, worker_grid: Sequence[int]) -> Topology:
+    """Build topology by name for a worker grid (product = K)."""
+    worker_grid = tuple(int(g) for g in worker_grid)
+    K = int(np.prod(worker_grid)) if worker_grid else 1
+    if name == "ring":
+        return ring(K)
+    if name == "torus":
+        grid = worker_grid if len(worker_grid) > 1 else (K,)
+        return torus(grid)
+    if name == "complete":
+        return complete(K)
+    if name == "exponential":
+        return exponential(K)
+    if name == "disconnected":
+        return disconnected(K)
+    raise ValueError(f"unknown topology {name!r}")

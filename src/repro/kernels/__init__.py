@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's memory-bound hot spots.
+
+momentum       — fused SGDM update (PD-SGDM inner loop)
+sign_compress  — blockwise scaled-sign + bit-pack (CPD-SGDM wire format)
+gossip_mix     — fused W-row neighbour AXPY after ppermute
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling; ``ops.py``
+holds the jit'd pytree wrappers (interpret-mode on CPU); ``ref.py`` the
+pure-jnp oracles used by the allclose sweeps in tests/test_kernels.py.
+"""

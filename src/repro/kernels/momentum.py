@@ -1,0 +1,63 @@
+"""Fused SGDM update kernel:  m ← μ·m + (g + λ·x);  x ← x − η·d.
+
+This is the memory-bound hot loop of PD-SGDM's local step (executed p times
+per communication round on every worker).  Fusing the momentum read-modify-
+write with the parameter update reads each of (x, m, g) exactly once from
+HBM and writes (x, m) once — 5 streams instead of the 8+ of the unfused
+jnp version (m read twice, x read twice, intermediates materialized).
+
+Layout: the wrapper flattens/pads each leaf to (rows, LANE) with LANE=1024
+(8 × 128-lane vregs) and tiles rows in blocks of BLOCK_ROWS — each block's
+working set is 5 × BLOCK_ROWS × 1024 × 4 B ≈ 2.6 MB in VMEM, comfortably
+under the ~16 MB/core budget while deep enough to stream HBM at full rate.
+
+η (the learning rate) is a runtime scalar (schedules change it per step), so
+it is passed as a (1, 1) operand rather than baked into the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["momentum_update", "LANE", "BLOCK_ROWS"]
+
+LANE = 1024
+BLOCK_ROWS = 128
+
+
+def _kernel(x_ref, m_ref, g_ref, lr_ref, x_out, m_out, *, mu, wd, nesterov):
+    x = x_ref[...]
+    m = m_ref[...]
+    g = g_ref[...] + wd * x
+    lr = lr_ref[0, 0]
+    m_new = mu * m + g
+    d = (g + mu * m_new) if nesterov else m_new
+    x_out[...] = x - lr * d
+    m_out[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "wd", "nesterov",
+                                             "interpret"))
+def momentum_update(x, m, g, lr, *, mu: float, wd: float = 0.0,
+                    nesterov: bool = False, interpret: bool = True):
+    """x, m, g: (rows, LANE) float32; lr: scalar.  Returns (x_new, m_new)."""
+    rows, lane = x.shape
+    assert lane == LANE and rows % BLOCK_ROWS == 0, (rows, lane)
+    grid = (rows // BLOCK_ROWS,)
+    blk = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, mu=float(mu), wd=float(wd),
+                          nesterov=bool(nesterov)),
+        grid=grid,
+        in_specs=[blk, blk, blk, scalar],
+        out_specs=[blk, blk],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(m.shape, jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), m.astype(jnp.float32),
+      g.astype(jnp.float32), lr2)

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles pytree flatten → single fused kernel call → unflatten, padding to
+the (rows, 1024) kernel layout.  ``interpret`` defaults to True off-TPU
+(this container is CPU-only: TPU is the *target*, interpret mode is the
+correctness harness).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gossip_mix as gm
+from repro.kernels import momentum as mom
+from repro.kernels import sign_compress as sc
+
+__all__ = ["INTERPRET", "momentum_update_tree", "sign_pack", "sign_unpack",
+           "gossip_mix_tree", "flatten_for_kernel", "unflatten_from_kernel"]
+
+INTERPRET = jax.default_backend() != "tpu"
+
+_ROW = mom.LANE  # 1024
+
+
+def _padded_rows(n_elems: int, block_rows: int) -> int:
+    rows = -(-n_elems // _ROW)
+    return -(-rows // block_rows) * block_rows
+
+
+def flatten_for_kernel(tree, block_rows: int) -> Tuple[jnp.ndarray, list]:
+    """Concatenate all leaves into one zero-padded (rows, 1024) f32 matrix."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    rows = _padded_rows(n, block_rows)
+    flat = jnp.pad(flat, (0, rows * _ROW - n))
+    meta = [(l.shape, l.dtype) for l in leaves]
+    return flat.reshape(rows, _ROW), meta
+
+
+def unflatten_from_kernel(mat, tree_like, meta):
+    flat = mat.reshape(-1)
+    leaves = []
+    off = 0
+    for shape, dtype in meta:
+        size = int(np.prod(shape))
+        leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def momentum_update_tree(params, m, grads, *, mu: float, lr,
+                         weight_decay: float = 0.0, nesterov: bool = False,
+                         interpret: bool | None = None):
+    """Fused SGDM over a whole pytree (one kernel launch)."""
+    interpret = INTERPRET if interpret is None else interpret
+    x_mat, meta = flatten_for_kernel(params, mom.BLOCK_ROWS)
+    m_mat, _ = flatten_for_kernel(m, mom.BLOCK_ROWS)
+    g_mat, _ = flatten_for_kernel(grads, mom.BLOCK_ROWS)
+    x_new, m_new = mom.momentum_update(
+        x_mat, m_mat, g_mat, lr, mu=mu, wd=weight_decay,
+        nesterov=nesterov, interpret=interpret)
+    new_params = unflatten_from_kernel(x_new, params, meta)
+    meta_m = [(s, jnp.float32) for (s, _d) in meta]
+    new_m = unflatten_from_kernel(m_new, m, meta_m)
+    return new_params, new_m
+
+
+def sign_pack(x_mat, *, interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return sc.sign_pack_pallas(x_mat, interpret=interpret)
+
+
+def sign_unpack(packed, scales, *, interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return sc.sign_unpack_pallas(packed, scales, interpret=interpret)
+
+
+def gossip_mix_tree(trees, weights, *, interpret: bool | None = None):
+    """Fused W-row mixing of n aligned pytrees (self + neighbours)."""
+    interpret = INTERPRET if interpret is None else interpret
+    mats = []
+    meta = None
+    for t in trees:
+        mat, mt = flatten_for_kernel(t, gm.BLOCK_ROWS)
+        mats.append(mat)
+        meta = mt
+    out = gm.gossip_mix(tuple(mats), weights=tuple(weights),
+                        interpret=interpret)
+    return unflatten_from_kernel(out, trees[0], meta)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import sign_pack as _sign_pack
+from repro.core.compression import sign_unpack as _sign_unpack
+
+__all__ = ["momentum_update_ref", "sign_pack_ref", "sign_unpack_ref",
+           "gossip_mix_ref"]
+
+
+def momentum_update_ref(x, m, g, lr, *, mu, wd=0.0, nesterov=False):
+    x = x.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    g = g.astype(jnp.float32) + wd * x
+    m_new = mu * m + g
+    d = (g + mu * m_new) if nesterov else m_new
+    return x - lr * d, m_new
+
+
+def sign_pack_ref(x, block: int = 1024):
+    """(rows, block) → (packed (rows, block//8) u8, scales (rows,) f32)."""
+    rows = x.shape[0]
+    packed, scales = jax.vmap(lambda r: _sign_pack(r, block))(x)
+    return packed.reshape(rows, block // 8), scales.reshape(rows)
+
+
+def sign_unpack_ref(packed, scales, block: int = 1024):
+    rows = packed.shape[0]
+    return jax.vmap(
+        lambda p, s: _sign_unpack(p.reshape(1, block // 8), s.reshape(1),
+                                  block, (block,), jnp.float32, block)
+    )(packed, scales.reshape(rows))
+
+
+def gossip_mix_ref(tensors, weights):
+    acc = jnp.zeros_like(tensors[0], dtype=jnp.float32)
+    for w, t in zip(weights, tensors):
+        acc = acc + jnp.float32(w) * t.astype(jnp.float32)
+    return acc

@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.registry import get_config, long_ctx_variant  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.hlo_analysis import (_COLL_RE, _COMP_DEF_RE, _group_size,
+                                       _type_bytes,
+                                       _computation_loop_depths)  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.runtime import build_serve, build_train  # noqa: E402
+
+"""Collective-traffic diagnosis for the §Perf hypothesis loop.
+
+Prints the top collective ops by (wire bytes × loop multiplicity) with their
+op_name metadata, so each GB can be attributed to a specific model site
+(attention out-proj psum, MoE dispatch, lm-head gather, gossip permute, ...).
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch arctic-480b \
+      --shape train_4k --top 15
+"""
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod=False, overrides=None):
+    shape = SHAPES[shape_name]
+    run = get_config(arch)
+    if overrides:
+        run = overrides(run)
+    mcfg = run.model if shape_name != "long_500k" else long_ctx_variant(
+        run.model)
+    from repro.launch.dryrun import compute_loop_trips
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    trips = compute_loop_trips(mcfg, shape, shape.kind, run.optim.p)
+    with mesh:
+        if shape.kind == "train":
+            pack = build_train(run, mesh, shape, model_cfg=mcfg)
+            lowered = pack.train_round.lower(
+                pack.params_struct, pack.state_struct,
+                pack.round_batch_struct)
+        elif shape.kind == "prefill":
+            sp = build_serve(run, mesh, shape, model_cfg=mcfg)
+            lowered = sp.prefill_step.lower(sp.params_struct, sp.pre_struct)
+        else:
+            sp = build_serve(run, mesh, shape, model_cfg=mcfg)
+            lowered = sp.decode_step.lower(
+                sp.params_struct, sp.cache_struct,
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    return compiled, trips, run, mcfg
+
+
+def top_collectives(hlo_text: str, loop_trips, top: int = 15):
+    depths = _computation_loop_depths(hlo_text)
+
+    def mult(d):
+        m = 1
+        for t in list(loop_trips)[:d]:
+            m *= int(t)
+        return m
+
+    items = []
+    cur = None
+    for line in hlo_text.splitlines():
+        dm = _COMP_DEF_RE.match(line.strip())
+        if dm and line.rstrip().endswith("{"):
+            cur = dm.group(1)
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group("op")
+        size = _type_bytes(m.group("type"))
+        n = _group_size(line)
+        k = mult(depths.get(cur, 0))
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * size
+        elif op == "all-gather":
+            wire = (n - 1) / n * size
+        elif op == "reduce-scatter":
+            wire = (n - 1) * size
+        elif op == "all-to-all":
+            wire = (n - 1) / n * size
+        else:
+            wire = float(size)
+        meta = _META_RE.search(line)
+        items.append({
+            "op": op, "wire_total": wire * k, "mult": k, "group": n,
+            "size_mb": size / 2 ** 20,
+            "where": (meta.group(1) if meta else "?")[-110:],
+        })
+    items.sort(key=lambda r: -r["wire_total"])
+    return items[:top], sum(i["wire_total"] for i in items)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    compiled, trips, run, mcfg = lower_pair(args.arch, args.shape,
+                                            args.multi_pod)
+    items, total = top_collectives(compiled.as_text(), trips, args.top)
+    print(f"total wire: {total/1e9:.1f} GB/device  (loop trips {trips})")
+    for it in items:
+        print(f"  {it['wire_total']/1e9:8.2f} GB  {it['op']:<19} "
+              f"x{it['mult']:<4} grp={it['group']:<3} "
+              f"{it['size_mb']:9.1f} MB/call  {it['where']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+
+from repro.launch.dryrun import run_one  # noqa: E402
+
+"""§Perf hillclimb driver: tagged variants of the three chosen pairs.
+
+Each variant is a config delta over the paper-faithful baseline; artifacts
+land in artifacts/hillclimb/ tagged so EXPERIMENTS.md §Perf can diff them
+against artifacts/dryrun/ baselines.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair olmo
+  PYTHONPATH=src python -m repro.launch.hillclimb            # all pairs
+"""
+
+
+def _opt(name):
+    def f(run):
+        return dataclasses.replace(
+            run, optim=dataclasses.replace(run.optim, name=name))
+    return f
+
+
+def _par(**kw):
+    def f(run):
+        return dataclasses.replace(
+            run, parallel=dataclasses.replace(run.parallel, **kw))
+    return f
+
+
+def _model(**kw):
+    def f(run):
+        return dataclasses.replace(
+            run, model=dataclasses.replace(run.model, **kw))
+    return f
+
+
+def _chain(*fns):
+    def f(run):
+        for fn in fns:
+            run = fn(run)
+        return run
+    return f
+
+
+PAIRS = {
+    # --- adoption sweep: validated levers applied to further pairs ---
+    "mixtral-adopt": ("mixtral-8x7b", "train_4k", [
+        ("adopt_ctx_moe", _chain(_model(moe_groups=16),
+                                 _par(attn_ctx_shard=True,
+                                      moe_token_shard=True))),
+    ]),
+    "qwen2-adopt": ("qwen2-72b", "train_4k", [
+        ("adopt_ctx", _par(attn_ctx_shard=True)),
+    ]),
+    "musicgen-adopt": ("musicgen-medium", "train_4k", [
+        ("adopt_worker", _par(inner="worker", topology="torus")),
+        ("adopt_worker_cpd", _chain(_par(inner="worker", topology="torus"),
+                                    _opt("cpd_sgdm"))),
+    ]),
+    "stablelm-adopt": ("stablelm-12b", "train_4k", [
+        ("adopt_ctx", _par(attn_ctx_shard=True)),
+        ("adopt_ctx_dp", _par(attn_ctx_shard=True, inner="dp")),
+    ]),
+    "jamba-prefill-adopt": ("jamba-1.5-large-398b", "decode_32k", [
+        ("adopt_moe_groups", _chain(_model(moe_groups=16),
+                                    _par(moe_token_shard=True))),
+    ]),
+    # most representative of the paper's technique (profile-A gossip)
+    "olmo": ("olmo-1b", "train_4k", [
+        ("cpd_sign", _opt("cpd_sgdm")),
+        ("inner_dp", _par(inner="dp")),
+        ("inner_dp_cpd", _chain(_par(inner="dp"), _opt("cpd_sgdm"))),
+        ("inner_dp_cpd_p16", _chain(
+            _par(inner="dp"), _opt("cpd_sgdm"),
+            lambda r: dataclasses.replace(
+                r, optim=dataclasses.replace(r.optim, p=16)))),
+        ("worker_per_chip", _par(inner="worker", topology="torus")),
+        ("worker_per_chip_cpd", _chain(
+            _par(inner="worker", topology="torus"), _opt("cpd_sgdm"))),
+    ]),
+    # worst roofline fraction: collective-bound MoE training
+    "arctic": ("arctic-480b", "train_4k", [
+        ("ctx_attn", _par(attn_ctx_shard=True)),
+        ("ctx_attn_moe", _par(attn_ctx_shard=True, moe_token_shard=True)),
+        ("ctx_moe_groups", _chain(_model(moe_groups=16),
+                                  _par(attn_ctx_shard=True,
+                                       moe_token_shard=True))),
+        ("ctx_moe_noremat", _chain(_model(moe_groups=16),
+                                   _par(attn_ctx_shard=True,
+                                        moe_token_shard=True,
+                                        remat="none"))),
+    ]),
+    # most collective-bound serving pair
+    "jamba": ("jamba-1.5-large-398b", "prefill_32k", [
+        ("ssm_bcast", _model(ssm_bcast_groups=True)),
+        ("ssm_bcast_ctx", _chain(_model(ssm_bcast_groups=True),
+                                 _par(attn_ctx_shard=True))),
+        ("moe_groups", _chain(_model(moe_groups=16),
+                              _par(moe_token_shard=True))),
+        ("moe_groups_ctx", _chain(_model(moe_groups=16,
+                                         ssm_bcast_groups=True),
+                                  _par(attn_ctx_shard=True,
+                                       moe_token_shard=True))),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), default=None)
+    ap.add_argument("--tag", default=None, help="run a single variant")
+    ap.add_argument("--outdir", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    pairs = [args.pair] if args.pair else list(PAIRS)
+    for p in pairs:
+        arch, shape, variants = PAIRS[p]
+        for tag, ov in variants:
+            if args.tag and tag != args.tag:
+                continue
+            run_one(arch, shape, False, args.outdir, overrides=ov, tag=tag)
+
+
+if __name__ == "__main__":
+    main()

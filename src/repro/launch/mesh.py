@@ -1,0 +1,40 @@
+"""Production mesh construction (TPU v5e pods; CPU host devices for dry-run).
+
+Importing this module never touches jax device state — meshes are built
+inside functions only.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+    PEAK_FLOPS_BF16 = 197e12        # per chip
+    HBM_BW = 819e9                  # bytes/s per chip
+    ICI_BW = 50e9                   # bytes/s per link
+    HBM_BYTES = 16e9                # per chip
+    VMEM_BYTES = 16 * 2 ** 20       # ~16 MiB per core
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for the multi-device subprocess tests (8 host devices)."""
+    if multi_pod:
+        return make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return make_mesh((n_data, n_model), ("data", "model"))

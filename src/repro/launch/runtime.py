@@ -1,0 +1,326 @@
+"""Distributed runtime: builds jit-able train / prefill / decode steps.
+
+Structure of one training iteration (see DESIGN.md):
+
+  1. per-worker forward+backward — ``vmap`` over the stacked worker dim, in
+     the pjit/GSPMD domain (XLA inserts the tensor-parallel collectives and,
+     in profile B, the FSDP all-gathers + within-worker gradient psums);
+  2. the PD/CPD-SGDM optimizer step — wrapped in ``jax.shard_map`` so the
+     gossip round lowers to explicit ``ppermute`` (collective-permute) over
+     the worker axes, with the compressed payload bit-packed on the wire.
+
+``build_train`` also exposes ``train_round`` (= scan of p local steps + one
+communication round) — the honest unit for the dry-run roofline: compute of
+p steps, communication of exactly one gossip round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg, RunCfg
+from repro.configs.shapes import InputShape, train_batch_specs
+from repro.core import make_compressor, make_optimizer
+from repro.core.gossip import DenseComm, ShardedComm
+from repro.core.topology import disconnected, make_topology, torus
+from repro.launch.sharding import (Layout, batch_spec_tree, cache_spec_tree,
+                                   make_layout, param_spec_tree, to_shardings)
+from repro.models import make_model
+
+__all__ = ["build_comm", "build_train", "build_serve", "TrainPack",
+           "ServePack", "make_shd"]
+
+
+def make_shd(layout: Layout, parallel):
+    """Logical-axis sharding-constraint hook for the model (perf levers).
+
+    Only active when a perf flag requests it — the baseline model runs with
+    GSPMD propagation alone.  Names present in the rule table force a
+    constraint (a None mapping = explicit replication over that dim).
+    """
+    rules = {}       # name -> (axis, priority); higher priority wins an axis
+    if getattr(parallel, "attn_ctx_shard", False) and layout.tp_axis:
+        # attention core: prefer head-sharded q (blockwise-safe: the chunk
+        # scan slices seq, so a seq shard would reshard every chunk); fall
+        # back to seq-sharded q when heads don't divide the tp axis
+        # (e.g. arctic's 56 heads on 16).  k/v explicitly replicated.
+        rules["heads"] = (layout.tp_axis, 2)
+        rules["seq_q"] = (layout.tp_axis, 1)
+        rules["seq_kv"] = (None, 0)
+    if getattr(parallel, "moe_token_shard", False):
+        if layout.fsdp_axis:
+            rules["tokens"] = (layout.fsdp_axis, 2)
+            rules["expert"] = (layout.fsdp_axis, 2)
+            rules["group"] = (layout.fsdp_axis, 2)
+        if layout.tp_axis:
+            rules["mlp"] = (layout.tp_axis, 1)
+    if not rules:
+        return lambda x, *names: x
+    mesh = layout.mesh
+
+    def shd(x, *names):
+        if not any(n in rules for n in names):
+            return x
+        spec = [None] * len(names)
+        used = set()
+        order = sorted(range(len(names)),
+                       key=lambda i: -(rules.get(names[i], (None, -1))[1]))
+        for i in order:
+            n = names[i]
+            if n not in rules:
+                continue
+            ax = rules[n][0]
+            if (ax is None or ax in used or i >= x.ndim
+                    or x.shape[i] % mesh.shape[ax] != 0):
+                continue
+            spec[i] = ax
+            used.add(ax)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return shd
+
+
+# --------------------------------------------------------------------------- comm
+def build_comm(run: RunCfg, layout: Layout):
+    """Topology + comm backend for the resolved worker layout."""
+    waxes = layout.worker_axes
+    sizes = layout.worker_sizes
+    if not waxes:
+        return DenseComm(disconnected(1))
+    if len(waxes) == 1:
+        topo = make_topology(run.parallel.topology, sizes)
+    else:
+        topo = torus(sizes)  # hierarchical pod×ring mixing
+    return ShardedComm(topo, axis_names=waxes)
+
+
+def _make_optimizer(run: RunCfg, comm):
+    o = run.optim
+    comp = make_compressor(o.compressor) if o.name.startswith(
+        ("cpd", "choco")) else None
+    return make_optimizer(
+        o.name, comm, eta=o.eta, mu=o.mu, p=o.p, gamma=o.gamma,
+        weight_decay=o.weight_decay, compressor=comp,
+        use_kernel=o.use_kernel)
+
+
+# --------------------------------------------------------------------------- train
+@dataclasses.dataclass
+class TrainPack:
+    model: object
+    opt: object
+    layout: Layout
+    params_struct: object
+    state_struct: object
+    batch_struct: object
+    params_sharding: object
+    state_sharding: object
+    batch_sharding: object
+    init_fn: Callable             # (key) -> (params, opt_state)  [jit, sharded]
+    train_step: Callable          # (params, state, batch) -> (params, state, loss)
+    train_round: Callable         # (params, state, batches[p]) -> (..., losses)
+    round_batch_struct: object
+    round_batch_sharding: object
+
+
+def build_train(run: RunCfg, mesh, shape: InputShape,
+                model_cfg: Optional[ModelCfg] = None) -> TrainPack:
+    mcfg = model_cfg or run.model
+    layout = make_layout(run.parallel, mesh)
+    model = make_model(mcfg, shd=make_shd(layout, run.parallel))
+    n_w = layout.n_workers
+    comm = build_comm(run, layout)
+    opt = _make_optimizer(run, comm)
+    remat = run.parallel.remat
+    p_round = run.optim.p
+
+    # ---- structs
+    def init_stacked(key):
+        keys = jax.random.split(key, n_w)
+        # all workers start from x0 (paper: x₀ identical) — fold_in worker id
+        # only for data; params use the same key.
+        return jax.vmap(lambda k: model.init(key))(keys)
+
+    params_struct = jax.eval_shape(init_stacked, jax.random.PRNGKey(0))
+    state_struct = jax.eval_shape(opt.init, params_struct)
+    batch_struct = train_batch_specs(mcfg, shape, n_w)
+
+    # ---- spec trees
+    pspec = param_spec_tree(params_struct, layout, stacked_worker=True)
+    sspec = _state_spec(state_struct, pspec)
+    bspec = batch_spec_tree(batch_struct, layout)
+    params_sh = to_shardings(pspec, mesh)
+    state_sh = to_shardings(sspec, mesh)
+    batch_sh = to_shardings(bspec, mesh)
+
+    # ---- loss / grads (GSPMD domain)
+    def loss_fn(p, b):
+        loss, met = model.loss(p, b, remat=remat)
+        return loss, met
+
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True))
+
+    # ---- optimizer (manual / shard_map domain)
+    def opt_full(p, s, g):
+        return opt.step(s, p, g)
+
+    def opt_local(p, s, g):
+        return opt.local_step(s, p, g)
+
+    def opt_comm(p, s):
+        return opt.comm_round(s, p)
+
+    smap = functools.partial(jax.shard_map, mesh=mesh, check_vma=False)
+    opt_full_sh = smap(opt_full, in_specs=(pspec, sspec, pspec),
+                       out_specs=(pspec, sspec))
+    opt_local_sh = smap(opt_local, in_specs=(pspec, sspec, pspec),
+                        out_specs=(pspec, sspec))
+    opt_comm_sh = smap(opt_comm, in_specs=(pspec, sspec),
+                       out_specs=(pspec, sspec))
+
+    def train_step(params, state, batch):
+        (losses, mets), grads = grad_fn(params, batch)
+        params, state = opt_full_sh(params, state, grads)
+        return params, state, losses.mean()
+
+    def train_round(params, state, batches):
+        """p local momentum steps then exactly one gossip round."""
+        def body(carry, batch):
+            params, state = carry
+            (losses, _), grads = grad_fn(params, batch)
+            params, state = opt_local_sh(params, state, grads)
+            return (params, state), losses.mean()
+
+        (params, state), losses = jax.lax.scan(body, (params, state), batches)
+        params, state = opt_comm_sh(params, state)
+        return params, state, losses
+
+    round_batch_struct = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((p_round,) + s.shape, s.dtype),
+        batch_struct)
+    round_batch_sh = jax.tree_util.tree_map(
+        lambda sh: NamedSharding(mesh, P(None, *sh.spec)), batch_sh)
+
+    def init_fn(key):
+        params = init_stacked(key)
+        return params, opt.init(params)
+
+    jit_init = jax.jit(init_fn, out_shardings=(params_sh, state_sh))
+    jit_step = jax.jit(train_step,
+                       in_shardings=(params_sh, state_sh, batch_sh),
+                       out_shardings=(params_sh, state_sh, None),
+                       donate_argnums=(0, 1))
+    jit_round = jax.jit(train_round,
+                        in_shardings=(params_sh, state_sh, round_batch_sh),
+                        out_shardings=(params_sh, state_sh, None),
+                        donate_argnums=(0, 1))
+
+    return TrainPack(
+        model=model, opt=opt, layout=layout,
+        params_struct=params_struct, state_struct=state_struct,
+        batch_struct=batch_struct,
+        params_sharding=params_sh, state_sharding=state_sh,
+        batch_sharding=batch_sh,
+        init_fn=jit_init, train_step=jit_step, train_round=jit_round,
+        round_batch_struct=round_batch_struct,
+        round_batch_sharding=round_batch_sh)
+
+
+def _state_spec(state_struct, pspec):
+    """Optimizer-state specs: momentum/x̂ mirror params; step replicated."""
+    def build(struct, like):
+        out = {}
+        for k, v in struct.items():
+            if k == "step":
+                out[k] = P()
+            elif k in ("m", "xhat"):
+                out[k] = like
+            elif k == "xhat_nbrs":
+                out[k] = {kk: like for kk in v}
+            else:
+                raise KeyError(k)
+        return out
+
+    return build(state_struct, pspec)
+
+
+# --------------------------------------------------------------------------- serve
+@dataclasses.dataclass
+class ServePack:
+    model: object
+    layout: Layout
+    params_struct: object
+    cache_struct: object
+    pre_struct: object
+    params_sharding: object
+    cache_sharding: object
+    prefill_step: Callable
+    decode_step: Callable
+    batch: int
+    max_len: int
+
+
+def build_serve(run: RunCfg, mesh, shape: InputShape,
+                model_cfg: Optional[ModelCfg] = None) -> ServePack:
+    mcfg = model_cfg or run.model
+    layout = make_layout(run.parallel, mesh, serving=True)
+    model = make_model(mcfg, shd=make_shd(layout, run.parallel))
+    b, s = shape.global_batch, shape.seq_len
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_struct = jax.eval_shape(
+        functools.partial(model.init_cache, b, s))
+    pspec = param_spec_tree(params_struct, layout, stacked_worker=False)
+    cspec = cache_spec_tree(cache_struct, layout, b)
+    params_sh = to_shardings(pspec, mesh)
+    cache_sh = to_shardings(cspec, mesh)
+
+    from repro.configs.shapes import _batch_struct
+    pre_struct = _batch_struct(mcfg, b, s, with_labels=False)
+    pre_spec = {k: P(layout.batch_axes or None,
+                     *([None] * (len(v.shape) - 1)))
+                for k, v in pre_struct.items()}
+    if b % max(1, math.prod(layout.axis_size(a)
+                            for a in layout.batch_axes)) != 0:
+        pre_spec = {k: P(*([None] * len(v.shape)))
+                    for k, v in pre_struct.items()}
+    pre_sh = to_shardings(pre_spec, mesh)
+
+    def prefill_step(params, batch):
+        return model.prefill_fast(params, batch, max_len=s)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos,
+                                 max_positions=s)
+
+    tok_spec = P(layout.batch_axes or None)
+    if b % max(1, math.prod(layout.axis_size(a)
+                            for a in layout.batch_axes)) != 0:
+        tok_spec = P()
+    tok_sh = NamedSharding(mesh, tok_spec)
+    scalar_sh = NamedSharding(mesh, P())
+
+    jit_prefill = jax.jit(prefill_step,
+                          in_shardings=(params_sh, pre_sh),
+                          out_shardings=(None, cache_sh))
+    jit_decode = jax.jit(decode_step,
+                         in_shardings=(params_sh, cache_sh, tok_sh,
+                                       scalar_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+
+    return ServePack(
+        model=model, layout=layout,
+        params_struct=params_struct, cache_struct=cache_struct,
+        pre_struct=pre_struct,
+        params_sharding=params_sh, cache_sharding=cache_sh,
+        prefill_step=jit_prefill, decode_step=jit_decode,
+        batch=b, max_len=s)

@@ -1,0 +1,265 @@
+"""Sharding rules: map every param / batch / cache leaf to a PartitionSpec.
+
+Two training profiles (see DESIGN.md §4):
+
+* **A** — replica-per-worker: the decentralized worker axis is
+  ``("pod","data")``; inside a worker only tensor parallelism over "model".
+* **B** — FSDP-inside-worker (≳45 B params): worker axis ``("pod",)``;
+  params are FSDP-sharded over "data" and tensor-parallel over "model".
+
+Every axis assignment is divisibility-checked (``_fit``) and silently
+dropped when the dim doesn't divide — e.g. minicpm3's vocab 73448 is not
+16-divisible, so its embedding stays vocab-unsharded instead of crashing
+the whole (arch × shape) grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelCfg
+
+__all__ = ["Layout", "make_layout", "param_pspec", "param_spec_tree",
+           "batch_spec_tree", "cache_spec_tree", "to_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Resolved axis roles for a (profile, mesh) pair."""
+    mesh: object
+    profile: str
+    worker_axes: Tuple[str, ...]   # decentralized gossip axes
+    fsdp_axis: Optional[str]       # params sharded here inside a worker
+    tp_axis: Optional[str]
+    batch_axes: Tuple[str, ...]    # serving batch axes
+    inner_axis: Optional[str] = None  # within-worker data parallelism (A-dp)
+
+    @property
+    def worker_sizes(self) -> Tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.worker_axes)
+
+    @property
+    def n_workers(self) -> int:
+        return int(math.prod(self.worker_sizes)) if self.worker_axes else 1
+
+    def axis_size(self, name: Optional[str]) -> int:
+        return self.mesh.shape[name] if name else 1
+
+
+def make_layout(parallel: ParallelCfg, mesh, *, serving: bool = False) -> Layout:
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    if serving:
+        return Layout(mesh, parallel.profile, (),
+                      "data" if parallel.profile == "B" else None,
+                      "model" if "model" in names else None,
+                      tuple(a for a in ("pod", "data") if a in names))
+    if parallel.profile == "A":
+        waxes = tuple(a for a in ("pod", "data") if a in names)
+        if parallel.inner == "worker":
+            # decentralize over the FULL mesh: one gossip worker per chip,
+            # torus topology over all axes — zero per-step collectives,
+            # only the periodic neighbour permutes (beyond-paper §Perf).
+            waxes = tuple(names)
+            return Layout(mesh, "A", waxes, None, None, waxes)
+        if parallel.inner == "dp" and "model" in names:
+            # within-worker data parallelism: params replicated inside a
+            # worker, the "model" axis shards the per-worker batch (small
+            # models: gradient all-reduce ≪ per-layer activation psums)
+            return Layout(mesh, "A", waxes, None, None, waxes,
+                          inner_axis="model")
+        return Layout(mesh, "A", waxes, None,
+                      "model" if "model" in names else None,
+                      waxes)
+    waxes = ("pod",) if has_pod else ()
+    return Layout(mesh, "B", waxes,
+                  "data" if "data" in names else None,
+                  "model" if "model" in names else None,
+                  tuple(a for a in ("pod", "data") if a in names))
+
+
+# --------------------------------------------------------------------------- params
+def _fit(shape, dim: int, axis: Optional[str], layout: Layout,
+         taken) -> Optional[str]:
+    """Assign axis to dim if divisible and not already used on this leaf."""
+    if axis is None or axis in taken:
+        return None
+    if dim >= len(shape) or shape[dim] % layout.axis_size(axis) != 0:
+        return None
+    taken.add(axis)
+    return axis
+
+
+def param_pspec(path: str, shape, layout: Layout,
+                stacked_worker: bool) -> P:
+    """PartitionSpec for one param leaf.
+
+    ``path`` is the '/'-joined key path *without* the worker dim;
+    ``shape`` likewise.  ``stacked_worker`` prepends the worker-axes spec.
+    """
+    tp, fsdp = layout.tp_axis, layout.fsdp_axis
+    nd = len(shape)
+    spec = [None] * nd
+    taken: set = set()
+
+    def last2(a_for_m2, a_for_m1):
+        spec[nd - 2] = _fit(shape, nd - 2, a_for_m2, layout, taken)
+        spec[nd - 1] = _fit(shape, nd - 1, a_for_m1, layout, taken)
+
+    leaf = path.split("/")[-1]
+    ctx = path
+    if "embed/table" in ctx:
+        last2(tp, fsdp)            # vocab over model, d over data
+    elif "lm_head" in ctx and leaf == "w":
+        last2(fsdp, tp)
+    elif "moe" in ctx and leaf in ("wi", "wg"):
+        # (E, d, f): experts over fsdp axis, f over model
+        spec[nd - 3] = _fit(shape, nd - 3, fsdp, layout, taken)
+        spec[nd - 1] = _fit(shape, nd - 1, tp, layout, taken)
+        if spec[nd - 3] is None:
+            spec[nd - 2] = _fit(shape, nd - 2, fsdp, layout, taken)
+    elif "moe" in ctx and leaf == "wo":
+        # (E, f, d)
+        spec[nd - 3] = _fit(shape, nd - 3, fsdp, layout, taken)
+        spec[nd - 2] = _fit(shape, nd - 2, tp, layout, taken)
+        if spec[nd - 3] is None:
+            spec[nd - 1] = _fit(shape, nd - 1, fsdp, layout, taken)
+    elif "router" in ctx:
+        pass                        # tiny, replicated
+    elif leaf == "w" and any(k in ctx for k in (
+            "wo/", "out_proj")) :
+        last2(tp, fsdp)             # row-parallel
+    elif leaf == "w" and any(k in ctx for k in (
+            "wq", "wk", "wv", "wi", "wg", "wdq", "wuq", "wdkv", "wuk",
+            "wuv", "in_proj")):
+        last2(fsdp, tp)             # column-parallel
+    elif leaf == "w":               # e.g. wkr (tiny)
+        last2(fsdp, None)
+    elif leaf == "b" and nd >= 1:
+        spec[nd - 1] = _fit(shape, nd - 1, tp, layout, taken)
+    elif leaf == "conv_w":
+        spec[nd - 1] = _fit(shape, nd - 1, tp, layout, taken)
+    # norms / scalars / A_log / D etc: replicated
+
+    if stacked_worker:
+        w = layout.worker_axes if layout.worker_axes else None
+        return P(w, *spec)
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec_tree(params_struct, layout: Layout, *,
+                    stacked_worker: bool, skip_leading: int = 0):
+    """PartitionSpec tree for a params (or grads/momentum) struct.
+
+    ``skip_leading``: number of leading dims that are NOT part of the base
+    param shape (e.g. the stacked worker dim = 1, or worker+repeats = 2 —
+    the n_repeats scan dim is found automatically from 'blocks/' paths).
+    """
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        lead = skip_leading
+        if stacked_worker:
+            lead += 1               # worker dim
+        if "blocks/" in ps:
+            lead += 1               # n_repeats scan dim
+        base = shape[lead:]
+        spec = param_pspec(ps, base, layout, stacked_worker=False)
+        pad = [None] * (lead - (1 if stacked_worker else 0))
+        w = (layout.worker_axes or None) if stacked_worker else None
+        if stacked_worker:
+            return P(w, *pad, *spec)
+        return P(*pad, *spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+# --------------------------------------------------------------------------- batch
+def batch_spec_tree(batch_struct, layout: Layout):
+    """Train batch leaves: (n_workers, per_batch, seq[, d])."""
+    w = layout.worker_axes or None
+
+    def one(path, leaf):
+        spec = [None] * (len(leaf.shape) - 1)
+        inner = layout.fsdp_axis or layout.inner_axis
+        if inner and leaf.shape[1] % layout.axis_size(inner) == 0:
+            spec[0] = inner              # data-parallel inside the worker
+        return P(w, *spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_struct)
+
+
+# --------------------------------------------------------------------------- cache
+def cache_spec_tree(cache_struct, layout: Layout, batch: int):
+    """Serve-time cache: batch over batch_axes when divisible, else context/
+    state parallel (slots over data, heads/latent over model)."""
+    baxes = layout.batch_axes
+    bsize = int(math.prod(layout.axis_size(a) for a in baxes)) if baxes else 1
+    batch_ok = baxes and batch % bsize == 0
+    data = "data" if "data" in layout.mesh.axis_names else None
+    tp = layout.tp_axis
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        # find batch dim: caches are stacked (n_repeats, b, ...)
+        spec = [None] * nd
+        bdim = 1
+        taken: set = set()
+        if batch_ok:
+            spec[bdim] = baxes
+            taken.update(baxes)
+        if ps.endswith("k") or ps.endswith("v"):
+            # (rep, b, slots, kv, hd)
+            if not batch_ok:
+                spec[2] = _fit(shape, 2, data, layout, taken)
+            spec[3] = _fit(shape, 3, tp, layout, taken)
+            if spec[3] is None:
+                spec[4] = _fit(shape, 4, tp, layout, taken)
+        elif ps.endswith("ckv"):
+            # (rep, b, slots, r)
+            if not batch_ok:
+                spec[2] = _fit(shape, 2, data, layout, taken)
+            spec[3] = _fit(shape, 3, tp, layout, taken)
+        elif ps.endswith("krope"):
+            if not batch_ok:
+                spec[2] = _fit(shape, 2, data, layout, taken)
+        elif ps.endswith("ssm"):
+            # (rep, b, h, n, p)
+            spec[2] = _fit(shape, 2, tp, layout, taken)
+            if not batch_ok:
+                spec[3] = _fit(shape, 3, data, layout, taken)
+        elif ps.endswith("conv"):
+            # (rep, b, k-1, conv_dim)
+            spec[3] = _fit(shape, 3, tp, layout, taken)
+        elif ps.endswith("pos"):
+            if not batch_ok:
+                spec[2] = _fit(shape, 2, data, layout, taken)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

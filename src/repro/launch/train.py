@@ -1,0 +1,88 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+      --optimizer pd_sgdm --steps 50 --devices 8
+
+On this CPU container ``--devices N`` forces N host devices and a debug mesh
+(the production path is identical code on a real mesh).  ``--smoke`` selects
+the reduced config; the full configs are exercised by ``dryrun``.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--optimizer", default=None,
+                    help="pd_sgdm|cpd_sgdm|c_sgdm|d_sgd|pd_sgd|choco_sgd")
+    ap.add_argument("--p", type=int, default=None)
+    ap.add_argument("--eta", type=float, default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU debug)")
+    ap.add_argument("--data-axis", type=int, default=4)
+    ap.add_argument("--model-axis", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import dataclasses
+
+    import jax
+
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_mesh
+    from repro.launch.runtime import build_train
+    from repro.train.trainer import ShardedTrainer
+
+    run = (get_smoke_config if args.smoke else get_config)(args.arch)
+    optim = run.optim
+    if args.optimizer:
+        optim = dataclasses.replace(optim, name=args.optimizer)
+    if args.p:
+        optim = dataclasses.replace(optim, p=args.p)
+    if args.eta is not None:
+        optim = dataclasses.replace(optim, eta=args.eta)
+    run = dataclasses.replace(run, optim=optim)
+
+    n_dev = len(jax.devices())
+    if n_dev >= args.data_axis * args.model_axis:
+        mesh = make_mesh((args.data_axis, args.model_axis),
+                         ("data", "model"))
+    else:
+        mesh = make_mesh((n_dev, 1), ("data", "model"))
+
+    shape = InputShape("cli", args.seq_len, args.global_batch, "train")
+    pack = build_train(run, mesh, shape)
+    n_w = pack.layout.n_workers
+    print(f"arch={args.arch} optimizer={optim.name} p={optim.p} "
+          f"workers={n_w} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    def batch_fn(t):
+        return train_batch_arrays(
+            run.model, n_w, args.global_batch // n_w, args.seq_len,
+            jax.random.fold_in(jax.random.PRNGKey(1), t))
+
+    trainer = ShardedTrainer(pack, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    with mesh:
+        out = trainer.train(jax.random.PRNGKey(0), batch_fn, args.steps,
+                            log_every=max(args.steps // 10, 1))
+    h = out["history"]
+    print(f"final loss {h.loss[-1]:.4f} (start {h.loss[0]:.4f})")
+    if h.loss[-1] >= h.loss[0]:
+        print("WARNING: loss did not decrease", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder (attn/MLA/mamba/MoE patterns) + ResNet20."""
+from repro.models.transformer import Model, make_model
+
+__all__ = ["Model", "make_model"]

@@ -1,0 +1,127 @@
+"""Shared neural-net layers (pure-functional, pytree params).
+
+Conventions:
+  * ``init_*`` returns a params dict; ``apply`` style functions are pure.
+  * All matmuls accumulate in float32 (``preferred_element_type``) and cast
+    back to the compute dtype.
+  * Logical sharding hints are attached by the runtime, not here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "layernorm_init",
+    "layernorm", "nonparametric_layernorm", "embedding_init", "embed",
+    "rope_freqs", "apply_rope", "mlp_init", "mlp", "truncated_normal_init",
+]
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------- dense
+def dense_init(key, in_dim: int, out_dim: int, dtype, use_bias: bool = False):
+    p = {"w": truncated_normal_init(key, (in_dim, out_dim), dtype,
+                                    scale=in_dim ** -0.5)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...d,df->...f", x, p["w"],
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- norms
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype, use_bias: bool = True):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mean) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparametric_layernorm(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias; arXiv:2402.00838)."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mean) ** 2, axis=-1, keepdims=True)
+    return ((x32 - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- embed
+def embedding_init(key, vocab: int, dim: int, dtype):
+    return {"table": truncated_normal_init(key, (vocab, dim), dtype, scale=1.0)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, max_len: int, theta: float = 10000.0):
+    """(max_len, head_dim/2) complex-free cos/sin tables, float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    f = jnp.outer(t, inv)
+    return jnp.cos(f), jnp.sin(f)
+
+
+def apply_rope(x, cos, sin, positions):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    c = cos[positions][..., None, :]  # (..., seq, 1, hd/2)
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- mlp
+def mlp_init(key, dim: int, hidden: int, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, dim, hidden, dtype),
+        "wo": dense_init(k2, hidden, dim, dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(k3, dim, hidden, dtype)
+    return p
+
+
+def mlp(p, x):
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        h = jax.nn.silu(dense(p["wg"], x).astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Dispatch is *sort-based* (argsort tokens by expert, scatter into a per-expert
+capacity buffer) rather than the one-hot ``(N, E, C)`` einsum — the one-hot
+dispatch tensor is O(N²) at large N and would dominate memory for Arctic's
+128 experts.  With sorting, peak extra memory is the (E, C, d) buffer ≈
+``k·capacity_factor`` token copies, matching Megablocks-style systems.
+
+Sharding: the capacity buffer's expert dim is annotated with the logical axis
+``"expert"``; the runtime maps it to a mesh axis (expert parallelism) or
+leaves it unsharded.  Tokens above capacity are dropped (standard Switch
+semantics); the load-balance auxiliary loss keeps routing uniform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, truncated_normal_init
+
+__all__ = ["MoECfg", "moe_init", "moe_apply"]
+
+Shd = Callable  # shd(x, *logical_axes) -> x (sharding-constraint hook)
+
+
+def _noshd(x, *names):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    gated: bool = True
+    # dispatch groups: 1 = one global sort (baseline; SPMD must replicate
+    # the sort => giant all-reduces).  >1 = per-group local sort + an
+    # expert-major transpose (lowers to all-to-all) — set to the data-axis
+    # size so each shard sorts only its own tokens (§Perf iteration).
+    n_groups: int = 1
+
+
+def moe_init(key, cfg: MoECfg, dtype):
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),
+        "wi": truncated_normal_init(ki, (E, d, f), dtype, scale=d ** -0.5),
+        "wo": truncated_normal_init(ko, (E, f, d), dtype, scale=f ** -0.5),
+    }
+    if cfg.gated:
+        p["wg"] = truncated_normal_init(kg, (E, d, f), dtype, scale=d ** -0.5)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoECfg) -> int:
+    c = math.ceil(cfg.top_k * n_tokens / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _dispatch(xf, gates, C: int, cfg: MoECfg):
+    """Sort-based dispatch of one token group.
+
+    xf: (N, d); gates: (N, E) f32.  Returns the (E, C, d) capacity buffer
+    plus the combine metadata (slot order, ranks, weights, keep mask).
+    """
+    N, d = xf.shape
+    k, E = cfg.top_k, cfg.n_experts
+    top_w, top_e = jax.lax.top_k(gates, k)                            # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(N * k)
+    order = jnp.argsort(flat_e, stable=True)                          # (N·k,)
+    sorted_e = flat_e[order]
+    token_of_slot = order // k
+    w_of_slot = top_w.reshape(N * k)[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(N * k) - starts[sorted_e]
+    keep = rank < C
+    rank_c = jnp.where(keep, rank, C)  # C = out-of-range -> dropped by mode
+
+    buf = jnp.zeros((E, C, d), xf.dtype)
+    buf = buf.at[sorted_e, rank_c].set(xf[token_of_slot], mode="drop")
+    meta = (sorted_e, rank_c, token_of_slot, w_of_slot, keep)
+    return buf, meta
+
+
+def _combine(out_buf, meta, N: int, d: int):
+    sorted_e, rank_c, token_of_slot, w_of_slot, keep = meta
+    slot_out = out_buf[sorted_e, rank_c]                 # gather; C row OOB
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0)
+    slot_out = slot_out.astype(jnp.float32) * w_of_slot[:, None]
+    return jnp.zeros((N, d), jnp.float32).at[token_of_slot].add(slot_out)
+
+
+def _expert_ffn(params, buf, cfg: MoECfg, shd: Shd):
+    """buf: (E, C, d) -> (E, C, d); gated SiLU, f32 accumulation."""
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"],
+                   preferred_element_type=jnp.float32)
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["wg"],
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shd(h.astype(buf.dtype), "expert", None, "mlp")
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(buf.dtype)
+
+
+def moe_apply(params, x, cfg: MoECfg, shd: Shd = _noshd):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    N = b * s
+    E = cfg.n_experts
+    G = cfg.n_groups if N % max(cfg.n_groups, 1) == 0 else 1
+    xf = shd(x.reshape(N, d), "tokens", "embed")
+
+    # ---- router (f32 throughout for numerical stability)
+    logits = dense(params["router"], xf.astype(jnp.float32))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)       # (N, E)
+
+    # ---- load-balance auxiliary loss (Switch:  E · Σ_e f_e · P_e)
+    P_e = gates.mean(axis=0)
+    _, top_e = jax.lax.top_k(gates, cfg.top_k)
+    ones = jnp.zeros((N, E), jnp.float32).at[
+        jnp.arange(N)[:, None], top_e].add(1.0)
+    f_e = ones.mean(axis=0) / cfg.top_k
+    aux = cfg.router_aux_weight * E * jnp.sum(P_e * f_e)
+
+    if G == 1:
+        # single global sort (baseline): simple but the SPMD partitioner
+        # must replicate the sort/scatter — fine on few chips, pathological
+        # at mesh scale (see EXPERIMENTS.md §Perf).
+        C = _capacity(N, cfg)
+        buf, meta = _dispatch(xf, gates, C, cfg)
+        buf = shd(buf, "expert", None, "embed")
+        out_buf = shd(_expert_ffn(params, buf, cfg, shd),
+                      "expert", None, "embed")
+        y = _combine(out_buf, meta, N, d)
+    else:
+        # grouped dispatch: every group sorts only its own tokens (group
+        # dim sharded over the data axis => local sorts), then the buffer
+        # is transposed to expert-major (lowers to all-to-all) for the
+        # expert-sharded FFN.
+        Cg = _capacity(N // G, cfg)
+        xg = shd(xf.reshape(G, N // G, d), "group", None, "embed")
+        gg = gates.reshape(G, N // G, E)
+        buf, meta = jax.vmap(
+            lambda xx, gt: _dispatch(xx, gt, Cg, cfg))(xg, gg)
+        buf = shd(buf, "group", None, None, "embed")       # (G, E, Cg, d)
+        ebuf = jnp.swapaxes(buf, 0, 1)                     # (E, G, Cg, d)
+        ebuf = shd(ebuf, "expert", None, None, "embed")    # <- all-to-all
+        ebuf = ebuf.reshape(E, G * Cg, d)
+        out = _expert_ffn(params, ebuf, cfg, shd)
+        out = shd(out.reshape(E, G, Cg, d), "expert", None, None, "embed")
+        out_g = shd(jnp.swapaxes(out, 0, 1),               # back: a2a
+                    "group", None, None, "embed")
+        yg = jax.vmap(lambda ob, mt: _combine(ob, mt, N // G, d))(
+            out_g, meta)
+        y = yg.reshape(N, d)
+    y = shd(y, "tokens", "embed")
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,103 @@
+"""ResNet-20 (CIFAR-10 variant, He et al. '16) — the paper's own test model.
+
+Used by the paper-faithful reproduction benchmarks (Fig. 1-3) on synthetic
+CIFAR-shaped data.  BatchNorm is replaced by GroupNorm(8): running statistics
+are cross-step state that would entangle the optimizer comparison (and BN's
+per-worker batch statistics differ between the decentralized and centralized
+settings anyway); GroupNorm keeps the comparison purely about the optimizer.
+Noted as a deviation in DESIGN.md/EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["resnet20_init", "resnet20_apply", "resnet20_loss"]
+
+
+def _conv_init(key, k, cin, cout, dtype=jnp.float32):
+    fan_in = k * k * cin
+    w = jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+    return (w * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c, groups=8):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _gn(p, x, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xg - mean) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(n, h, w, c) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def _block_init(key, cin, cout, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(k1, 3, cin, cout, dtype),
+        "gn1": _gn_init(cout),
+        "conv2": _conv_init(k2, 3, cout, cout, dtype),
+        "gn2": _gn_init(cout),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(k3, 1, cin, cout, dtype)
+    return p
+
+
+def _block(p, x, stride):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(x, p["conv1"], stride)))
+    h = _gn(p["gn2"], _conv(h, p["conv2"]))
+    sc = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def resnet20_init(key, num_classes=10, width=16, dtype=jnp.float32):
+    ks = jax.random.split(key, 11)
+    p = {"stem": _conv_init(ks[0], 3, 3, width, dtype),
+         "gn0": _gn_init(width)}
+    widths = [width, 2 * width, 4 * width]
+    i = 1
+    for si, wo in enumerate(widths):
+        cin = width if si == 0 else widths[si - 1]
+        for bi in range(3):
+            p[f"s{si}b{bi}"] = _block_init(
+                ks[i], cin if bi == 0 else wo, wo, dtype)
+            i += 1
+    p["head"] = {
+        "w": (jax.random.normal(ks[10], (4 * width, num_classes))
+              * (4 * width) ** -0.5).astype(dtype),
+        "b": jnp.zeros((num_classes,), dtype),
+    }
+    return p
+
+
+def resnet20_apply(p, x):
+    """x: (n, 32, 32, 3) -> logits (n, classes)."""
+    h = jax.nn.relu(_gn(p["gn0"], _conv(x, p["stem"])))
+    for si in range(3):
+        for bi in range(3):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _block(p[f"s{si}b{bi}"], h, stride)
+    h = h.mean(axis=(1, 2))
+    return h.astype(jnp.float32) @ p["head"]["w"].astype(jnp.float32) \
+        + p["head"]["b"].astype(jnp.float32)
+
+
+def resnet20_loss(p, batch):
+    logits = resnet20_apply(p, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = (logits.argmax(-1) == labels).astype(jnp.float32).mean()
+    return nll.mean(), {"acc": acc}

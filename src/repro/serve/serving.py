@@ -1,0 +1,44 @@
+"""Batched serving loop: prefill + greedy/temperature decode."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["generate"]
+
+
+def generate(model, params, prompt_tokens, max_new: int,
+             temperature: float = 0.0, key=None,
+             max_len: Optional[int] = None):
+    """prompt_tokens: (b, s) int32 -> (b, s + max_new) int32.
+
+    Prefill runs once over the prompt; decode is one jitted step per token.
+    """
+    b, s = prompt_tokens.shape
+    total = max_len or (s + max_new)
+    logits, cache = jax.jit(
+        functools.partial(model.prefill_fast, max_len=total)
+    )(params, {"tokens": prompt_tokens})
+
+    dstep = jax.jit(functools.partial(model.decode_step, max_positions=total))
+    toks = prompt_tokens
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return lg.argmax(-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    nxt = sample(logits, key)
+    for i in range(max_new):
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+        if i == max_new - 1:
+            break
+        key, sub = jax.random.split(key)
+        logits, cache = dstep(params, cache, nxt, jnp.int32(s + i))
+        nxt = sample(logits, sub)
+    return toks

@@ -1,0 +1,103 @@
+"""δ-contraction property tests (paper Definition 1) — hypothesis-driven."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compression import (IdentityCompressor, QSGDCompressor,
+                                    RandKCompressor, SignCompressor,
+                                    TopKCompressor, contraction_ratio,
+                                    make_compressor, sign_pack, sign_unpack)
+
+COMPRESSORS = [
+    IdentityCompressor(),
+    SignCompressor(block=64),
+    SignCompressor(block=1024),
+    TopKCompressor(fraction=0.1),
+    TopKCompressor(fraction=0.01),
+    QSGDCompressor(levels=16),
+]
+
+
+@st.composite
+def vectors(draw):
+    n = draw(st.integers(min_value=1, max_value=3000))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    scale = draw(st.floats(min_value=1e-3, max_value=1e3))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS, ids=lambda c: f"{c.name}")
+@given(x=vectors())
+@settings(max_examples=25, deadline=None)
+def test_delta_contraction(comp, x):
+    """‖x − Q(x)‖² ≤ (1 − δ)‖x‖² with δ = delta_lower_bound(d)."""
+    xj = jnp.asarray(x)
+    q = comp.apply(xj, jax.random.PRNGKey(0))
+    ratio = float(contraction_ratio(xj, q))
+    delta = comp.delta_lower_bound(x.size)
+    assert ratio <= (1.0 - delta) + 1e-4, (comp.name, ratio, delta)
+
+
+@given(x=vectors())
+@settings(max_examples=25, deadline=None)
+def test_randk_contraction_in_expectation(x):
+    comp = RandKCompressor(fraction=0.25)
+    xj = jnp.asarray(x)
+    ratios = []
+    for i in range(8):
+        q = comp.apply(xj, jax.random.PRNGKey(i))
+        ratios.append(float(contraction_ratio(xj, q)))
+        assert ratios[-1] <= 1.0 + 1e-5   # never expands
+    # E[ratio] = 1 - k/d; allow generous sampling slack
+    assert np.mean(ratios) <= 1.0 - 0.25 * 0.4
+
+
+def test_sign_pack_roundtrip_exact():
+    """unpack(pack(x)) must equal blockwise scale · sign exactly."""
+    key = jax.random.PRNGKey(3)
+    for n in [1, 5, 63, 64, 100, 1024, 5000]:
+        x = jax.random.normal(key, (n,))
+        packed, scales = sign_pack(x, block=64)
+        q = sign_unpack(packed, scales, n, (n,), jnp.float32, block=64)
+        # manual oracle
+        xf = np.asarray(x)
+        nb = -(-n // 64)
+        pad = np.zeros(nb * 64, np.float32)
+        pad[:n] = xf
+        blocks = pad.reshape(nb, 64)
+        valid = (np.arange(nb * 64).reshape(nb, 64) < n)
+        sc = (np.abs(blocks) * valid).sum(1) / np.maximum(valid.sum(1), 1)
+        want = (np.where(blocks >= 0, 1.0, -1.0)
+                * sc[:, None]).reshape(-1)[:n]
+        np.testing.assert_allclose(np.asarray(q), want, rtol=1e-6)
+
+
+def test_sign_wire_bytes_16x_smaller():
+    comp = SignCompressor()
+    x = jnp.zeros((1 << 20,), jnp.float32)
+    full = x.size * 4
+    assert comp.wire_bytes(x) < full / 15.0
+
+
+def test_topk_keeps_largest():
+    comp = TopKCompressor(fraction=0.5)
+    x = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    q = np.asarray(comp.apply(x))
+    np.testing.assert_allclose(q, [0.0, -5.0, 0.0, 3.0])
+
+
+def test_make_compressor():
+    assert make_compressor("sign").name == "sign"
+    assert make_compressor("identity").name == "identity"
+    with pytest.raises(ValueError):
+        make_compressor("zstd")
+
+
+def test_zero_vector_safe():
+    for comp in COMPRESSORS:
+        q = comp.apply(jnp.zeros((128,)), jax.random.PRNGKey(0))
+        assert bool(jnp.isfinite(q).all())

@@ -1,0 +1,97 @@
+"""CPD-SGDM (Algorithm 2): compressed consensus with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor, PDSGDM,
+                        PDSGDMConfig, SignCompressor, TopKCompressor)
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+
+
+def quad_grad(params):
+    return jax.tree_util.tree_map(lambda x: 2.0 * x, params)
+
+
+def run(opt, params, steps, gradf=quad_grad):
+    state = opt.init(params)
+    step = jax.jit(lambda s, p: opt.step(s, p, gradf(p)))
+    for _ in range(steps):
+        params, state = step(state, params)
+    return params, state
+
+
+@pytest.mark.parametrize("comp,gamma", [
+    (SignCompressor(block=64), 0.4),
+    # aggressive compression needs a smaller consensus step (paper §7.2:
+    # γ scales with ρ²δ — a large γ with small δ oscillates)
+    (TopKCompressor(fraction=0.25), 0.1),
+    (IdentityCompressor(), 0.4),
+], ids=lambda c: getattr(c, "name", str(c)))
+def test_converges_with_any_contraction(comp, gamma):
+    K = 8
+    opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=4, gamma=gamma),
+                  DenseComm(ring(K)), comp)
+    params = {"w": jnp.arange(K * 4, dtype=jnp.float32).reshape(K, 4)}
+    params, _ = run(opt, params, 300)
+    assert float(jnp.abs(params["w"]).max()) < 5e-3, comp.name
+
+
+def test_consensus_without_gradients():
+    """Pure gossip (zero gradients): workers contract toward the initial
+    average despite sign-compressed communication (the CHOCO property)."""
+    K = 8
+    opt = CPDSGDM(CPDSGDMConfig(eta=0.0, mu=0.0, p=1, gamma=0.4),
+                  DenseComm(ring(K)), SignCompressor(block=64))
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (K, 16))
+    mean0 = w0.mean(0)
+    params = {"w": w0}
+    state = opt.init(params)
+    zero = {"w": jnp.zeros_like(w0)}
+    step = jax.jit(lambda s, p: opt.step(s, p, zero))
+    d0 = float(jnp.abs(w0 - mean0[None]).max())
+    for _ in range(200):
+        params, state = step(state, params)
+    d1 = float(jnp.abs(params["w"] - mean0[None]).max())
+    # average is preserved and disagreement shrinks substantially
+    np.testing.assert_allclose(np.asarray(params["w"].mean(0)),
+                               np.asarray(mean0), atol=1e-4)
+    assert d1 < 0.05 * d0, (d0, d1)
+
+
+def test_average_preserved_by_comm_round():
+    """Eq. 44: the consensus+compress round never moves the worker mean."""
+    K = 8
+    opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=2, gamma=0.4),
+                  DenseComm(ring(K)), SignCompressor(block=64))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1), (K, 32))}
+    state = opt.init(params)
+    before = np.asarray(params["w"].mean(0))
+    new_params, _ = opt.comm_round(state, params)
+    after = np.asarray(new_params["w"].mean(0))
+    np.testing.assert_allclose(after, before, atol=1e-5)
+
+
+def test_xhat_tracks_params():
+    """Error feedback: x̂ converges toward x as rounds accumulate."""
+    K = 4
+    opt = CPDSGDM(CPDSGDMConfig(eta=0.01, mu=0.9, p=2, gamma=0.4),
+                  DenseComm(ring(K)), SignCompressor(block=64))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(2), (K, 64))}
+    state = opt.init(params)
+    step = jax.jit(lambda s, p: opt.step(s, p, quad_grad(p)))
+    for _ in range(100):
+        params, state = step(state, params)
+    err = float(jnp.abs(state["xhat"]["w"] - params["w"]).mean())
+    scale = float(jnp.abs(params["w"]).mean()) + 1e-6
+    assert err < 5 * scale  # bounded compression error, not divergence
+
+
+def test_sharded_needs_shift_topology():
+    from repro.core.gossip import ShardedComm
+    from repro.core.topology import complete
+    with pytest.raises(ValueError):
+        CPDSGDM(CPDSGDMConfig(), ShardedComm(complete(4), ("data",)),
+                SignCompressor())

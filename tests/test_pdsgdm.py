@@ -1,0 +1,111 @@
+"""PD-SGDM (Algorithm 1) semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPDSGDM, CPDSGDMConfig, PDSGDM, PDSGDMConfig,
+                        SignCompressor, make_optimizer)
+from repro.core.gossip import DenseComm
+from repro.core.topology import complete, disconnected, ring
+
+
+def quad_grad(params):
+    return jax.tree_util.tree_map(lambda x: 2.0 * x, params)
+
+
+def run_opt(opt, params, steps, gradf=quad_grad):
+    state = opt.init(params)
+    step = jax.jit(lambda s, p: opt.step(s, p, gradf(p)))
+    for _ in range(steps):
+        params, state = step(state, params)
+    return params, state
+
+
+def test_p1_complete_equals_centralized():
+    """With p=1 and the complete graph, PD-SGDM's trajectory of the worker
+    average equals single-worker momentum SGD (identical data)."""
+    K = 4
+    x0 = jnp.ones((K, 8)) * 3.0            # identical init
+    opt = PDSGDM(PDSGDMConfig(eta=0.03, mu=0.9, p=1),
+                 DenseComm(complete(K)))
+    pk, _ = run_opt(opt, {"w": x0}, 30)
+
+    ref = PDSGDM(PDSGDMConfig(eta=0.03, mu=0.9, p=1),
+                 DenseComm(disconnected(1)))
+    pr, _ = run_opt(ref, {"w": jnp.ones((1, 8)) * 3.0}, 30)
+    np.testing.assert_allclose(np.asarray(pk["w"][0]),
+                               np.asarray(pr["w"][0]), rtol=1e-5)
+
+
+def test_momentum_matches_pytorch_semantics():
+    """m ← μm + (g + λx); x ← x − ηm (paper Eq. 8 + PyTorch wd folding)."""
+    opt = PDSGDM(PDSGDMConfig(eta=0.1, mu=0.9, p=10, weight_decay=0.01),
+                 DenseComm(disconnected(1)))
+    x = jnp.asarray([[2.0]])
+    g = jnp.asarray([[0.5]])
+    state = opt.init({"w": x})
+    p1, s1 = opt.local_step(state, {"w": x}, {"w": g})
+    m1 = 0.9 * 0.0 + (0.5 + 0.01 * 2.0)
+    assert float(p1["w"][0, 0]) == pytest.approx(2.0 - 0.1 * m1)
+    p2, s2 = opt.local_step(s1, p1, {"w": g})
+    m2 = 0.9 * m1 + (0.5 + 0.01 * float(p1["w"][0, 0]))
+    assert float(p2["w"][0, 0]) == pytest.approx(
+        float(p1["w"][0, 0]) - 0.1 * m2, rel=1e-6)
+
+
+def test_communication_happens_exactly_every_p():
+    """Workers' params coincide right after a gossip round with the complete
+    graph, and drift in between (mod(t+1, p) == 0 schedule)."""
+    K, p = 4, 3
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=p), DenseComm(complete(K)))
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (K, 6))}
+
+    def gradf(params):  # heterogeneous gradients -> drift between rounds
+        return {"w": 2 * params["w"]
+                + jnp.arange(K, dtype=jnp.float32)[:, None]}
+
+    state = opt.init(params)
+    step = jax.jit(lambda s, pp: opt.step(s, pp, gradf(pp)))
+    for t in range(12):
+        params, state = step(state, params)
+        spread = float(jnp.abs(params["w"] - params["w"].mean(0)).max())
+        if (t + 1) % p == 0:
+            assert spread < 1e-6, (t, spread)
+        else:
+            assert spread > 1e-4, (t, spread)
+
+
+def test_convergence_and_consensus_on_ring():
+    K = 8
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=4), DenseComm(ring(K)))
+    params = {"w": jnp.arange(K * 4, dtype=jnp.float32).reshape(K, 4)}
+    params, _ = run_opt(opt, params, 200)
+    assert float(jnp.abs(params["w"]).max()) < 1e-3
+
+
+def test_schedule_decay():
+    from repro.core.schedules import step_decay
+    opt = PDSGDM(PDSGDMConfig(eta=1.0, mu=0.0, p=10,
+                              lr_schedule=step_decay([5], 0.1)),
+                 DenseComm(disconnected(1)))
+    assert float(opt.config.lr(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(opt.config.lr(jnp.int32(5))) == pytest.approx(0.1)
+
+
+def test_factory_names():
+    comm = DenseComm(ring(4))
+    for name in ["pd_sgdm", "cpd_sgdm", "c_sgdm", "d_sgd", "pd_sgd",
+                 "choco_sgd"]:
+        opt = make_optimizer(name, comm, eta=0.1)
+        assert opt is not None
+    with pytest.raises(ValueError):
+        make_optimizer("adam", comm)
+
+
+def test_invalid_config():
+    with pytest.raises(ValueError):
+        PDSGDM(PDSGDMConfig(mu=1.5), DenseComm(ring(2)))
+    with pytest.raises(ValueError):
+        PDSGDM(PDSGDMConfig(p=0), DenseComm(ring(2)))

@@ -1,0 +1,93 @@
+"""End-to-end behaviour: the paper's claims at test scale (Fig. 1-3 logic)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPDSGDMConfig, CPDSGDM, PDSGDM, PDSGDMConfig,
+                        SignCompressor, make_optimizer)
+from repro.core.gossip import DenseComm
+from repro.core.topology import complete, ring
+from repro.data.synthetic import ClassStreamCfg, LMStreamCfg, class_batch, lm_batch
+from repro.models.resnet import resnet20_init, resnet20_loss
+from repro.train.trainer import SimTrainer
+
+K = 8
+
+
+def _resnet_params(K):
+    p = resnet20_init(jax.random.PRNGKey(0), width=4)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), p)
+
+
+def _train(opt, steps=40, seed=0):
+    # per-worker batch 16 + eta 0.1 = the paper-matching regime (see
+    # benchmarks/common.py); smaller settings leave PD-SGDM mid-transient.
+    cfg = ClassStreamCfg(batch=16, n_workers=K, seed=seed)
+    trainer = SimTrainer(resnet20_loss, opt)
+    params = _resnet_params(K)
+    params, state, hist = trainer.train(
+        params, lambda t: class_batch(cfg, t), steps, log_every=5)
+    return hist
+
+
+@pytest.mark.slow
+def test_pdsgdm_matches_csgdm_loss():
+    """Fig. 1: PD-SGDM(p∈{4,8}) reaches ≈ the same loss as C-SGDM."""
+    res = {}
+    for name, p in [("c_sgdm", 1), ("pd_sgdm", 4), ("pd_sgdm", 8)]:
+        comm = DenseComm(complete(K) if name == "c_sgdm" else ring(K))
+        opt = make_optimizer(name, comm, eta=0.1, mu=0.9, p=p,
+                             weight_decay=1e-4)
+        res[(name, p)] = _train(opt, steps=90)
+    base = res[("c_sgdm", 1)].loss[-1]
+    for key, hist in res.items():
+        assert hist.loss[-1] < hist.loss[0] - 1.0, key  # learning happened
+        assert hist.loss[-1] < base + 0.5, (key, hist.loss[-1], base)
+
+
+@pytest.mark.slow
+def test_cpdsgdm_matches_pdsgdm_with_less_comm():
+    """Fig. 2-3: sign-compressed CPD-SGDM ≈ PD-SGDM loss, ≪ bytes."""
+    ring8 = DenseComm(ring(K))
+    pd = make_optimizer("pd_sgdm", ring8, eta=0.1, mu=0.9, p=4)
+    cpd = make_optimizer("cpd_sgdm", ring8, eta=0.1, mu=0.9, p=4,
+                         gamma=0.4, compressor=SignCompressor(block=64))
+    # CPD's compressed consensus has a longer transient than PD (the x̂
+    # error-feedback needs rounds to lock on) — give it 150 steps, and
+    # compare tail minima (single-batch losses bounce by ~0.4 late in
+    # training at this scale).
+    h_pd = _train(pd, steps=90)
+    h_cpd = _train(cpd, steps=150)
+    assert min(h_cpd.loss[-6:]) < h_cpd.loss[0] - 1.5
+    assert min(h_cpd.loss[-6:]) < min(h_pd.loss[-6:]) + 0.75
+    # ~16-32× fewer bytes per round
+    assert h_cpd.comm_mb[-1] < h_pd.comm_mb[-1] / 10.0
+
+
+def test_lm_training_decreases_loss():
+    from repro.configs.base import ModelCfg
+    from repro.models import make_model
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+    model = make_model(mcfg)
+    Kw = 4
+    params = jax.vmap(lambda k: model.init(jax.random.PRNGKey(0)))(
+        jax.random.split(jax.random.PRNGKey(0), Kw))
+    opt = make_optimizer("pd_sgdm", DenseComm(ring(Kw)), eta=0.3, mu=0.9,
+                         p=4)
+    trainer = SimTrainer(lambda p, b: model.loss(p, b), opt)
+    cfg = LMStreamCfg(vocab=256, seq_len=32, batch=4, n_workers=Kw)
+    _, _, hist = trainer.train(params, lambda t: lm_batch(cfg, t), 40)
+    assert hist.loss[-1] < hist.loss[0] - 0.5, hist.loss
+
+
+def test_comm_accounting_scales_with_p():
+    """Doubling p halves communicated bytes (same steps)."""
+    ring8 = DenseComm(ring(K))
+    h4 = _train(make_optimizer("pd_sgd", ring8, eta=0.05, p=4), steps=32)
+    h8 = _train(make_optimizer("pd_sgd", ring8, eta=0.05, p=8), steps=32)
+    assert h4.comm_mb[-1] == pytest.approx(2 * h8.comm_mb[-1], rel=0.15)

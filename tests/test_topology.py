@@ -1,0 +1,82 @@
+"""Topology invariants (paper Assumption 1 / Lemma 1)."""
+import numpy as np
+import pytest
+
+from repro.core.topology import (complete, disconnected, exponential,
+                                 is_doubly_stochastic, make_topology, ring,
+                                 spectral_gap, torus)
+
+TOPOLOGIES = [
+    ring(2), ring(3), ring(8), ring(16),
+    torus((2, 8)), torus((2, 16)), torus((4, 4)),
+    complete(8), complete(5), exponential(16), exponential(8),
+    disconnected(4),
+]
+
+
+@pytest.mark.parametrize("top", TOPOLOGIES, ids=lambda t: f"{t.name}{t.n_workers}")
+def test_doubly_stochastic(top):
+    top.validate()
+    assert is_doubly_stochastic(top.W)
+
+
+@pytest.mark.parametrize("top", TOPOLOGIES, ids=lambda t: f"{t.name}{t.n_workers}")
+def test_spectral_gap_range(top):
+    rho = top.rho
+    if top.name == "disconnected":
+        assert rho == pytest.approx(0.0, abs=1e-12)
+    else:
+        assert 0.0 < rho <= 1.0 + 1e-12
+
+
+@pytest.mark.parametrize("top", [ring(8), torus((2, 8)), complete(8),
+                                 exponential(16)],
+                         ids=lambda t: f"{t.name}{t.n_workers}")
+def test_lemma1_operator_norm(top):
+    """‖W − 11ᵀ/K‖₂ = 1 − ρ  (Lemma 1)."""
+    K = top.n_workers
+    M = top.W - np.ones((K, K)) / K
+    opnorm = np.linalg.norm(M, 2)
+    assert opnorm == pytest.approx(1.0 - top.rho, abs=1e-8)
+
+
+def test_shifts_reconstruct_w():
+    """The shift decomposition must reproduce the dense circulant W."""
+    for top in [ring(8), torus((2, 8)), exponential(8)]:
+        K = top.n_workers
+        grid = top.axis_sizes
+        W = np.zeros((K, K))
+        import itertools
+        for idx in itertools.product(*[range(s) for s in grid]):
+            k = np.ravel_multi_index(idx, grid)
+            acc = {k: 1.0}
+            for ax in range(len(grid)):
+                new = {}
+                for j, wj in acc.items():
+                    jidx = list(np.unravel_index(j, grid))
+                    for (a, sh, w) in top.shifts:
+                        if a != ax:
+                            continue
+                        t = jidx.copy()
+                        t[ax] = (t[ax] + sh) % grid[ax]
+                        jj = np.ravel_multi_index(t, grid)
+                        new[jj] = new.get(jj, 0.0) + wj * w
+                if any(a == ax for (a, _s, _w) in top.shifts):
+                    acc = new
+            for j, w in acc.items():
+                W[k, j] += w
+        assert np.allclose(W, top.W, atol=1e-9), top.name
+
+
+def test_make_topology():
+    assert make_topology("ring", (8,)).n_workers == 8
+    assert make_topology("torus", (2, 16)).n_workers == 32
+    assert make_topology("complete", (4,)).rho == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        make_topology("nope", (4,))
+
+
+def test_torus_beats_long_ring():
+    """Hierarchical pod×ring mixing has a larger spectral gap than one ring
+    of the same size — the reason the multi-pod layout uses it."""
+    assert torus((2, 16)).rho > ring(32).rho
