@@ -30,13 +30,16 @@ def make_opt(name, k=K, p=4, eta=0.1, gamma=0.4, compressor=None):
                           weight_decay=1e-4, compressor=compressor)
 
 
-def train_resnet(opt, k=K, steps=STEPS, seed=0, batch=16):
+def train_resnet(opt, k=K, steps=STEPS, seed=0, batch=16, log_every=5,
+                 rounds_per_log=None):
+    """Train through the fused round engine; one host sync per log block
+    (``rounds_per_log`` rounds, default ⌈log_every / p⌉)."""
     cfg = ClassStreamCfg(batch=batch, n_workers=k, seed=seed)
-    trainer = SimTrainer(resnet20_loss, opt)
+    trainer = SimTrainer(resnet20_loss, opt, rounds_per_log=rounds_per_log)
     params = stacked_resnet(k)
     t0 = time.time()
     params, state, hist = trainer.train(
-        params, lambda t: class_batch(cfg, t), steps, log_every=5)
+        params, lambda t: class_batch(cfg, t), steps, log_every=log_every)
     return hist, (time.time() - t0) / steps
 
 

@@ -28,7 +28,9 @@ def main():
         ("cpd_sgdm_p16_sign", make_opt("cpd_sgdm", p=16,
                                        compressor=SignCompressor(block=64))),
     ]:
-        hist, s_per_step = train_resnet(opt, steps=60)
+        # round engine: per-step losses still land in the history (one
+        # device sync per log block), so mb-to-target stays step-accurate
+        hist, s_per_step = train_resnet(opt, steps=60, log_every=5)
         mb = _mb_to_target(hist)
         rows[label] = (hist.comm_mb[-1], hist.loss[-1])
         csv_row(f"fig2/{label}", s_per_step * 1e6,

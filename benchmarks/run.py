@@ -8,7 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 import sys
 import time
 
-SECTIONS = ["fig1", "fig2", "fig3", "speedup", "kernels", "roofline"]
+SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "kernels",
+            "roofline"]
 
 
 def main() -> None:
@@ -27,6 +28,9 @@ def main() -> None:
     if "speedup" in want:
         from benchmarks import speedup
         speedup.main()
+    if "round" in want:
+        from benchmarks import round_engine
+        round_engine.main()
     if "kernels" in want:
         from benchmarks import kernels_micro
         kernels_micro.main()

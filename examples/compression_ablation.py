@@ -35,6 +35,7 @@ for comp, gamma in [(IdentityCompressor(), 0.4),
     for topo in [ring(K), exponential(K)]:
         opt = CPDSGDM(CPDSGDMConfig(eta=0.3, mu=0.9, p=4, gamma=gamma),
                       DenseComm(topo), comp)
+        # fused rounds: each jitted call scans p local steps + one gossip
         trainer = SimTrainer(lambda p, b: model.loss(p, b), opt)
         _, _, h = trainer.train(params0, lambda t: lm_batch(data, t),
                                 STEPS, log_every=STEPS - 1)

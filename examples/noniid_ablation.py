@@ -34,6 +34,8 @@ for alpha in [None, 1.0, 0.1]:
         cfg = ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=alpha)
         opt = make_optimizer("pd_sgdm", DenseComm(ring(K)), eta=0.1,
                              mu=0.9, p=p, weight_decay=1e-4)
+        # one fused log block for the whole sweep point: the round engine
+        # syncs the host once at the end instead of every step
         trainer = SimTrainer(resnet20_loss, opt)
         _, _, h = trainer.train(stacked(), lambda t: class_batch(cfg, t),
                                 STEPS, log_every=STEPS - 1)

@@ -49,7 +49,12 @@ class PDSGDMConfig:
 
 
 class PDSGDM:
-    """Algorithm 1.  ``step = local_step ∘ maybe_communicate``."""
+    """Algorithm 1.
+
+    ``step = local_step ∘ maybe_communicate`` is the per-iteration form;
+    ``round`` is the fused form (p local steps + one unconditional gossip in
+    a single ``lax.scan``) that the trainers execute.
+    """
 
     def __init__(self, config: PDSGDMConfig, comm: CommBackend):
         if not (0.0 <= config.mu < 1.0):
@@ -86,10 +91,12 @@ class PDSGDM:
                 x_new = x.astype(jnp.float32) - lr * d
                 return x_new.astype(x.dtype), m_new
 
-            new_params = _tree_map(lambda x, m, g: upd(x, m, g)[0],
-                                   params, state["m"], grads)
-            new_m = _tree_map(lambda x, m, g: upd(x, m, g)[1],
-                              params, state["m"], grads)
+            xs, treedef = jax.tree_util.tree_flatten(params)
+            ms = treedef.flatten_up_to(state["m"])
+            gs = treedef.flatten_up_to(grads)
+            pairs = [upd(x, m, g) for x, m, g in zip(xs, ms, gs)]
+            new_params = treedef.unflatten([x for x, _ in pairs])
+            new_m = treedef.unflatten([m for _, m in pairs])
 
         new_state = dict(state)   # preserve subclass state (e.g. CPD's x̂)
         new_state["m"] = new_m
@@ -119,6 +126,37 @@ class PDSGDM:
         params, state = self.local_step(state, params, grads)
         params, state = self.maybe_communicate(state, params)
         return params, state
+
+    # -- fused round (the canonical hot path) -----------------------------------
+    def round(self, state, params, grads_fn, batches, *,
+              local_step=None, comm_round=None):
+        """One whole round, fused: ``lax.scan`` of p local steps then exactly
+        one unconditional gossip round — no per-step ``lax.cond``, no per-step
+        Python dispatch.
+
+        ``grads_fn(params, batch) -> (loss, grads)``; ``batches`` carries a
+        leading scan dim of length p.  ``local_step``/``comm_round`` default
+        to the optimizer's own methods (DenseComm simulation); the sharded
+        runtime passes ``shard_map``-wrapped versions so the identical scan
+        structure drives both backends.
+
+        Returns ``(params, state, losses)`` with ``losses`` stacked over the
+        p local steps.
+        """
+        if local_step is None:
+            local_step = self.local_step
+        if comm_round is None:
+            comm_round = self.comm_round
+
+        def body(carry, batch):
+            params, state = carry
+            loss, grads = grads_fn(params, batch)
+            params, state = local_step(state, params, grads)
+            return (params, state), loss
+
+        (params, state), losses = jax.lax.scan(body, (params, state), batches)
+        params, state = comm_round(state, params)
+        return params, state, losses
 
     # -- comm-cost model ----------------------------------------------------------
     def bytes_per_comm_round(self, params) -> int:

@@ -20,9 +20,11 @@ class HW:
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.5 explicit-axes API
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -9,14 +9,19 @@ Structure of one training iteration (see DESIGN.md):
      gossip round lowers to explicit ``ppermute`` (collective-permute) over
      the worker axes, with the compressed payload bit-packed on the wire.
 
-``build_train`` also exposes ``train_round`` (= scan of p local steps + one
-communication round) — the honest unit for the dry-run roofline: compute of
-p steps, communication of exactly one gossip round.
+``TrainPack.train_round`` is the **canonical hot path**: one jitted call =
+``lax.scan`` of p local steps + exactly one gossip round (``opt.round``
+with the optimizer calls shard_mapped), buffers donated.  It is what
+``repro.train.trainer.ShardedTrainer`` executes, and the honest unit for
+the dry-run roofline: compute of p steps, communication of exactly one
+gossip round.  ``train_step`` remains for per-step debugging and for runs
+whose tail is shorter than a round.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import math
 from typing import Callable, Dict, Optional
 
@@ -36,6 +41,21 @@ from repro.models import make_model
 
 __all__ = ["build_comm", "build_train", "build_serve", "TrainPack",
            "ServePack", "make_shd"]
+
+if hasattr(jax, "shard_map"):           # stable top-level API
+    _shard_map_compat = jax.shard_map
+else:                                   # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_compat
+
+# the replication-check kwarg was renamed check_rep -> check_vma; key on the
+# signature, not the jax version, so the mid-range releases work too
+_CHECK_KW = ("check_vma" if "check_vma" in inspect.signature(
+    _shard_map_compat).parameters else "check_rep")
+
+
+def _smap(mesh):
+    return functools.partial(_shard_map_compat, mesh=mesh,
+                             **{_CHECK_KW: False})
 
 
 def make_shd(layout: Layout, parallel):
@@ -178,7 +198,7 @@ def build_train(run: RunCfg, mesh, shape: InputShape,
     def opt_comm(p, s):
         return opt.comm_round(s, p)
 
-    smap = functools.partial(jax.shard_map, mesh=mesh, check_vma=False)
+    smap = _smap(mesh)
     opt_full_sh = smap(opt_full, in_specs=(pspec, sspec, pspec),
                        out_specs=(pspec, sspec))
     opt_local_sh = smap(opt_local, in_specs=(pspec, sspec, pspec),
@@ -192,16 +212,20 @@ def build_train(run: RunCfg, mesh, shape: InputShape,
         return params, state, losses.mean()
 
     def train_round(params, state, batches):
-        """p local momentum steps then exactly one gossip round."""
-        def body(carry, batch):
-            params, state = carry
-            (losses, _), grads = grad_fn(params, batch)
-            params, state = opt_local_sh(params, state, grads)
-            return (params, state), losses.mean()
+        """p local momentum steps then exactly one gossip round.
 
-        (params, state), losses = jax.lax.scan(body, (params, state), batches)
-        params, state = opt_comm_sh(params, state)
-        return params, state, losses
+        The scan structure lives in ``opt.round``; only the optimizer calls
+        are shard_mapped into the manual domain (the forward/backward stays
+        in the GSPMD domain).
+        """
+        def gfn(p_, b):
+            (losses, _mets), grads = grad_fn(p_, b)
+            return losses.mean(), grads
+
+        return opt.round(
+            state, params, gfn, batches,
+            local_step=lambda s, p_, g: opt_local_sh(p_, s, g),
+            comm_round=lambda s, p_: opt_comm_sh(p_, s))
 
     round_batch_struct = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct((p_round,) + s.shape, s.dtype),

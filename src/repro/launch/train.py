@@ -29,6 +29,8 @@ def main():
     ap.add_argument("--model-axis", type=int, default=2)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in --ckpt-dir")
     args = ap.parse_args()
 
     if args.devices:
@@ -77,10 +79,15 @@ def main():
                              ckpt_every=args.ckpt_every)
     with mesh:
         out = trainer.train(jax.random.PRNGKey(0), batch_fn, args.steps,
-                            log_every=max(args.steps // 10, 1))
+                            log_every=max(args.steps // 10, 1),
+                            resume=args.resume)
     h = out["history"]
+    if not h.loss:      # e.g. --resume with a checkpoint at/past --steps
+        print("no steps run")
+        return
     print(f"final loss {h.loss[-1]:.4f} (start {h.loss[0]:.4f})")
-    if h.loss[-1] >= h.loss[0]:
+    if out["steps_run"] == args.steps and h.loss[-1] >= h.loss[0]:
+        # a short resumed tail is too noisy to judge — only warn on full runs
         print("WARNING: loss did not decrease", file=sys.stderr)
 
 

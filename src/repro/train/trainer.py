@@ -1,13 +1,27 @@
-"""Training loops.
+"""Round-based training loops — the canonical execution model.
+
+Both trainers execute whole *rounds* (p local momentum steps + exactly one
+gossip round) as a single jitted unit, matching the paper's communication
+structure: the periodicity that buys the algorithm its communication savings
+also buys us dispatch/fusion savings, because XLA sees the full round (and
+``rounds_per_log`` of them at once in the simulator) instead of one step at
+a time with a host sync on every loss read.
 
 ``SimTrainer`` — single-process decentralized simulation (DenseComm, worker
-dim stacked).  This is the paper-faithful experimental harness used by the
-Fig. 1-3 benchmarks: any loss function (ResNet20 or an LM), any optimizer
-from ``repro.core``, with per-round communication-cost accounting (MB on the
-wire, honouring periodicity p, topology degree, and compression ratio).
+dim stacked).  The hot path is a jitted ``lax.scan`` over whole rounds
+(scan body = ``opt.round``: p local steps + one unconditional
+``opt.comm_round``); per-step losses accumulate on device and are fetched
+with one host sync per log block.  A run whose length is not a multiple of
+p ends with a fused tail of local steps (no gossip), reproducing the
+per-step schedule ``mod(t+1, p) == 0`` exactly.
 
 ``ShardedTrainer`` — drives the production ``TrainPack`` built by
-``repro.launch.runtime`` (mesh-sharded, ppermute gossip), with checkpointing.
+``repro.launch.runtime`` through ``TrainPack.train_round`` (mesh-sharded,
+ppermute gossip, donated buffers).  Losses stay on device between log
+points (``jax.block_until_ready`` only when flushing), communication MB are
+accounted per round from the optimizer's cost model, and checkpoints carry
+the *full* optimizer state (including CPD-SGDM's ``xhat``/``xhat_nbrs``
+error-compensation trees) so a restore resumes bit-identically.
 """
 from __future__ import annotations
 
@@ -17,11 +31,15 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.cpdsgdm import CPDSGDM
 from repro.core.pdsgdm import PDSGDM
 
 __all__ = ["SimTrainer", "History", "ShardedTrainer"]
+
+# cap on the *derived* SimTrainer block size (rounds per jitted call):
+# batches for a whole block are staged on device before the scan runs
+_MAX_BLOCK_ROUNDS = 16
 
 
 @dataclasses.dataclass
@@ -38,21 +56,76 @@ class History:
                    "eval": self.eval_metric[i] if self.eval_metric else None}
 
 
-class SimTrainer:
-    """Decentralized training simulation over K stacked workers."""
+def _stack_batches(batches, extra_dims=()):
+    """Stack a list of batch pytrees into one with a leading scan dim."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs).reshape(extra_dims + xs[0].shape)
+        if extra_dims else jnp.stack(xs), *batches)
 
-    def __init__(self, loss_fn: Callable, opt: PDSGDM):
+
+def _should_log(t, steps, log_every):
+    return t % log_every == 0 or t == steps - 1
+
+
+def _log_chunk(hist, losses, t0, *, steps, log_every, p, per_round_bytes,
+               on_log=None):
+    """Append History entries for the log points inside one executed chunk.
+
+    ``losses`` holds the per-step losses starting at global step ``t0``.
+    Comm accounting: ``(t+1) // p`` gossip rounds completed through step t
+    (the schedule is mod(t+1, p) == 0) × ``per_round_bytes``.
+    """
+    for i, lv in enumerate(np.asarray(losses).reshape(-1)):
+        t = t0 + i
+        if not _should_log(t, steps, log_every):
+            continue
+        hist.steps.append(t)
+        hist.loss.append(float(lv))
+        hist.comm_mb.append(((t + 1) // p) * per_round_bytes / 2 ** 20)
+        if on_log is not None:
+            on_log(t, float(lv), hist.comm_mb[-1])
+
+
+class SimTrainer:
+    """Decentralized training simulation over K stacked workers.
+
+    Executes ``rounds_per_log`` whole rounds per jitted call; the device is
+    only synced when a log block is flushed.
+    """
+
+    def __init__(self, loss_fn: Callable, opt: PDSGDM,
+                 rounds_per_log: Optional[int] = None):
         self.loss_fn = loss_fn
         self.opt = opt
+        self.rounds_per_log = rounds_per_log
         self._grad = jax.vmap(jax.value_and_grad(
             lambda p, b: loss_fn(p, b)[0]))
 
-        def step_fn(state, params, batch):
+        def grads_fn(params, batch):
             losses, grads = self._grad(params, batch)
-            params, state = opt.step(state, params, grads)
-            return params, state, losses.mean()
+            return losses.mean(), grads
 
-        self._step = jax.jit(step_fn)
+        def block_fn(params, state, batches):
+            """batches: [n_rounds, p, ...] — scan of fused rounds."""
+            def round_body(carry, round_batches):
+                params, state = carry
+                params, state, losses = opt.round(
+                    state, params, grads_fn, round_batches)
+                return (params, state), losses
+
+            (params, state), losses = jax.lax.scan(
+                round_body, (params, state), batches)
+            return params, state, losses.reshape(-1)
+
+        def tail_fn(params, state, batches):
+            """Trailing steps past the last full round: local steps only."""
+            params, state, losses = opt.round(
+                state, params, grads_fn, batches,
+                comm_round=lambda s, p: (p, s))
+            return params, state, losses
+
+        self._block = jax.jit(block_fn)
+        self._tail = jax.jit(tail_fn)
 
     def bytes_per_round(self, params) -> int:
         return self.opt.bytes_per_comm_round(
@@ -61,34 +134,84 @@ class SimTrainer:
     def train(self, params, batch_fn: Callable[[int], dict], steps: int,
               log_every: int = 10,
               eval_fn: Optional[Callable] = None,
-              verbose: bool = False) -> tuple:
-        state = self.opt.init(params)
+              verbose: bool = False,
+              rounds_per_log: Optional[int] = None) -> tuple:
+        opt = self.opt
+        state = opt.init(params)
         hist = History()
         per_round = self.bytes_per_round(params)
-        comm_bytes = 0
-        p = self.opt.config.p
-        for t in range(steps):
-            batch = batch_fn(t)
-            params, state, loss = self._step(state, params, batch)
-            if (t + 1) % p == 0:
-                comm_bytes += per_round
-            if t % log_every == 0 or t == steps - 1:
-                hist.steps.append(t)
-                hist.loss.append(float(loss))
-                hist.comm_mb.append(comm_bytes / 2 ** 20)
+        p = opt.config.p
+        n_rounds, tail = divmod(steps, p)
+        explicit = rounds_per_log or self.rounds_per_log
+        if eval_fn is not None:
+            # the round engine never materializes mid-round params, so the
+            # eval hook sees the end of the round containing the log step
+            # (≤ p-1 steps later); larger blocks would pair log steps with
+            # evals taken a whole block later — refuse rather than distort
+            if explicit not in (None, 1):
+                raise ValueError(
+                    "eval_fn needs rounds_per_log=1: params only exist at "
+                    "block boundaries, so a larger block would mis-pair "
+                    "eval values with log steps")
+            block = 1
+        elif explicit:
+            block = explicit       # caller's choice: batch staging is
+            #                        theirs to bound
+        else:
+            # a whole block's batches are staged on device before the scan,
+            # so cap the derived size independently of log_every
+            block = min(_MAX_BLOCK_ROUNDS, max(1, -(-log_every // p)))
+
+        def flush(losses, t0, params):
+            ev_cache = []
+
+            def on_log(t, lv, mb):
                 if eval_fn is not None:
-                    avg = jax.tree_util.tree_map(
-                        lambda x: x.mean(0, keepdims=True).repeat(
-                            x.shape[0], 0), params)
-                    hist.eval_metric.append(float(eval_fn(avg)))
+                    if not ev_cache:
+                        # worker average at the end of this round/tail
+                        avg = jax.tree_util.tree_map(
+                            lambda x: x.mean(0, keepdims=True).repeat(
+                                x.shape[0], 0), params)
+                        ev_cache.append(float(eval_fn(avg)))
+                    hist.eval_metric.append(ev_cache[0])
                 if verbose:
-                    print(f"step {t:5d} loss {float(loss):.4f} "
-                          f"comm {comm_bytes/2**20:.1f} MB")
+                    print(f"step {t:5d} loss {lv:.4f} comm {mb:.1f} MB")
+
+            # np.asarray inside _log_chunk = one host sync per block
+            _log_chunk(hist, losses, t0, steps=steps, log_every=log_every,
+                       p=p, per_round_bytes=per_round, on_log=on_log)
+
+        done = 0                                   # steps completed
+        while done < n_rounds * p:
+            r = min(block, n_rounds - done // p)
+            flat = [batch_fn(done + i) for i in range(r * p)]
+            batches = _stack_batches(flat, extra_dims=(r, p))
+            params, state, losses = self._block(params, state, batches)
+            flush(losses, done, params)
+            done += r * p
+        if tail:
+            flat = [batch_fn(done + i) for i in range(tail)]
+            params, state, losses = self._tail(
+                params, state, _stack_batches(flat))
+            flush(losses, done, params)
         return params, state, hist
 
 
 class ShardedTrainer:
-    """Production loop over a ``TrainPack`` (sharded arrays, checkpoints)."""
+    """Production loop over a ``TrainPack`` — fused rounds, full checkpoints.
+
+    * hot path: ``pack.train_round`` (p local steps + one gossip per jitted
+      call, donated carry buffers — the returned params/state are fresh
+      arrays, so the Python-level carry stays donation-safe);
+    * losses stay on device between log points; ``jax.block_until_ready``
+      runs only when a log block is flushed;
+    * comm MB per round comes from the optimizer's wire-cost model
+      (degree × payload bytes, honouring compression);
+    * checkpoints store params and the *complete* optimizer state; with
+      ``resume=True`` training continues bit-identically from a
+      round-boundary checkpoint (an off-boundary one continues on the
+      schedule-correct per-step path until the next boundary).
+    """
 
     def __init__(self, pack, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 0):
@@ -96,24 +219,80 @@ class ShardedTrainer:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
 
+    def bytes_per_round(self) -> int:
+        per_worker = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            self.pack.params_struct)
+        return self.pack.opt.bytes_per_comm_round(per_worker)
+
     def train(self, key, batch_fn: Callable[[int], dict], steps: int,
-              log_every: int = 10, verbose: bool = True) -> Dict:
+              log_every: int = 10, verbose: bool = True,
+              resume: bool = False) -> Dict:
         from repro.checkpoint import checkpoint as ckpt
-        params, state = self.pack.init_fn(key)
+        pack = self.pack
+        p = pack.opt.config.p
+        params = state = None
+        start = 0
+        if resume and not self.ckpt_dir:
+            raise ValueError(
+                "resume=True needs a checkpoint directory (ckpt_dir)")
+        if resume and self.ckpt_dir:
+            last = ckpt.latest_step(self.ckpt_dir)
+            if last is not None:
+                restored = ckpt.restore(self.ckpt_dir, last, {
+                    "params": pack.params_struct,
+                    "opt_state": pack.state_struct})
+                params = jax.device_put(restored["params"],
+                                        pack.params_sharding)
+                state = jax.device_put(restored["opt_state"],
+                                       pack.state_sharding)
+                start = last
+        if params is None:       # fresh start: init only when not restored
+            params, state = pack.init_fn(key)
+        if start >= steps and verbose:
+            print(f"resume: checkpoint step {start} >= steps {steps}, "
+                  "nothing to run")
         hist = History()
-        t0 = time.time()
-        for t in range(steps):
-            batch = batch_fn(t)
-            params, state, loss = self.pack.train_step(params, state, batch)
-            if t % log_every == 0 or t == steps - 1:
-                hist.steps.append(t)
-                hist.loss.append(float(loss))
-                hist.comm_mb.append(0.0)
-                if verbose:
-                    print(f"step {t:5d} loss {float(loss):.4f} "
-                          f"({time.time()-t0:.1f}s)")
+        per_round_bytes = self.bytes_per_round()
+        wall0 = time.time()
+        pending: list = []         # [(first step idx, device losses)]
+
+        def on_log(t, lv, mb):
+            if verbose:
+                print(f"step {t:5d} loss {lv:.4f} comm {mb:.1f} MB "
+                      f"({time.time()-wall0:.1f}s)")
+
+        def flush():
+            if not pending:
+                return
+            jax.block_until_ready(pending[-1][1])   # the only device sync
+            for t_start, losses in pending:
+                _log_chunk(hist, losses, t_start, steps=steps,
+                           log_every=log_every, p=p,
+                           per_round_bytes=per_round_bytes, on_log=on_log)
+            pending.clear()
+
+        t = start
+        while t < steps:
+            if t % p == 0 and steps - t >= p:
+                rb = _stack_batches([batch_fn(t + i) for i in range(p)])
+                params, state, losses = pack.train_round(params, state, rb)
+                n = p
+            else:
+                # off a round boundary (resume from a tail checkpoint) or a
+                # tail shorter than a round: per-step path — its gossip cond
+                # keys on the restored step counter, keeping the schedule
+                params, state, losses = pack.train_step(
+                    params, state, batch_fn(t))
+                n = 1
+            pending.append((t, losses))
+            t += n
+            if t >= steps or any(_should_log(tt, steps, log_every)
+                                 for tt in range(t - n, t)):
+                flush()
             if (self.ckpt_dir and self.ckpt_every
-                    and (t + 1) % self.ckpt_every == 0):
-                ckpt.save(self.ckpt_dir, t + 1, params=params,
-                          opt_state={"m": state["m"], "step": state["step"]})
-        return {"params": params, "state": state, "history": hist}
+                    and t // self.ckpt_every > (t - n) // self.ckpt_every):
+                ckpt.save(self.ckpt_dir, t, params=params, opt_state=state)
+        flush()
+        return {"params": params, "state": state, "history": hist,
+                "steps_run": t - start}

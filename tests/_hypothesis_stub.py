@@ -1,0 +1,80 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+``tests/test_compression.py`` falls back to this so the suite *collects and
+runs* in environments without hypothesis (the container image, offline dev
+boxes).  Each ``@given`` test executes a fixed number of seeded
+pseudo-random examples — weaker than the real engine (no shrinking, no
+adaptive search) but the properties are still exercised.  Installing the
+``[test]`` extra from pyproject.toml restores real hypothesis.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class st:
+    """Subset of ``hypothesis.strategies`` the tests use."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def make(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda strat: strat.draw(rng),
+                               *args, **kwargs))
+        return make
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+# Each distinct drawn shape triggers an XLA recompile of the compressor
+# under test, so the stub trades example count for wall-clock time.
+_EXAMPLES_CAP = 8
+
+
+def given(**named_strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_stub_max_examples", 20), _EXAMPLES_CAP)
+
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            for i in range(n):
+                rng = np.random.default_rng(0xC0FFEE + 7919 * i)
+                drawn = {k: s.draw(rng)
+                         for k, s in named_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-supplied params from pytest's fixture resolver
+        sig = inspect.signature(fn)
+        run.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in named_strategies])
+        del run.__wrapped__
+        return run
+    return deco

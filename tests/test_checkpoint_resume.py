@@ -1,0 +1,100 @@
+"""Checkpoint round-trip: save → restore → train continues bit-identically.
+
+Regression test for the seed defect where ``ShardedTrainer`` checkpointed
+only ``{"m", "step"}`` — restoring a CPD-SGDM run silently reset the
+``xhat``/``xhat_nbrs`` error-compensation state.  The subprocess forces 8
+host devices so the checkpoint carries real sharded state (including the
+per-neighbour x̂ copies of the packed-sign gossip path).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT_RESUME = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+    from repro.train.trainer import ShardedTrainer
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    run = RunCfg(model=mcfg,
+                 parallel=ParallelCfg(profile="A", remat="none"),
+                 optim=OptimCfg(name="cpd_sgdm", eta=0.05, mu=0.9, p=2,
+                                weight_decay=1e-4))
+    mesh = make_debug_mesh(4, 2)
+    pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+    K = pack.layout.n_workers
+
+    # full optimizer state must be on disk, not just m/step
+    assert "xhat" in pack.state_struct and "xhat_nbrs" in pack.state_struct
+
+    def batch_fn(t):
+        return train_batch_arrays(mcfg, K, 2, 16,
+                                  jax.random.fold_in(jax.random.PRNGKey(1), t))
+
+    STEPS = 8
+    with mesh:
+        # A: uninterrupted run
+        outA = ShardedTrainer(pack).train(jax.random.PRNGKey(0), batch_fn,
+                                          STEPS, log_every=4, verbose=False)
+        with tempfile.TemporaryDirectory() as d:
+            # B: train to the midpoint, checkpointing there ...
+            ShardedTrainer(pack, ckpt_dir=d, ckpt_every=4).train(
+                jax.random.PRNGKey(0), batch_fn, STEPS // 2,
+                log_every=4, verbose=False)
+            # ... then resume from disk and finish
+            outB = ShardedTrainer(pack, ckpt_dir=d).train(
+                jax.random.PRNGKey(0), batch_fn, STEPS,
+                log_every=4, verbose=False, resume=True)
+            assert outB["steps_run"] == STEPS // 2, outB["steps_run"]
+
+    for a, b in zip(
+            jax.tree_util.tree_leaves((outA["params"], outA["state"])),
+            jax.tree_util.tree_leaves((outB["params"], outB["state"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("RESUME_OK")
+
+    # --- off-boundary resume: the checkpoint lands in a per-step tail
+    # (t=5 with p=2), so the resumed run must realign on the per-step path
+    # before re-entering fused rounds — same trajectory, same schedule.
+    STEPS2 = 9
+    with mesh:
+        outC = ShardedTrainer(pack).train(jax.random.PRNGKey(0), batch_fn,
+                                          STEPS2, log_every=4, verbose=False)
+        with tempfile.TemporaryDirectory() as d:
+            ShardedTrainer(pack, ckpt_dir=d, ckpt_every=5).train(
+                jax.random.PRNGKey(0), batch_fn, 5,
+                log_every=4, verbose=False)
+            outD = ShardedTrainer(pack, ckpt_dir=d).train(
+                jax.random.PRNGKey(0), batch_fn, STEPS2,
+                log_every=4, verbose=False, resume=True)
+            assert outD["steps_run"] == STEPS2 - 5, outD["steps_run"]
+    for a, b in zip(
+            jax.tree_util.tree_leaves((outC["params"], outC["state"])),
+            jax.tree_util.tree_leaves((outD["params"], outD["state"]))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-6, atol=2e-6)
+    print("RESUME_TAIL_OK")
+""")
+
+
+def _run(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_cpdsgdm_resume_bit_identical():
+    out = _run(_SCRIPT_RESUME)
+    assert "RESUME_OK" in out
+    assert "RESUME_TAIL_OK" in out
