@@ -43,5 +43,38 @@ def train_resnet(opt, k=K, steps=STEPS, seed=0, batch=16, log_every=5,
     return hist, (time.time() - t0) / steps
 
 
+# rows accumulated for the machine-readable BENCH_*.json written by
+# ``benchmarks.run`` (see its docstring for the schema)
+_ROWS = []
+
+
+def _parse_derived(derived) -> dict:
+    """Split the ``k1=v1;k2=v2`` derived string into a dict (floats where
+    possible); free-form fragments land under ``"note"``."""
+    out = {}
+    for part in str(derived).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+        else:
+            out["note"] = (out["note"] + ";" + part
+                           if "note" in out else part)
+    return out
+
+
 def csv_row(name, us_per_call, derived):
+    """Emit one benchmark result: CSV to stdout + structured row recorded
+    for the BENCH_*.json artifact."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": _parse_derived(derived)})
+
+
+def collected_rows():
+    return list(_ROWS)

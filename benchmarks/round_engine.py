@@ -8,7 +8,10 @@ single host sync per log block.  The model is deliberately small so
 dispatch/sync overhead — the thing the round engine removes — dominates.
 
 Derived: steps/sec for both drivers and the fused/per-step speedup at each
-communication period p.
+communication period p, plus a time-varying-topology variant (one-peer
+exponential schedule) that must run the same fused path at the same rate —
+the per-round W is selected *inside* the jitted scan, so the schedule may
+not add dispatch overhead.
 """
 import time
 
@@ -18,7 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row
 from repro.core import make_optimizer
 from repro.core.gossip import DenseComm
-from repro.core.topology import ring
+from repro.core.topology import one_peer_exponential_schedule, ring
 from repro.train.trainer import SimTrainer
 
 K, D, STEPS, REPEATS = 8, 64, 512, 3
@@ -112,6 +115,18 @@ def main():
                 f"steps_per_s={fused:.1f};speedup_vs_per_step={speedup:.2f}")
     best = max(v[2] for pp, v in results.items() if pp >= 4)
     csv_row("round_engine/max_speedup_p_ge_4", 0.0, f"speedup={best:.2f}")
+
+    # scheduled topology through the identical fused path: round-indexed
+    # (T, K, K) weight select inside the scan, no retrace, no extra dispatch
+    opt_sched = make_optimizer(
+        "pd_sgdm", DenseComm(one_peer_exponential_schedule(K)),
+        eta=0.05, mu=0.9, p=4)
+    fused_sched = _time_fused(opt_sched)
+    static_fused = results[4][1]
+    ratio = fused_sched / static_fused
+    csv_row("round_engine/fused_round_sched_p4", 1e6 / fused_sched,
+            f"steps_per_s={fused_sched:.1f};vs_static_ring={ratio:.2f}")
+    results["sched"] = (None, fused_sched, ratio)
     return results
 
 

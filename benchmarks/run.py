@@ -1,15 +1,80 @@
-"""Benchmark orchestrator — one section per paper table/figure.
-
-Prints ``name,us_per_call,derived`` CSV rows.
+"""Benchmark orchestrator — one section per paper table/figure or subsystem.
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run fig1 fig3   # a subset
+
+Sections
+--------
+  fig1      PD-SGDM vs C-SGDM/D-SGD/PD-SGD loss trajectories (paper Fig. 1)
+  fig2      communication-cost model: bytes on the wire per method (Fig. 2)
+  fig3      CPD-SGDM compressed gossip vs full precision (Fig. 3)
+  speedup   steps/sec scaling over worker count K
+  round     per-step dispatch vs fused-round scan (the round engine)
+  toposweep static ring vs time-varying topologies at equal bytes-on-wire
+  kernels   Pallas kernel microbenchmarks (interpret mode) vs jnp references
+  roofline  dry-run HLO analysis against TPU v5e hardware ceilings
+
+Output formats
+--------------
+Human-readable: every section prints ``name,us_per_call,derived`` CSV rows
+to stdout, where ``derived`` is a ``k1=v1;k2=v2`` string of
+section-specific metrics (steps/sec, speedups, final losses, ...).
+
+Machine-readable: after the selected sections run, the same rows are
+written to ``benchmarks/BENCH_<tag>.json`` (tag from ``$BENCH_TAG``,
+default ``latest``) so later PRs can diff perf trajectories without
+scraping stdout.  Schema (version 1)::
+
+    {
+      "schema": 1,
+      "created_unix": <int>,          # stamp of the run
+      "sections": ["fig1", ...],      # what was executed
+      "jax": "0.4.37",                # toolchain provenance
+      "backend": "cpu",               # jax.default_backend()
+      "wall_s": <float>,              # total wall clock
+      "rows": [                       # csv rows, structured
+        {"name": "round_engine/fused_round_p4",
+         "us_per_call": 123.4,
+         "derived": {"steps_per_s": 8100.0, "speedup_vs_per_step": 1.5}},
+        ...
+      ]
+    }
+
+``derived`` values parse to floats where possible; free-form fragments are
+kept under ``"note"``.  Rows are append-only within a run; compare runs by
+joining on ``name``.  The fused-round rows (``round_engine/*``) are the
+regression gate: new execution-path work must not lower their
+``steps_per_s``.
 """
+import json
+import os
 import sys
 import time
 
-SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "kernels",
-            "roofline"]
+SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
+            "kernels", "roofline"]
+
+
+def _write_bench_json(sections, wall_s) -> str:
+    """Persist the collected rows as benchmarks/BENCH_<tag>.json."""
+    import jax
+
+    from benchmarks.common import collected_rows
+    tag = os.environ.get("BENCH_TAG", "latest")
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{tag}.json")
+    doc = {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "sections": sections,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "wall_s": wall_s,
+        "rows": collected_rows(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -31,13 +96,19 @@ def main() -> None:
     if "round" in want:
         from benchmarks import round_engine
         round_engine.main()
+    if "toposweep" in want:
+        from benchmarks import topology_sweep
+        topology_sweep.main()
     if "kernels" in want:
         from benchmarks import kernels_micro
         kernels_micro.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()
-    print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},sections={want}")
+    wall = time.time() - t0
+    path = _write_bench_json(want, wall)
+    print(f"bench_json,0.0,path={os.path.relpath(path)}")
+    print(f"total_wall_s,{wall*1e6:.0f},sections={want}")
 
 
 if __name__ == '__main__':

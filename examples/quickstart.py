@@ -1,8 +1,10 @@
 """Quickstart: decentralized momentum SGD (PD-SGDM) in ~40 lines.
 
 8 workers on a ring train a tiny LM with local momentum steps and gossip
-every p=4 iterations; then the same run with sign-compressed gossip
-(CPD-SGDM) shows the ~30× communication saving at matching loss.
+every p=4 iterations; the same run with sign-compressed gossip (CPD-SGDM)
+shows the ~30× communication saving at matching loss; and a time-varying
+one-peer exponential topology halves the bytes of the ring again (degree 1
+per round) while its 3-round cycle mixes like a hypercube.
 
 Execution goes through the fused round engine: each jitted call runs a
 ``lax.scan`` of whole rounds (p local steps + one gossip), syncing the
@@ -17,7 +19,7 @@ from repro.configs.base import ModelCfg
 from repro.core import (CPDSGDMConfig, CPDSGDM, PDSGDM, PDSGDMConfig,
                         SignCompressor)
 from repro.core.gossip import DenseComm
-from repro.core.topology import ring
+from repro.core.topology import one_peer_exponential_schedule, ring
 from repro.data.synthetic import LMStreamCfg, lm_batch
 from repro.models import make_model
 from repro.train.trainer import SimTrainer
@@ -40,6 +42,9 @@ for label, opt in [
     ("CPD-SGDM (Alg.2, 1-bit sign gossip)",
      CPDSGDM(CPDSGDMConfig(eta=0.3, mu=0.9, p=4, gamma=0.4),
              DenseComm(ring(K)), SignCompressor())),
+    ("PD-SGDM  (one-peer exponential schedule, degree 1)",
+     PDSGDM(PDSGDMConfig(eta=0.3, mu=0.9, p=4),
+            DenseComm(one_peer_exponential_schedule(K)))),
 ]:
     trainer = SimTrainer(lambda p, b: model.loss(p, b), opt,
                          rounds_per_log=5)   # 5 rounds = 20 steps per sync

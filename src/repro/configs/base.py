@@ -128,6 +128,11 @@ class ParallelCfg:
     """
     profile: str = "A"
     topology: str = "ring"          # gossip graph between workers
+    # time-varying gossip: "static" keeps `topology`; otherwise one of
+    # one_peer_exp | alt_axes | random_matching (see core.topology.make_schedule)
+    topology_schedule: str = "static"
+    schedule_rounds: int = 0        # random_matching cycle length (0 = max(2, ⌈log₂K⌉))
+    schedule_seed: int = 0          # random_matching matchings are seeded
     remat: str = "full"             # none | full
     fsdp_min_size: int = 2 ** 16    # don't shard tiny leaves
     # --- perf-iteration levers (defaults = paper-faithful baseline) ---

@@ -15,11 +15,13 @@ from repro.core.compression import (Compressor, IdentityCompressor,
 from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
-from repro.core.topology import Topology, make_topology, spectral_gap
+from repro.core.topology import (Topology, TopologySchedule, make_schedule,
+                                 make_topology, spectral_gap)
 
 __all__ = [
     "topology", "schedules",
-    "Topology", "make_topology", "spectral_gap",
+    "Topology", "TopologySchedule", "make_topology", "make_schedule",
+    "spectral_gap",
     "Compressor", "IdentityCompressor", "SignCompressor", "TopKCompressor",
     "RandKCompressor", "QSGDCompressor", "make_compressor", "contraction_ratio",
     "CommBackend", "DenseComm", "ShardedComm",

@@ -54,6 +54,12 @@ class CPDSGDM(PDSGDM):
             raise ValueError(
                 "CPD-SGDM sharded backend needs a shift-structured topology "
                 "(ring/torus/exponential); 'complete' has no neighbour state.")
+        if isinstance(comm, ShardedComm) and comm.period > 1:
+            raise ValueError(
+                "CPD-SGDM sharded backend requires a static topology: the "
+                "xhat_nbrs error-compensation copies track a fixed neighbour "
+                "set (Alg. 2 line 9).  Time-varying schedules run on the "
+                "dense backend, or use PD-SGDM on the sharded one.")
 
     # -- state -----------------------------------------------------------------
     def init(self, params):
@@ -108,7 +114,7 @@ class CPDSGDM(PDSGDM):
                 nbr = state["xhat_nbrs"][self._key(ax, sh)]
                 mixhat = tmap(lambda a, b: a + jnp.float32(w) * b, mixhat, nbr)
         else:
-            mixhat = self.comm.mix(xhat)
+            mixhat = self.comm.mix(xhat, r=self.round_index(state))
         params_new = tmap(
             lambda x, mh, h: (x.astype(jnp.float32) + gamma * (mh - h)).astype(x.dtype),
             params, mixhat, xhat)
@@ -160,8 +166,9 @@ class CPDSGDM(PDSGDM):
         return params_new, new_state
 
     # -- comm-cost model --------------------------------------------------------------
-    def bytes_per_comm_round(self, params) -> int:
+    def bytes_per_comm_round(self, params, r: int = 0) -> int:
         from repro.core.gossip import gossip_bytes_per_round
         bits = self.compressor.wire_bits_per_element(
             jax.tree_util.tree_leaves(params)[0].dtype)
-        return gossip_bytes_per_round(params, self.comm, bits_per_element=bits)
+        return gossip_bytes_per_round(params, self.comm,
+                                      bits_per_element=bits, r=r)

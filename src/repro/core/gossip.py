@@ -17,34 +17,56 @@ Two implementations of the same mixing semantics ``xâ½áµâ¾ â† Î£â±¼ w_kj xâ
 
 Both expose::
 
-    mix(tree)                -> tree            # Î£â±¼ w_kj xâ½Ê²â¾
+    mix(tree, r=None)        -> tree            # Î£â±¼ w_kj xâ½Ê²â¾ (round r's W)
     shift_views(tree)        -> {(axis,shift): tree}   # raw neighbour tensors
     weights()                -> {(axis,shift): w}
 
 ``shift_views`` is what CPD-SGDM uses to move the *compressed, packed*
 payload ``q`` between neighbours.
+
+Either backend can be built from a single :class:`Topology` (static graph)
+or from a :class:`TopologySchedule` (time-varying graph): ``mix`` then
+selects round ``r``'s mixing matrix *inside* the jitted computation â€”
+DenseComm indexes a stacked ``(T, K, K)`` weight tensor with the traced
+round index; ShardedComm precomputes every round's ppermute program and
+selects it with ``lax.switch`` â€” so the fused round engine never retraces
+as the graph changes.  ``backend.topology`` remains the round-0 topology
+(shapes / worker count); per-round structure is ``backend.topology_at(r)``.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import Topology
+from repro.core.topology import Topology, TopologySchedule
 
-__all__ = ["DenseComm", "ShardedComm", "CommBackend"]
+__all__ = ["DenseComm", "ShardedComm", "CommBackend",
+           "gossip_bytes_per_round"]
 
 ShiftKey = Tuple[int, int]  # (topology axis, shift)
 
 
 class CommBackend:
     topology: Topology
+    schedule: Optional[TopologySchedule] = None
 
-    def mix(self, tree):
+    @property
+    def period(self) -> int:
+        """Schedule period T (1 for a static topology)."""
+        return self.schedule.period if self.schedule is not None else 1
+
+    def topology_at(self, r: int) -> Topology:
+        """Topology of round ``r`` (python int; wraps modulo the period)."""
+        if self.schedule is not None:
+            return self.schedule.at(r)
+        return self.topology
+
+    def mix(self, tree, r=None):
         raise NotImplementedError
 
     def shift_views(self, tree) -> Dict[ShiftKey, object]:
@@ -59,18 +81,45 @@ class CommBackend:
     def self_weight(self) -> float:
         return float(sum(w for (_, sh, w) in self.topology.shifts if sh == 0))
 
+    def _resolve(self, first):
+        """Normalize the first constructor arg: a schedule sets both the
+        schedule and the round-0 ``topology`` (shape/worker-count anchor)."""
+        if isinstance(first, TopologySchedule):
+            self.schedule = first
+            self.topology = first.at(0)
+        else:
+            self.schedule = None
+            self.topology = first
+
 
 @dataclasses.dataclass
 class DenseComm(CommBackend):
-    """Simulation backend: leaves are worker-stacked, leading dim K."""
+    """Simulation backend: leaves are worker-stacked, leading dim K.
 
-    topology: Topology
+    Accepts a ``Topology`` or a ``TopologySchedule``; with a schedule the
+    per-round W is selected by indexing the stacked ``(T, K, K)`` weight
+    tensor with the (traced) round index â€” one trace serves every round.
+    """
+
+    topology: Topology  # or a TopologySchedule at construction
 
     def __post_init__(self):
+        self._resolve(self.topology)
         self._W = jnp.asarray(self.topology.W, dtype=jnp.float32)
+        self._Ws = (jnp.asarray(self.schedule.stacked_W(), dtype=jnp.float32)
+                    if self.schedule is not None else None)
 
-    def mix(self, tree):
-        W = self._W
+    def _W_at(self, r):
+        if self.schedule is None or self.schedule.period == 1:
+            return self._W
+        if r is None:
+            raise ValueError(
+                "DenseComm with a TopologySchedule needs the round index: "
+                "mix(tree, r=...)")
+        return self._Ws[jnp.mod(jnp.asarray(r), self.schedule.period)]
+
+    def mix(self, tree, r=None):
+        W = self._W_at(r)
 
         def _mix(leaf):
             K = leaf.shape[0]
@@ -104,17 +153,27 @@ class ShardedComm(CommBackend):
     """Production backend: ppermute along named mesh axes, inside shard_map.
 
     ``axis_names[i]`` is the mesh axis carrying topology axis ``i``.
+
+    Accepts a ``Topology`` or a ``TopologySchedule``.  With a schedule every
+    round's ppermute program (sourceâ†’dest pairs per weighted exchange) is
+    precomputed at construction; ``mix(tree, r)`` selects the round's
+    program with ``lax.switch`` on the traced round index, so all T
+    collective patterns live in one compiled executable â€” no retracing as
+    the graph changes round to round.
     """
 
-    topology: Topology
+    topology: Topology  # or a TopologySchedule at construction
     axis_names: Tuple[str, ...]
 
     def __post_init__(self):
-        # 'complete' mixes via pmean over all named axes â€” grid shape unused.
-        if self.topology.name != "complete" and (
-                len(self.axis_names) != len(self.topology.axis_sizes)):
-            raise ValueError(
-                f"axis_names {self.axis_names} vs grid {self.topology.axis_sizes}")
+        self._resolve(self.topology)
+        for top in (self.schedule.topologies if self.schedule is not None
+                    else (self.topology,)):
+            # 'complete' mixes via pmean over all named axes â€” grid unused.
+            if top.name != "complete" and (
+                    len(self.axis_names) != len(top.axis_sizes)):
+                raise ValueError(
+                    f"axis_names {self.axis_names} vs grid {top.axis_sizes}")
 
     def _receive_from(self, x, axis: int, shift: int):
         """Each worker receives the value held by worker (k+shift) on `axis`."""
@@ -123,35 +182,58 @@ class ShardedComm(CommBackend):
         perm = [(j, (j - shift) % n) for j in range(n)]
         return jax.lax.ppermute(x, name, perm)
 
+    def _receive_perm(self, x, axis: int, recv_from):
+        """Each worker ``j`` on `axis` receives the value of ``recv_from[j]``."""
+        name = self.axis_names[axis]
+        perm = [(int(src), j) for j, src in enumerate(recv_from)]
+        return jax.lax.ppermute(x, name, perm)
+
     def receive_tree(self, tree, axis: int, shift: int):
         return jax.tree_util.tree_map(
             partial(self._receive_from, axis=axis, shift=shift), tree)
 
-    def mix(self, tree):
-        if self.topology.name == "complete":
+    def _mix_with(self, top: Topology, tree):
+        """One gossip round under a specific topology (static trace)."""
+        if top.name == "complete":
             return jax.tree_util.tree_map(
                 lambda x: jax.lax.pmean(x, self.axis_names), tree)
-        if self.topology.name == "disconnected":
+        if top.name == "disconnected":
             return tree
 
-        # Kronecker factorization: apply the per-axis circulant sequentially.
-        grid = self.topology.axis_sizes
+        # Kronecker factorization: apply the per-axis exchanges sequentially.
         per_axis: Dict[int, list] = {}
-        for (ax, sh, w) in self.topology.shifts:
-            per_axis.setdefault(ax, []).append((sh, w))
+        for (ax, sh, w) in top.shifts:
+            per_axis.setdefault(ax, []).append(("shift", sh, w))
+        for (ax, recv, w) in top.perms:
+            per_axis.setdefault(ax, []).append(("perm", recv, w))
 
         def mix_leaf(x):
             y = x
             for ax in sorted(per_axis):
                 acc = None
-                for (sh, w) in per_axis[ax]:
-                    v = y if sh == 0 else self._receive_from(y, ax, sh)
+                for (kind, arg, w) in per_axis[ax]:
+                    if kind == "shift":
+                        v = y if arg == 0 else self._receive_from(y, ax, arg)
+                    else:
+                        v = self._receive_perm(y, ax, arg)
                     term = v.astype(jnp.float32) * jnp.float32(w)
                     acc = term if acc is None else acc + term
                 y = acc.astype(x.dtype)
             return y
 
         return jax.tree_util.tree_map(mix_leaf, tree)
+
+    def mix(self, tree, r=None):
+        if self.schedule is None or self.period == 1:
+            return self._mix_with(self.topology_at(0), tree)
+        if r is None:
+            raise ValueError(
+                "ShardedComm with a TopologySchedule needs the round index: "
+                "mix(tree, r=...)")
+        branches = [partial(self._mix_with, top)
+                    for top in self.schedule.topologies]
+        idx = jnp.mod(jnp.asarray(r, jnp.int32), self.period)
+        return jax.lax.switch(idx, branches, tree)
 
     def shift_views(self, tree) -> Dict[ShiftKey, object]:
         out = {}
@@ -161,14 +243,17 @@ class ShardedComm(CommBackend):
 
 
 def gossip_bytes_per_round(tree, backend: CommBackend,
-                           bits_per_element: float | None = None) -> int:
-    """Per-worker bytes sent in one communication round (comm-cost model).
+                           bits_per_element: float | None = None,
+                           r: int = 0) -> int:
+    """Per-worker bytes sent in communication round ``r`` (comm-cost model).
 
-    Full precision: degree Ã— Î£ leaf bytes.  With compression, pass the
-    compressor's ``wire_bits_per_element``.
+    Full precision: round-r degree Ã— Î£ leaf bytes.  With compression, pass
+    the compressor's ``wire_bits_per_element``.  Under a time-varying
+    schedule the degree â€” and hence the bytes â€” varies by round; the
+    optimizer's ``bytes_per_round_cycle`` collects the full cycle.
     """
     total_elems = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
-    deg = len(backend.nonself_shifts())
+    deg = backend.topology_at(r).degree
     if bits_per_element is None:
         bytes_ = sum(
             int(np.prod(l.shape)) * l.dtype.itemsize

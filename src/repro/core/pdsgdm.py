@@ -104,9 +104,20 @@ class PDSGDM:
         return new_params, new_state
 
     # -- communication (Alg. 1 lines 5-9) --------------------------------------
+    def round_index(self, state):
+        """0-based index of the gossip round being applied.
+
+        ``comm_round`` runs after the local step(s) advanced the counter to
+        ``t+1 = (r+1)·p``, so ``r = step // p − 1``.  Time-varying topology
+        schedules key on this — and because it is derived from the
+        checkpointed step counter, resume restores the schedule phase
+        bit-identically with no extra persisted cursor.
+        """
+        return state["step"] // self.config.p - 1
+
     def comm_round(self, state, params):
-        """One gossip round (unconditional)."""
-        return self.comm.mix(params), state
+        """One gossip round (unconditional), with round ``r``'s topology."""
+        return self.comm.mix(params, r=self.round_index(state)), state
 
     def is_comm_step(self, state):
         """mod(t+1, p) == 0, evaluated *after* the local step incremented t."""
@@ -159,6 +170,12 @@ class PDSGDM:
         return params, state, losses
 
     # -- comm-cost model ----------------------------------------------------------
-    def bytes_per_comm_round(self, params) -> int:
+    def bytes_per_comm_round(self, params, r: int = 0) -> int:
         from repro.core.gossip import gossip_bytes_per_round
-        return gossip_bytes_per_round(params, self.comm)
+        return gossip_bytes_per_round(params, self.comm, r=r)
+
+    def bytes_per_round_cycle(self, params) -> tuple:
+        """Per-round bytes over one schedule cycle (1-tuple when static);
+        the trainers accumulate these round-robin for comm-MB accounting."""
+        return tuple(self.bytes_per_comm_round(params, r=r)
+                     for r in range(self.comm.period))

@@ -1,42 +1,65 @@
-"""Gossip topologies and mixing matrices (paper §3.2, Assumption 1).
+"""Gossip topologies, mixing matrices, and time-varying schedules.
 
-A topology yields a symmetric doubly-stochastic mixing matrix ``W`` over K
-workers.  ``W 1 = 1``, ``1ᵀ W = 1ᵀ``, eigenvalues ``1 = λ₁ ≥ |λ₂| ≥ ...``;
-the spectral gap ``ρ = 1 - |λ₂|`` controls the topology term in Theorems 1/2.
+A topology yields a doubly-stochastic mixing matrix ``W`` over K workers
+(paper §3.2, Assumption 1: symmetric, ``W 1 = 1``, ``1ᵀ W = 1ᵀ``); the
+spectral gap ``ρ = 1 - |λ₂|`` controls the topology term in Theorems 1/2.
 
 Besides the dense matrix (used by the single-process simulation backend and
-by the tests), each topology exposes its *neighbour structure*
-(``edges(k) -> [(offset_or_index, weight), ...]``) which the sharded backend
-turns into ``jax.lax.ppermute`` schedules.
+by the tests), each topology exposes its *neighbour structure* — weighted
+circulant shifts (``shifts``) and, for non-circulant graphs such as random
+matchings, explicit per-axis permutations (``perms``) — which the sharded
+backend turns into ``jax.lax.ppermute`` schedules.
+
+:class:`TopologySchedule` generalizes a single static graph to a periodic
+sequence ``W_1, …, W_T`` applied round-robin: round ``r`` gossips with
+``W_{(r mod T)+1}``.  Per-round matrices only need to be doubly stochastic
+(one-peer exponential rounds are asymmetric); what matters for convergence
+is the mixing of the *cycle product* ``W_T ⋯ W_1``, exposed as
+``cycle_rho = 1 - ‖W_T ⋯ W_1 − (1/K)11ᵀ‖₂``.  The one-peer exponential
+schedule reaches ``cycle_rho = 1`` (exact averaging every cycle) at degree
+1 per round when K is a power of two — the same bytes-on-wire as a ring
+round but hypercube-quality mixing over the cycle.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
 
 __all__ = [
     "Topology",
+    "TopologySchedule",
     "ring",
     "torus",
     "complete",
     "exponential",
     "disconnected",
     "spectral_gap",
+    "mixing_gap",
+    "cycle_spectral_gap",
     "is_doubly_stochastic",
     "make_topology",
+    "make_schedule",
+    "static_schedule",
+    "one_peer_exponential_schedule",
+    "alternating_axes_schedule",
+    "random_matching_schedule",
 ]
 
 
-def is_doubly_stochastic(W: np.ndarray, atol: float = 1e-8) -> bool:
-    """Check Assumption 1: symmetric, rows/cols sum to one, entries in [0,1]."""
+def is_doubly_stochastic(W: np.ndarray, atol: float = 1e-8,
+                         require_symmetric: bool = True) -> bool:
+    """Check Assumption 1: rows/cols sum to one, entries in [0,1]; symmetry
+    is required for static topologies but waived for the per-round matrices
+    of time-varying schedules (one-peer exponential rounds are directed)."""
     W = np.asarray(W, dtype=np.float64)
     if W.ndim != 2 or W.shape[0] != W.shape[1]:
         return False
     ones = np.ones(W.shape[0])
     return (
-        np.allclose(W, W.T, atol=atol)
+        (not require_symmetric or np.allclose(W, W.T, atol=atol))
         and np.allclose(W @ ones, ones, atol=atol)
         and np.allclose(ones @ W, ones, atol=atol)
         and bool(np.all(W >= -atol))
@@ -53,6 +76,32 @@ def spectral_gap(W: np.ndarray) -> float:
     return float(1.0 - eig[1])
 
 
+def mixing_gap(W: np.ndarray) -> float:
+    """Norm-based gap ``1 - ‖W − (1/K)11ᵀ‖₂`` — equals ``1 - |λ₂|`` for
+    symmetric W, and stays meaningful for asymmetric doubly-stochastic W
+    (per-round matrices of one-peer schedules) and for cycle products."""
+    W = np.asarray(W, dtype=np.float64)
+    K = W.shape[0]
+    if K == 1:
+        return 1.0
+    J = np.ones((K, K)) / K
+    return float(1.0 - np.linalg.norm(W - J, 2))
+
+
+def cycle_spectral_gap(Ws: Sequence[np.ndarray]) -> float:
+    """Effective spectral gap of one schedule cycle: ``1 - ‖W_T ⋯ W_1 − J‖₂``
+    where round 1 is applied first (``x ← W x`` each round)."""
+    Ws = [np.asarray(W, dtype=np.float64) for W in Ws]
+    P = np.eye(Ws[0].shape[0])
+    for W in Ws:
+        P = W @ P
+    return mixing_gap(P)
+
+
+# (TopologySchedule.cycle_rho goes through cycle_product + mixing_gap; this
+# free function serves callers holding raw matrices, e.g. the tests.)
+
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """A gossip graph over ``n_workers`` with doubly-stochastic weights.
@@ -66,12 +115,21 @@ class Topology:
         indexes into ``axis_sizes``.  ``shift`` of 0 denotes the self weight.
       axis_sizes: worker-grid shape whose product is K (1-d for ring, 2-d
         for torus). The sharded backend maps these onto mesh axes.
+      perms: non-circulant exchanges as (axis, recv_from, weight) triples,
+        where ``recv_from`` is a tuple of length ``axis_sizes[axis]`` and
+        position ``i`` receives the value held by ``recv_from[i]``.  Used by
+        random-matching rounds; lowered to one ``ppermute`` each.
+      symmetric: whether W is symmetric (Assumption 1).  Per-round matrices
+        of time-varying schedules may be asymmetric (one-peer exponential);
+        only the cycle product's mixing then matters.
     """
 
     name: str
     W: np.ndarray
     shifts: tuple  # ((axis, shift, weight), ...)
     axis_sizes: tuple
+    perms: tuple = ()  # ((axis, recv_from_tuple, weight), ...)
+    symmetric: bool = True
 
     @property
     def n_workers(self) -> int:
@@ -79,21 +137,61 @@ class Topology:
 
     @property
     def rho(self) -> float:
-        return spectral_gap(self.W)
+        return spectral_gap(self.W) if self.symmetric else mixing_gap(self.W)
 
     @property
     def degree(self) -> int:
-        """Number of non-self neighbours per worker (bytes-on-wire driver)."""
-        return sum(1 for (_, s, _) in self.shifts if s != 0)
+        """Number of non-self exchanges per worker per round — the
+        bytes-on-wire driver.  Each perm entry is one ppermute payload."""
+        return (sum(1 for (_, s, _) in self.shifts if s != 0)
+                + len(self.perms))
 
     def self_weight(self) -> float:
         return float(self.W[0, 0])
 
+    def structure_matrix(self) -> np.ndarray:
+        """Dense W rebuilt from the shift/perm structure — i.e. what the
+        ppermute backend actually executes (sequential per-axis application
+        of the weighted exchanges).  Tests cross-validate this against the
+        constructor-built ``W`` to catch structure/matrix drift (e.g. the
+        ``exponential()`` ±K/2 alias at K a power of two)."""
+        grid = self.axis_sizes
+        K = self.n_workers
+        axes = sorted({ax for (ax, _, _) in self.shifts}
+                      | {ax for (ax, _, _) in self.perms})
+        W = np.eye(K)
+        for ax in axes:
+            A = np.zeros((K, K))
+            n = grid[ax]
+            for (a, sh, w) in self.shifts:
+                if a != ax:
+                    continue
+                for k in range(K):
+                    idx = list(np.unravel_index(k, grid))
+                    idx[ax] = (idx[ax] + sh) % n
+                    A[k, np.ravel_multi_index(idx, grid)] += w
+            for (a, recv, w) in self.perms:
+                if a != ax:
+                    continue
+                for k in range(K):
+                    idx = list(np.unravel_index(k, grid))
+                    idx[ax] = recv[idx[ax]]
+                    A[k, np.ravel_multi_index(idx, grid)] += w
+            W = A @ W
+        return W
+
     def validate(self) -> None:
-        if not is_doubly_stochastic(self.W):
+        if not is_doubly_stochastic(self.W,
+                                    require_symmetric=self.symmetric):
             raise ValueError(f"topology {self.name}: W is not doubly stochastic")
         if int(np.prod(self.axis_sizes)) != self.n_workers:
             raise ValueError(f"topology {self.name}: axis_sizes {self.axis_sizes} != K")
+        for (ax, recv, _w) in self.perms:
+            n = self.axis_sizes[ax]
+            if sorted(recv) != list(range(n)):
+                raise ValueError(
+                    f"topology {self.name}: perm {recv} on axis {ax} is not "
+                    f"a permutation of range({n})")
 
 
 def _circulant(K: int, offsets_weights: dict) -> np.ndarray:
@@ -190,3 +288,185 @@ def make_topology(name: str, worker_grid: Sequence[int]) -> Topology:
     if name == "disconnected":
         return disconnected(K)
     raise ValueError(f"unknown topology {name!r}")
+
+
+# ------------------------------------------------------------------ schedules
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A periodic sequence of topologies: round ``r`` uses ``at(r)``.
+
+    All rounds must share ``n_workers`` and ``axis_sizes`` (the worker grid
+    is fixed; only the exchange pattern varies).  The quantity that governs
+    convergence is :attr:`cycle_rho`, the effective spectral gap of the
+    cycle product ``W_T ⋯ W_1``.
+
+    The round index is *derived from the optimizer's step counter*
+    (``r = step // p − 1`` at gossip time), so checkpoint/resume restores
+    the schedule phase for free — no extra cursor to persist.
+    """
+
+    name: str
+    topologies: tuple  # (Topology, ...), length T ≥ 1
+
+    def __post_init__(self):
+        if not self.topologies:
+            raise ValueError(f"schedule {self.name}: needs ≥ 1 topology")
+
+    @property
+    def period(self) -> int:
+        return len(self.topologies)
+
+    @property
+    def n_workers(self) -> int:
+        return self.topologies[0].n_workers
+
+    @property
+    def axis_sizes(self) -> tuple:
+        return self.topologies[0].axis_sizes
+
+    def at(self, r: int) -> Topology:
+        """Topology of round ``r`` (0-based, wraps modulo the period)."""
+        return self.topologies[int(r) % self.period]
+
+    def stacked_W(self) -> np.ndarray:
+        """(T, K, K) weight tensor — what DenseComm indexes per round."""
+        return np.stack([t.W for t in self.topologies])
+
+    def cycle_product(self) -> np.ndarray:
+        """``W_T ⋯ W_1`` (round 0 applied first, as in ``x ← W x``)."""
+        P = np.eye(self.n_workers)
+        for t in self.topologies:
+            P = t.W @ P
+        return P
+
+    @property
+    def cycle_rho(self) -> float:
+        """Effective spectral gap of one full cycle, ``1 - ‖∏W − J‖₂``."""
+        return mixing_gap(self.cycle_product())
+
+    def degrees(self) -> tuple:
+        """Per-round non-self exchange count (comm accounting varies by round)."""
+        return tuple(t.degree for t in self.topologies)
+
+    def validate(self) -> None:
+        K, grid = self.n_workers, self.axis_sizes
+        for t in self.topologies:
+            t.validate()
+            if t.n_workers != K or t.axis_sizes != grid:
+                raise ValueError(
+                    f"schedule {self.name}: round {t.name} grid "
+                    f"{t.axis_sizes} != {grid}")
+
+
+def static_schedule(top: Topology) -> TopologySchedule:
+    """Wrap a single topology as a period-1 schedule."""
+    return TopologySchedule(f"static_{top.name}", (top,))
+
+
+def one_peer_exponential_schedule(K: int,
+                                  self_weight: float = 0.5) -> TopologySchedule:
+    """One-peer exponential: round ``j`` exchanges only with offset ``2^j``.
+
+    Degree 1 per round (vs 2 for a ring), per-round W asymmetric
+    (directed send/recv), yet the ⌈log₂K⌉-round cycle product equals the
+    exact global average when K is a power of two (``cycle_rho = 1``) —
+    hypercube-quality mixing at ring-round bytes.  See "From promise to
+    practice" (2024) / Ying et al. (2021).
+    """
+    if K == 1:
+        return static_schedule(disconnected(1))
+    ws = float(self_weight)
+    T = max(1, math.ceil(math.log2(K)))
+    tops = []
+    for j in range(T):
+        off = 2 ** j
+        W = np.zeros((K, K))
+        for i in range(K):
+            W[i, i] += ws
+            W[i, (i + off) % K] += 1.0 - ws
+        tops.append(Topology(
+            f"one_peer_exp[{off}]", W,
+            ((0, 0, ws), (0, off, 1.0 - ws)), (K,),
+            symmetric=bool(np.allclose(W, W.T))))
+    return TopologySchedule("one_peer_exp", tuple(tops))
+
+
+def alternating_axes_schedule(shape: Sequence[int],
+                              self_weight: float | None = None
+                              ) -> TopologySchedule:
+    """Alternate ring mixing along one torus axis per round.
+
+    Round ``ax`` applies ``I ⊗ … ⊗ W_ring(shape[ax]) ⊗ … ⊗ I``; the cycle
+    product over all axes equals the full Kronecker torus W at half (2-d)
+    the per-round bytes.  Matches the pod×ring layout: even rounds gossip
+    inside the pod, odd rounds across pods.
+    """
+    shape = tuple(int(s) for s in shape)
+    tops = []
+    for ax in range(len(shape)):
+        sub = ring(shape[ax], self_weight)
+        mats = [sub.W if a == ax else np.eye(s)
+                for a, s in enumerate(shape)]
+        W = mats[0]
+        for M in mats[1:]:
+            W = np.kron(W, M)
+        shifts = tuple((ax, sh, w) for (_, sh, w) in sub.shifts)
+        tops.append(Topology(f"axis{ax}_ring", W, shifts, shape))
+    return TopologySchedule("alt_axes", tuple(tops))
+
+
+def random_matching_schedule(K: int, rounds: int, seed: int = 0,
+                             self_weight: float = 0.5) -> TopologySchedule:
+    """Seeded random perfect matchings: each round pairs workers at random
+    and pair-averages (``W = ws·I + (1−ws)·M``, M a symmetric matching).
+    With odd K one worker idles per round.  Deterministic in ``seed`` so
+    dense and sharded backends (and checkpoint resume) see identical
+    matrices."""
+    if rounds < 1:
+        raise ValueError("random_matching_schedule: rounds must be ≥ 1")
+    rng = np.random.default_rng(seed)
+    ws = float(self_weight)
+    tops = []
+    for r in range(rounds):
+        order = rng.permutation(K)
+        recv = np.arange(K)
+        for a, b in zip(order[0::2], order[1::2]):
+            recv[a], recv[b] = b, a
+        W = ws * np.eye(K)
+        for i in range(K):
+            W[i, recv[i]] += 1.0 - ws
+        tops.append(Topology(
+            f"matching[{r}]", W, ((0, 0, ws),), (K,),
+            perms=((0, tuple(int(x) for x in recv), 1.0 - ws),)))
+    return TopologySchedule("random_matching", tuple(tops))
+
+
+def make_schedule(name: str, worker_grid: Sequence[int], *,
+                  base_topology: str = "ring", rounds: int = 0,
+                  seed: int = 0) -> TopologySchedule:
+    """Build a topology schedule by name for a worker grid.
+
+    ``"static"`` wraps ``base_topology``; ``rounds``/``seed`` parameterize
+    the random-matching schedule (rounds=0 derives ⌈log₂K⌉).
+    """
+    grid = tuple(int(g) for g in worker_grid)
+    K = int(np.prod(grid)) if grid else 1
+    key = name.lower().replace("-", "_")
+    if key == "static":
+        return static_schedule(make_topology(base_topology, grid))
+    if key in ("one_peer_exp", "one_peer_exponential"):
+        if len(grid) > 1:
+            raise ValueError(
+                "one_peer_exp needs a single worker axis; got grid "
+                f"{grid} (use alt_axes for multi-axis grids)")
+        return one_peer_exponential_schedule(K)
+    if key in ("alt_axes", "alternating_axes"):
+        return alternating_axes_schedule(grid if len(grid) > 1 else (K,))
+    if key in ("random_matching", "random_match"):
+        if len(grid) > 1:
+            raise ValueError(
+                "random_matching needs a single worker axis; got grid "
+                f"{grid}")
+        T = rounds or max(2, math.ceil(math.log2(max(K, 2))))
+        return random_matching_schedule(K, T, seed=seed)
+    raise ValueError(f"unknown topology schedule {name!r}")

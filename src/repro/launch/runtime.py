@@ -34,7 +34,8 @@ from repro.configs.base import ModelCfg, RunCfg
 from repro.configs.shapes import InputShape, train_batch_specs
 from repro.core import make_compressor, make_optimizer
 from repro.core.gossip import DenseComm, ShardedComm
-from repro.core.topology import disconnected, make_topology, torus
+from repro.core.topology import (disconnected, make_schedule, make_topology,
+                                 torus)
 from repro.launch.sharding import (Layout, batch_spec_tree, cache_spec_tree,
                                    make_layout, param_spec_tree, to_shardings)
 from repro.models import make_model
@@ -110,11 +111,23 @@ def make_shd(layout: Layout, parallel):
 
 # --------------------------------------------------------------------------- comm
 def build_comm(run: RunCfg, layout: Layout):
-    """Topology + comm backend for the resolved worker layout."""
+    """Topology (or topology schedule) + comm backend for the worker layout.
+
+    ``parallel.topology_schedule != "static"`` selects a time-varying gossip
+    graph: the ShardedComm precomputes every round's ppermute program and
+    the fused round engine switches between them on the traced round index.
+    """
     waxes = layout.worker_axes
     sizes = layout.worker_sizes
     if not waxes:
         return DenseComm(disconnected(1))
+    sched_name = getattr(run.parallel, "topology_schedule", "static")
+    if sched_name != "static":
+        sched = make_schedule(
+            sched_name, sizes, base_topology=run.parallel.topology,
+            rounds=run.parallel.schedule_rounds,
+            seed=run.parallel.schedule_seed)
+        return ShardedComm(sched, axis_names=waxes)
     if len(waxes) == 1:
         topo = make_topology(run.parallel.topology, sizes)
     else:

@@ -19,6 +19,11 @@ def main():
                     help="pd_sgdm|cpd_sgdm|c_sgdm|d_sgd|pd_sgd|choco_sgd")
     ap.add_argument("--p", type=int, default=None)
     ap.add_argument("--eta", type=float, default=None)
+    ap.add_argument("--topology", default=None,
+                    help="ring|torus|complete|exponential|disconnected")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="static|one_peer_exp|alt_axes|random_matching "
+                         "(time-varying gossip graph)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -55,7 +60,13 @@ def main():
         optim = dataclasses.replace(optim, p=args.p)
     if args.eta is not None:
         optim = dataclasses.replace(optim, eta=args.eta)
-    run = dataclasses.replace(run, optim=optim)
+    parallel = run.parallel
+    if args.topology:
+        parallel = dataclasses.replace(parallel, topology=args.topology)
+    if args.topology_schedule:
+        parallel = dataclasses.replace(
+            parallel, topology_schedule=args.topology_schedule)
+    run = dataclasses.replace(run, optim=optim, parallel=parallel)
 
     n_dev = len(jax.devices())
     if n_dev >= args.data_axis * args.model_axis:

@@ -67,13 +67,27 @@ def _should_log(t, steps, log_every):
     return t % log_every == 0 or t == steps - 1
 
 
+def _bytes_through(n_rounds: int, per_round_bytes) -> float:
+    """Cumulative bytes after ``n_rounds`` gossip rounds.
+
+    ``per_round_bytes`` is a scalar (static topology) or the per-round
+    cycle from ``opt.bytes_per_round_cycle`` (time-varying schedule, where
+    the degree — and hence the bytes — differs round to round)."""
+    if isinstance(per_round_bytes, (int, float)):
+        return n_rounds * per_round_bytes
+    T = len(per_round_bytes)
+    full, rem = divmod(n_rounds, T)
+    return full * sum(per_round_bytes) + sum(per_round_bytes[:rem])
+
+
 def _log_chunk(hist, losses, t0, *, steps, log_every, p, per_round_bytes,
                on_log=None):
     """Append History entries for the log points inside one executed chunk.
 
     ``losses`` holds the per-step losses starting at global step ``t0``.
     Comm accounting: ``(t+1) // p`` gossip rounds completed through step t
-    (the schedule is mod(t+1, p) == 0) × ``per_round_bytes``.
+    (the schedule is mod(t+1, p) == 0), costed round-by-round through
+    ``per_round_bytes`` (scalar or per-round cycle).
     """
     for i, lv in enumerate(np.asarray(losses).reshape(-1)):
         t = t0 + i
@@ -81,7 +95,8 @@ def _log_chunk(hist, losses, t0, *, steps, log_every, p, per_round_bytes,
             continue
         hist.steps.append(t)
         hist.loss.append(float(lv))
-        hist.comm_mb.append(((t + 1) // p) * per_round_bytes / 2 ** 20)
+        hist.comm_mb.append(
+            _bytes_through((t + 1) // p, per_round_bytes) / 2 ** 20)
         if on_log is not None:
             on_log(t, float(lv), hist.comm_mb[-1])
 
@@ -131,6 +146,10 @@ class SimTrainer:
         return self.opt.bytes_per_comm_round(
             jax.tree_util.tree_map(lambda x: x[0], params))
 
+    def bytes_per_round_cycle(self, params) -> tuple:
+        return self.opt.bytes_per_round_cycle(
+            jax.tree_util.tree_map(lambda x: x[0], params))
+
     def train(self, params, batch_fn: Callable[[int], dict], steps: int,
               log_every: int = 10,
               eval_fn: Optional[Callable] = None,
@@ -139,7 +158,7 @@ class SimTrainer:
         opt = self.opt
         state = opt.init(params)
         hist = History()
-        per_round = self.bytes_per_round(params)
+        per_round = self.bytes_per_round_cycle(params)
         p = opt.config.p
         n_rounds, tail = divmod(steps, p)
         explicit = rounds_per_log or self.rounds_per_log
@@ -225,6 +244,12 @@ class ShardedTrainer:
             self.pack.params_struct)
         return self.pack.opt.bytes_per_comm_round(per_worker)
 
+    def bytes_per_round_cycle(self) -> tuple:
+        per_worker = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            self.pack.params_struct)
+        return self.pack.opt.bytes_per_round_cycle(per_worker)
+
     def train(self, key, batch_fn: Callable[[int], dict], steps: int,
               log_every: int = 10, verbose: bool = True,
               resume: bool = False) -> Dict:
@@ -253,7 +278,7 @@ class ShardedTrainer:
             print(f"resume: checkpoint step {start} >= steps {steps}, "
                   "nothing to run")
         hist = History()
-        per_round_bytes = self.bytes_per_round()
+        per_round_bytes = self.bytes_per_round_cycle()
         wall0 = time.time()
         pending: list = []         # [(first step idx, device losses)]
 

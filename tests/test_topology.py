@@ -1,16 +1,31 @@
-"""Topology invariants (paper Assumption 1 / Lemma 1)."""
+"""Topology invariants (paper Assumption 1 / Lemma 1) and schedule cycles."""
 import numpy as np
 import pytest
 
-from repro.core.topology import (complete, disconnected, exponential,
-                                 is_doubly_stochastic, make_topology, ring,
-                                 spectral_gap, torus)
+from repro.core.topology import (alternating_axes_schedule, complete,
+                                 cycle_spectral_gap, disconnected,
+                                 exponential, is_doubly_stochastic,
+                                 make_schedule, make_topology, mixing_gap,
+                                 one_peer_exponential_schedule,
+                                 random_matching_schedule, ring,
+                                 spectral_gap, static_schedule, torus)
 
 TOPOLOGIES = [
     ring(2), ring(3), ring(8), ring(16),
     torus((2, 8)), torus((2, 16)), torus((4, 4)),
     complete(8), complete(5), exponential(16), exponential(8),
     disconnected(4),
+]
+
+SCHEDULES = [
+    static_schedule(ring(8)),
+    one_peer_exponential_schedule(8),
+    one_peer_exponential_schedule(16),
+    one_peer_exponential_schedule(12),     # K not a power of two
+    alternating_axes_schedule((2, 8)),
+    alternating_axes_schedule((4, 4)),
+    random_matching_schedule(8, 4, seed=3),
+    random_matching_schedule(7, 3, seed=0),  # odd K: one idle worker/round
 ]
 
 
@@ -38,6 +53,82 @@ def test_lemma1_operator_norm(top):
     M = top.W - np.ones((K, K)) / K
     opnorm = np.linalg.norm(M, 2)
     assert opnorm == pytest.approx(1.0 - top.rho, abs=1e-8)
+
+
+@pytest.mark.parametrize("top", TOPOLOGIES, ids=lambda t: f"{t.name}{t.n_workers}")
+def test_structure_matches_dense_w(top):
+    """The shift/perm structure (what the ppermute backend executes) must
+    reproduce the constructor-built dense W for *every* topology — this is
+    the cross-check that catches drift like the ``exponential()``
+    ±K/2-alias/symmetrization case at K a power of two."""
+    assert np.allclose(top.structure_matrix(), top.W, atol=1e-9), top.name
+
+
+@pytest.mark.parametrize("sched", SCHEDULES, ids=lambda s: f"{s.name}{s.n_workers}")
+def test_schedule_structure_every_step(sched):
+    """Extend the structure-vs-W cross-check to every step of every
+    time-varying schedule, plus per-round double stochasticity (symmetry
+    only where the round claims it — one-peer rounds are directed)."""
+    sched.validate()
+    for r in range(sched.period):
+        top = sched.at(r)
+        assert np.allclose(top.structure_matrix(), top.W, atol=1e-9), (
+            sched.name, r)
+        assert is_doubly_stochastic(top.W,
+                                    require_symmetric=top.symmetric), (
+            sched.name, r)
+    # wrap-around: at(T) is round 0 again
+    assert sched.at(sched.period) is sched.at(0)
+
+
+def test_one_peer_exp_cycle_exact_average():
+    """K a power of two: the ⌈log₂K⌉-round one-peer cycle product is the
+    exact global average — cycle_rho == 1 at degree 1 per round."""
+    for K in (4, 8, 16):
+        s = one_peer_exponential_schedule(K)
+        assert s.degrees() == (1,) * s.period
+        assert np.allclose(s.cycle_product(), np.ones((K, K)) / K, atol=1e-12)
+        assert s.cycle_rho == pytest.approx(1.0, abs=1e-9)
+    # K not a power of two: still mixes, just not exactly
+    s12 = one_peer_exponential_schedule(12)
+    assert 0.0 < s12.cycle_rho < 1.0
+
+
+def test_alt_axes_cycle_equals_torus():
+    """Alternating per-axis ring rounds compose to the full Kronecker torus
+    over one cycle (the factors commute), at half the per-round degree."""
+    shape = (4, 4)
+    s = alternating_axes_schedule(shape)
+    assert np.allclose(s.cycle_product(), torus(shape).W, atol=1e-12)
+    assert cycle_spectral_gap([t.W for t in s.topologies]) == pytest.approx(
+        mixing_gap(torus(shape).W), abs=1e-9)
+    assert all(d == 2 for d in s.degrees())   # one ring axis per round
+
+
+def test_random_matching_rounds_are_symmetric_pair_averages():
+    s = random_matching_schedule(8, 5, seed=11)
+    for top in s.topologies:
+        assert top.symmetric
+        assert is_doubly_stochastic(top.W)
+        # matching: each row has the self weight and at most one partner
+        offdiag = top.W - np.diag(np.diag(top.W))
+        assert np.all((offdiag == 0) | (offdiag == 0.5))
+        assert np.allclose(top.W, top.W.T)
+    # seeded determinism: same seed → identical matrices
+    s2 = random_matching_schedule(8, 5, seed=11)
+    for a, b in zip(s.topologies, s2.topologies):
+        assert np.array_equal(a.W, b.W)
+
+
+def test_make_schedule_factory():
+    assert make_schedule("static", (8,)).period == 1
+    assert make_schedule("one_peer_exp", (8,)).period == 3
+    assert make_schedule("alt_axes", (2, 8)).period == 2
+    assert make_schedule("random_matching", (8,), rounds=4, seed=1).period == 4
+    with pytest.raises(ValueError):
+        make_schedule("one_peer_exp", (2, 4))   # needs a single worker axis
+    with pytest.raises(ValueError):
+        make_schedule("nope", (8,))
 
 
 def test_shifts_reconstruct_w():

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Markdown link check for the docs CI job (no network access needed).
+
+Usage: python tools/check_md_links.py README.md docs [more files/dirs...]
+
+Checks, for every ``[text](target)`` link in the given markdown files:
+  * relative file targets resolve to an existing file/directory
+    (anchors are stripped; ``#section`` anchors themselves are not
+    validated — headings move too often for that to stay signal);
+  * absolute ``http(s)://`` targets are syntactically sane (scheme+host);
+  * bare ``/``-rooted targets are rejected — they break outside GitHub.
+
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target without closing paren; images share the syntax
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_URL_RE = re.compile(r"^https?://[\w.-]+")
+
+
+def md_files(args):
+    for a in args:
+        if os.path.isdir(a):
+            for root, _dirs, files in os.walk(a):
+                for f in sorted(files):
+                    if f.endswith(".md"):
+                        yield os.path.join(root, f)
+        else:
+            yield a
+
+
+def check_file(path) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        line = text[:m.start()].count("\n") + 1
+        if target.startswith(("http://", "https://")):
+            if not _URL_RE.match(target):
+                errors.append((path, line, target, "malformed URL"))
+            continue
+        if target.startswith("mailto:"):
+            continue
+        if target.startswith("#"):
+            continue  # in-page anchor: not validated
+        if target.startswith("/"):
+            errors.append((path, line, target,
+                           "absolute path (breaks outside the repo root)"))
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append((path, line, target, f"missing file {resolved}"))
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_md_links.py <file-or-dir>...", file=sys.stderr)
+        return 2
+    all_errors = []
+    n = 0
+    for path in md_files(argv):
+        n += 1
+        all_errors.extend(check_file(path))
+    for (path, line, target, why) in all_errors:
+        print(f"{path}:{line}: broken link ({target}): {why}")
+    print(f"checked {n} markdown file(s): "
+          f"{'OK' if not all_errors else f'{len(all_errors)} broken link(s)'}")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
