@@ -1,0 +1,130 @@
+"""Kernel-path benchmark: per-leaf jnp packed round vs flatten-once rounds.
+
+Three drivers execute the identical CPD-SGDM round (p local momentum steps
++ consensus + sign-compressed wire) over a many-leaf parameter tree:
+
+  * ``jnp_perleaf``     — ``use_kernel=False``, ``packed_wire=False``: the
+    per-leaf jnp path (Q applied leaf by leaf, momentum as a per-leaf
+    tree_map) — the seed implementation of the wire.
+  * ``kernel_perstep``  — ``use_kernel=True`` driven through the *tree*
+    round (injected ``local_step``): every local step re-flattens the whole
+    tree into the (rows, 1024) layout and unflattens it again — the old
+    "kernel sidecar" behaviour this PR removes.
+  * ``kernel_fused``    — ``use_kernel=True`` fused round
+    (``PDSGDM.kernel_round``): flatten once per round, scan + gossip +
+    sign wire all on the matrix.
+
+All kernel calls run in interpret mode on CPU, so ``kernel_fused`` vs
+``kernel_perstep`` is the *interpret-parity* comparison — both pay the same
+per-kernel emulation cost and the measured gap is exactly the flatten-once
+layout win.  ``kernel_fused`` vs ``jnp_perleaf`` additionally carries the
+interpret-mode emulation overhead, which on CPU can mask the layout win for
+small trees (the derived row notes when it does); on TPU the kernels are
+the fast path, interpret mode exists only as the correctness harness.
+
+Derived: rounds/sec per driver and speedups at each communication period p.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import CPDSGDM, CPDSGDMConfig, SignCompressor
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+
+K = 4
+REPEATS = 3
+ROUNDS = 12          # rounds timed per repeat
+
+
+def _params():
+    """A many-leaf tree with ragged sizes (tail-padded rows exercised)."""
+    key = jax.random.PRNGKey(0)
+    leaves = {}
+    for i, shape in enumerate(
+            [(257, 129), (64, 300), (1000,), (33, 65), (7, 11, 13),
+             (2048,), (129,), (301, 5)] * 3):
+        leaves[f"w{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i), (K,) + shape) * 0.1
+    return leaves
+
+
+def _grads_fn(params, batch):
+    losses = jnp.zeros((K,))
+    grads = jax.tree_util.tree_map(lambda x: 0.3 * x + batch, params)
+    return losses.mean(), grads
+
+
+def _opt(p, *, use_kernel, packed_wire=True):
+    cfg = CPDSGDMConfig(eta=0.05, mu=0.9, p=p, gamma=0.4,
+                        weight_decay=1e-4, use_kernel=use_kernel,
+                        packed_wire=packed_wire)
+    return CPDSGDM(cfg, DenseComm(ring(K)), SignCompressor())
+
+
+def _time_rounds(round_fn, params, state, batches):
+    """Compile, then best-of-REPEATS wall time for ROUNDS rounds."""
+    def run():
+        p_, s_ = params, state
+        for _ in range(ROUNDS):
+            p_, s_, losses = round_fn(s_, p_, batches)
+        jax.block_until_ready(p_)
+    run()
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return ROUNDS / best
+
+
+def main():
+    results = {}
+    params = _params()
+    for p in [1, 4, 8]:
+        batches = jnp.zeros((p, 1))
+        drivers = {}
+
+        opt_jnp = _opt(p, use_kernel=False, packed_wire=False)
+        drivers["jnp_perleaf"] = jax.jit(
+            lambda s, pp, bs, o=opt_jnp: o.round(s, pp, _grads_fn, bs))
+
+        # per-step kernel: tree round with the kernel local_step injected —
+        # flatten/unflatten on every one of the p steps
+        opt_ps = _opt(p, use_kernel=True)
+        drivers["kernel_perstep"] = jax.jit(
+            lambda s, pp, bs, o=opt_ps: o.round(
+                s, pp, _grads_fn, bs,
+                local_step=o.local_step, comm_round=o.comm_round))
+
+        opt_fused = _opt(p, use_kernel=True)
+        drivers["kernel_fused"] = jax.jit(
+            lambda s, pp, bs, o=opt_fused: o.round(s, pp, _grads_fn, bs))
+
+        rps = {}
+        for name, fn in drivers.items():
+            opt = {"jnp_perleaf": opt_jnp, "kernel_perstep": opt_ps,
+                   "kernel_fused": opt_fused}[name]
+            rps[name] = _time_rounds(fn, params, opt.init(params), batches)
+
+        parity = rps["kernel_fused"] / rps["kernel_perstep"]
+        vs_jnp = rps["kernel_fused"] / rps["jnp_perleaf"]
+        results[p] = (rps, parity, vs_jnp)
+        for name in drivers:
+            csv_row(f"kernel_path/{name}_p{p}", 1e6 / rps[name],
+                    f"rounds_per_s={rps[name]:.2f}")
+        note = ""
+        if vs_jnp < 1.2 and jax.default_backend() != "tpu":
+            note = (";note=interpret-mode emulation overhead on CPU masks "
+                    "the layout win vs raw jnp - parity row is the honest "
+                    "comparison")
+        csv_row(f"kernel_path/speedup_p{p}", 0.0,
+                f"fused_vs_perstep_parity={parity:.2f};"
+                f"fused_vs_jnp={vs_jnp:.2f}{note}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ Sections
   round     per-step dispatch vs fused-round scan (the round engine)
   toposweep static ring vs time-varying topologies at equal bytes-on-wire
   kernels   Pallas kernel microbenchmarks (interpret mode) vs jnp references
+  kernel_path  per-leaf jnp round vs per-step kernel vs flatten-once fused
+               round (interpret-parity layout comparison)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -36,6 +38,9 @@ scraping stdout.  Schema (version 1)::
         {"name": "round_engine/fused_round_p4",
          "us_per_call": 123.4,
          "derived": {"steps_per_s": 8100.0, "speedup_vs_per_step": 1.5}},
+        {"name": "kernel_path/speedup_p4",   # flatten-once layout win
+         "us_per_call": 0.0,
+         "derived": {"fused_vs_perstep_parity": 1.5, "fused_vs_jnp": 1.2}},
         ...
       ]
     }
@@ -52,7 +57,7 @@ import sys
 import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
-            "kernels", "roofline"]
+            "kernels", "kernel_path", "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -102,6 +107,9 @@ def main() -> None:
     if "kernels" in want:
         from benchmarks import kernels_micro
         kernels_micro.main()
+    if "kernel_path" in want:
+        from benchmarks import kernel_path
+        kernel_path.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

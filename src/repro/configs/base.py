@@ -150,7 +150,15 @@ class OptimCfg:
     gamma: float = 0.4
     weight_decay: float = 1e-4
     compressor: str = "sign"        # for cpd_sgdm / choco
+    # Pallas execution path: run the fused round on the flatten-once
+    # (rows, 1024) kernel layout — momentum scan, gossip mix and CPD's
+    # packed sign wire in one layout, flattened once per round.  The
+    # recommended configuration on TPU (`--use-kernel` in launch.train);
+    # off by default here because this container only has the interpret-
+    # mode correctness harness.
     use_kernel: bool = False
+    # force Pallas interpret mode on/off; None = auto (interpret off-TPU)
+    kernel_interpret: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -42,6 +42,15 @@ class CSGDM(PDSGDM):
     def comm_round(self, state, params):
         return params, state               # params never drift
 
+    # kernel (flatten-once) round: same structure on the matrix layout —
+    # the all-reduce mean of the gradient matrix, and no gossip drift.
+    def local_step_mat(self, x_mat, mats, g_mat, step):
+        return super().local_step_mat(x_mat, mats, self.comm.mix(g_mat),
+                                      step)
+
+    def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
+        return x_mat, mats
+
 
 def d_sgd(eta: float, comm: CommBackend, weight_decay: float = 0.0) -> PDSGDM:
     return PDSGDM(PDSGDMConfig(eta=eta, mu=0.0, p=1, weight_decay=weight_decay), comm)
@@ -63,19 +72,23 @@ def choco_sgd(eta: float, gamma: float, comm: CommBackend,
 def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
                    mu: float = 0.9, p: int = 4, gamma: float = 0.4,
                    weight_decay: float = 0.0, compressor=None,
-                   lr_schedule=None, use_kernel: bool = False):
+                   lr_schedule=None, use_kernel: bool = False,
+                   kernel_interpret: bool | None = None):
     """Factory used by configs / launchers / benchmarks."""
     name = name.lower().replace("-", "_")
     if name in ("pd_sgdm", "pdsgdm"):
         return PDSGDM(PDSGDMConfig(eta=eta, mu=mu, p=p,
                                    weight_decay=weight_decay,
                                    lr_schedule=lr_schedule,
-                                   use_kernel=use_kernel), comm)
+                                   use_kernel=use_kernel,
+                                   kernel_interpret=kernel_interpret), comm)
     if name in ("cpd_sgdm", "cpdsgdm"):
         return CPDSGDM(CPDSGDMConfig(eta=eta, mu=mu, p=p, gamma=gamma,
                                      weight_decay=weight_decay,
                                      lr_schedule=lr_schedule,
-                                     use_kernel=use_kernel), comm, compressor)
+                                     use_kernel=use_kernel,
+                                     kernel_interpret=kernel_interpret),
+                       comm, compressor)
     if name in ("c_sgdm", "csgdm"):
         K = comm.topology.n_workers
         comp_comm = type(comm)(complete(K), **(
@@ -83,7 +96,9 @@ def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
         return CSGDM(PDSGDMConfig(eta=eta, mu=mu, p=1,
                                   weight_decay=weight_decay,
                                   lr_schedule=lr_schedule,
-                                  use_kernel=use_kernel), comp_comm)
+                                  use_kernel=use_kernel,
+                                  kernel_interpret=kernel_interpret),
+                     comp_comm)
     if name in ("d_sgd", "dsgd"):
         return d_sgd(eta, comm, weight_decay)
     if name in ("pd_sgd", "pdsgd"):

@@ -31,6 +31,7 @@ __all__ = [
     "make_compressor",
     "sign_pack",
     "sign_unpack",
+    "sign_wire_bytes",
     "contraction_ratio",
     "SIGN_BLOCK",
 ]
@@ -83,6 +84,16 @@ def sign_unpack(packed: jnp.ndarray, scales: jnp.ndarray, n: int, shape, dtype,
     vals = signs.reshape(nb, block) * scales[:, None]
     flat = vals.reshape(-1)[:n]
     return flat.reshape(shape).astype(dtype)
+
+
+def sign_wire_bytes(n: int, block: int = SIGN_BLOCK) -> int:
+    """Exact packed-wire payload for an ``n``-element leaf: per block,
+    ``block/8`` sign bytes + one f32 scale — *including* the padded tail
+    block, which really crosses the wire (``(uint8, f32)`` pair per
+    ``ppermute``).  This is the cost model behind
+    ``CPDSGDM.bytes_per_comm_round`` on the packed path."""
+    nblocks = -(-int(n) // block)
+    return nblocks * (block // 8 + 4)
 
 
 def contraction_ratio(x: jnp.ndarray, qx: jnp.ndarray) -> jnp.ndarray:

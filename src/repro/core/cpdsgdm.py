@@ -26,9 +26,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compression import (Compressor, SignCompressor, sign_pack,
-                                    sign_unpack)
+                                    sign_unpack, sign_wire_bytes)
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 
@@ -96,7 +97,21 @@ class CPDSGDM(PDSGDM):
         q = [per_leaf(i, l) for i, l in enumerate(leaves)]
         return jax.tree_util.tree_unflatten(treedef, q)
 
+    def _kernel_wire(self) -> bool:
+        """Whether the wire payload is produced by the Pallas sign kernels on
+        the flatten-once (rows, 1024) layout — the production wire format on
+        *both* backends (DenseComm simulates the exchange; ShardedComm ships
+        the packed pair through ``ppermute``).  Requires the compressor's
+        scale block to equal the kernel lane width so the kernel blocks are
+        identical to the per-leaf jnp oracle's blocks."""
+        from repro.kernels import ops as kops
+        return (self.config.packed_wire
+                and isinstance(self.compressor, SignCompressor)
+                and self.compressor.block == kops.LANE)
+
     def _use_packed(self) -> bool:
+        """Per-leaf jnp bit-packed wire: the fallback for sharded sign
+        compressors whose block width differs from the kernel lane."""
         return (self.config.packed_wire
                 and isinstance(self.compressor, SignCompressor)
                 and isinstance(self.comm, ShardedComm))
@@ -122,7 +137,38 @@ class CPDSGDM(PDSGDM):
         diff = tmap(lambda x, h: x.astype(jnp.float32) - h, params_new, xhat)
 
         new_state = dict(state)
-        if self._use_packed():
+        if self._kernel_wire():
+            # lines 7-9 on the flatten-once kernel layout: one Pallas pack,
+            # one (uint8, f32-scales) payload per neighbour exchange.
+            from repro.kernels import ops as kops
+            plan = kops.KernelPlan.for_tree(diff, worker_dim=True)
+            interp = self.config.kernel_interpret
+            packed, scales = kops.sign_pack(
+                plan.flatten(diff), counts=plan.row_counts(),
+                interpret=interp)
+            q_self = plan.unflatten(
+                kops.sign_unpack(packed, scales, interpret=interp),
+                dtype=jnp.float32)
+            new_state["xhat"] = tmap(lambda h, q: h + q, xhat, q_self)
+            if isinstance(self.comm, ShardedComm):
+                # ship only the rows that carry data: the wire bytes then
+                # equal the accounted Σ ceil(size/1024) blocks exactly
+                u = plan.used_rows
+                wire_p, wire_s = packed[..., :u, :], scales[..., :u, :]
+                nbrs = dict(state["xhat_nbrs"])
+                for (ax, sh, _w) in self.comm.nonself_shifts():
+                    k = self._key(ax, sh)
+                    q_recv = plan.unflatten(
+                        kops.sign_unpack(
+                            plan.pad_wire(
+                                self.comm._receive_from(wire_p, ax, sh)),
+                            plan.pad_wire(
+                                self.comm._receive_from(wire_s, ax, sh)),
+                            interpret=interp),
+                        dtype=jnp.float32)
+                    nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
+                new_state["xhat_nbrs"] = nbrs
+        elif self._use_packed():
             # lines 7-9 with bit-packed wire format (the TPU-native path).
             block = self.compressor.block
             leaves, treedef = jax.tree_util.tree_flatten(diff)
@@ -165,10 +211,92 @@ class CPDSGDM(PDSGDM):
 
         return params_new, new_state
 
+    # -- kernel round (flatten-once matrix domain) --------------------------------
+    @property
+    def kernel_comm_supported(self) -> bool:
+        """Matrix-domain comm needs the kernel wire format; other
+        compressors fall back to the tree comm at the round boundary."""
+        return self._kernel_wire()
+
+    def mat_state(self, plan, state) -> dict:
+        mats = super().mat_state(plan, state)
+        if self._kernel_wire():
+            mats["xhat"] = plan.flatten(state["xhat"])
+            if isinstance(self.comm, ShardedComm):
+                mats["xhat_nbrs"] = {k: plan.flatten(v)
+                                     for k, v in state["xhat_nbrs"].items()}
+        return mats
+
+    def unmat_state(self, plan, mats, state, step) -> dict:
+        new_state = super().unmat_state(plan, mats, state, step)
+        if "xhat" in mats:
+            new_state["xhat"] = plan.unflatten(mats["xhat"],
+                                               dtype=jnp.float32)
+        if "xhat_nbrs" in mats:
+            new_state["xhat_nbrs"] = {
+                k: plan.unflatten(v, dtype=jnp.float32)
+                for k, v in mats["xhat_nbrs"].items()}
+        return new_state
+
+    def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
+        """Alg. 2 lines 6-9 entirely on the kernel layout: consensus from
+        stored copies, one Pallas sign pack, the packed pair through the
+        wire (sliced to ``plan.used_rows`` so alignment padding never
+        ships), error-compensation updates — no tree rematerialization."""
+        from repro.kernels import ops as kops
+        assert plan is not None, "CPD-SGDM matrix comm needs the KernelPlan"
+        cfg = self.config
+        gamma = jnp.float32(cfg.gamma)
+        interp = cfg.kernel_interpret
+        xhat = mats["xhat"]
+
+        # line 6: consensus — zero communication (stored copies / dense W).
+        if isinstance(self.comm, ShardedComm):
+            mixhat = jnp.float32(self.comm.self_weight()) * xhat
+            for (ax, sh, w) in self.comm.nonself_shifts():
+                mixhat = mixhat + jnp.float32(w) * mats["xhat_nbrs"][
+                    self._key(ax, sh)]
+        else:
+            mixhat = self.comm.mix(xhat, r=r)
+        x_new = x_mat + gamma * (mixhat - xhat)
+
+        # lines 7-9: Q on the matrix, packed payload on the wire.
+        packed, scales = kops.sign_pack(x_new - xhat, counts=counts,
+                                        interpret=interp)
+        new_mats = dict(mats)
+        new_mats["xhat"] = xhat + kops.sign_unpack(packed, scales,
+                                                   interpret=interp)
+        if isinstance(self.comm, ShardedComm):
+            u = plan.used_rows
+            wire_p, wire_s = packed[..., :u, :], scales[..., :u, :]
+            nbrs = dict(mats["xhat_nbrs"])
+            for (ax, sh, _w) in self.comm.nonself_shifts():
+                k = self._key(ax, sh)
+                q_recv = kops.sign_unpack(
+                    plan.pad_wire(self.comm._receive_from(wire_p, ax, sh)),
+                    plan.pad_wire(self.comm._receive_from(wire_s, ax, sh)),
+                    interpret=interp)
+                nbrs[k] = nbrs[k] + q_recv
+            new_mats["xhat_nbrs"] = nbrs
+        return x_new, new_mats
+
     # -- comm-cost model --------------------------------------------------------------
     def bytes_per_comm_round(self, params, r: int = 0) -> int:
+        """Per-worker wire bytes for communication round ``r``.
+
+        Packed sign wire: the *exact* payload — per leaf,
+        ``ceil(size/block)`` blocks of ``block/8`` sign bytes + one f32
+        scale each (padding included), × the round's topology degree
+        (≈ 1/16.5 of raw f32, ≈ 1/15.5 of bf16).  Other compressors keep
+        the per-element ``wire_bits_per_element`` model."""
         from repro.core.gossip import gossip_bytes_per_round
-        bits = self.compressor.wire_bits_per_element(
+        comp = self.compressor
+        if self.config.packed_wire and isinstance(comp, SignCompressor):
+            payload = sum(
+                sign_wire_bytes(int(np.prod(l.shape)), comp.block)
+                for l in jax.tree_util.tree_leaves(params))
+            return self.comm.topology_at(r).degree * payload
+        bits = comp.wire_bits_per_element(
             jax.tree_util.tree_leaves(params)[0].dtype)
         return gossip_bytes_per_round(params, self.comm,
                                       bits_per_element=bits, r=r)

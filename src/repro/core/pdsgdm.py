@@ -18,12 +18,13 @@ decay folded into the gradient before the momentum update).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.gossip import CommBackend
+from repro.core.gossip import CommBackend, DenseComm
 
 __all__ = ["PDSGDMConfig", "PDSGDM"]
 
@@ -40,7 +41,13 @@ class PDSGDMConfig:
     weight_decay: float = 0.0
     nesterov: bool = False           # beyond-paper option (off by default)
     lr_schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
-    use_kernel: bool = False         # fused Pallas momentum update
+    # Pallas execution path: the fused round runs on the flatten-once
+    # (rows, 1024) kernel layout (momentum scan + gossip mix + CPD's sign
+    # wire all on one matrix) — the recommended production configuration.
+    use_kernel: bool = False
+    # None → repro.kernels.default_interpret() (interpret off-TPU); tests
+    # and benchmarks may force it either way.
+    kernel_interpret: Optional[bool] = None
 
     def lr(self, step):
         if self.lr_schedule is None:
@@ -82,7 +89,8 @@ class PDSGDM:
             from repro.kernels import ops as kops
             new_params, new_m = kops.momentum_update_tree(
                 params, state["m"], grads, mu=cfg.mu, lr=lr,
-                weight_decay=cfg.weight_decay, nesterov=cfg.nesterov)
+                weight_decay=cfg.weight_decay, nesterov=cfg.nesterov,
+                interpret=cfg.kernel_interpret)
         else:
             def upd(x, m, g):
                 g32 = g.astype(jnp.float32) + wd * x.astype(jnp.float32)
@@ -140,7 +148,7 @@ class PDSGDM:
 
     # -- fused round (the canonical hot path) -----------------------------------
     def round(self, state, params, grads_fn, batches, *,
-              local_step=None, comm_round=None):
+              local_step=None, comm_round=None, gossip=True):
         """One whole round, fused: ``lax.scan`` of p local steps then exactly
         one unconditional gossip round — no per-step ``lax.cond``, no per-step
         Python dispatch.
@@ -149,11 +157,19 @@ class PDSGDM:
         leading scan dim of length p.  ``local_step``/``comm_round`` default
         to the optimizer's own methods (DenseComm simulation); the sharded
         runtime passes ``shard_map``-wrapped versions so the identical scan
-        structure drives both backends.
+        structure drives both backends.  ``gossip=False`` runs a fused tail
+        of local steps only (a run whose length is not a multiple of p).
+
+        With ``use_kernel`` and no injected overrides the round executes on
+        the flatten-once Pallas layout instead (:meth:`kernel_round`).
 
         Returns ``(params, state, losses)`` with ``losses`` stacked over the
         p local steps.
         """
+        if (self.config.use_kernel and local_step is None
+                and comm_round is None):
+            return self.kernel_round(state, params, grads_fn, batches,
+                                     gossip=gossip)
         if local_step is None:
             local_step = self.local_step
         if comm_round is None:
@@ -166,7 +182,121 @@ class PDSGDM:
             return (params, state), loss
 
         (params, state), losses = jax.lax.scan(body, (params, state), batches)
-        params, state = comm_round(state, params)
+        if gossip:
+            params, state = comm_round(state, params)
+        return params, state, losses
+
+    # -- kernel round: flatten once, scan + gossip on the (rows, 1024) layout --
+    @property
+    def kernel_comm_supported(self) -> bool:
+        """Whether ``comm_round_mat`` can run this optimizer's gossip on the
+        kernel matrix (PD-SGDM: always — worst case it falls back to
+        ``comm.mix`` *on the matrix*, still flatten-once)."""
+        return True
+
+    def mat_state(self, plan, state) -> dict:
+        """Flatten the per-element optimizer state trees into kernel mats."""
+        return {"m": plan.flatten(state["m"])}
+
+    def unmat_state(self, plan, mats, state, step) -> dict:
+        new_state = dict(state)
+        new_state["m"] = plan.unflatten(mats["m"], dtype=jnp.float32)
+        new_state["step"] = step
+        return new_state
+
+    def local_step_mat(self, x_mat, mats, g_mat, step):
+        """One fused momentum update on the kernel layout (Alg. 1 lines 2-4)."""
+        from repro.kernels import ops as kops
+        cfg = self.config
+        x_new, m_new = kops.momentum_update_mat(
+            x_mat, mats["m"], g_mat, mu=cfg.mu,
+            lr=cfg.lr(step).astype(jnp.float32),
+            weight_decay=cfg.weight_decay, nesterov=cfg.nesterov,
+            interpret=cfg.kernel_interpret)
+        return x_new, {**mats, "m": m_new}
+
+    def _shift_view_mat(self, mat, ax: int, sh: int):
+        """The matrix each worker receives from its (ax, sh) neighbour."""
+        if isinstance(self.comm, DenseComm):
+            return self.comm._roll(mat, ax, sh)
+        return self.comm._receive_from(mat, ax, sh)
+
+    def _gossip_mat(self, x_mat, r):
+        """Gossip mix on the kernel layout.  Static shift-structured graphs
+        run the fused Pallas AXPY per topology axis (mirroring
+        ``ShardedComm._mix_with``'s Kronecker factorization); everything
+        else (schedules, ``complete``, perm graphs) falls back to
+        ``comm.mix`` applied to the matrix — still flatten-once."""
+        from repro.kernels import ops as kops
+        top = self.comm.topology
+        kernel_ok = ((self.comm.schedule is None or self.comm.period == 1)
+                     and not top.perms
+                     and top.name not in ("complete", "disconnected"))
+        if not kernel_ok:
+            return self.comm.mix(x_mat, r=r)
+        per_axis: dict = {}
+        for (ax, sh, w) in top.shifts:
+            per_axis.setdefault(ax, []).append((sh, w))
+        y = x_mat
+        for ax in sorted(per_axis):
+            views, weights = [], []
+            for (sh, w) in per_axis[ax]:
+                views.append(y if sh == 0 else self._shift_view_mat(y, ax, sh))
+                weights.append(w)
+            y = kops.gossip_mix_mat(tuple(views), tuple(weights),
+                                    interpret=self.config.kernel_interpret)
+        return y
+
+    def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
+        """One gossip round on the kernel layout (``counts``/``plan`` unused
+        here; CPD-SGDM's override feeds them to the sign kernel and the
+        wire-extent slicing)."""
+        return self._gossip_mat(x_mat, r), mats
+
+    def kernel_round(self, state, params, grads_fn, batches, *, gossip=True,
+                     local_step_mat=None, comm_round_mat=None):
+        """The fused round on the flatten-once kernel layout.
+
+        Params and the per-element state trees are flattened into the
+        canonical (rows, 1024) matrices **once**, the ``lax.scan`` of p
+        momentum updates runs matrix-to-matrix (the tree form is only
+        rematerialized to evaluate ``grads_fn``), the gossip mix — and
+        CPD-SGDM's sign pack/unpack — operate on the same layout, and the
+        trees are rebuilt once at the round boundary.  Master copies stay
+        f32 across the round (leaf dtypes are restored at unflatten).
+
+        ``local_step_mat``/``comm_round_mat`` default to the optimizer's own
+        matrix methods (DenseComm simulation); the sharded runtime passes
+        ``shard_map``-wrapped versions, exactly like :meth:`round`.
+        """
+        from repro.kernels import ops as kops
+        plan = kops.KernelPlan.for_tree(params, worker_dim=True)
+        if local_step_mat is None:
+            local_step_mat = self.local_step_mat
+        if comm_round_mat is None:
+            comm_round_mat = functools.partial(self.comm_round_mat,
+                                               plan=plan)
+        x_mat = plan.flatten(params)
+        mats = self.mat_state(plan, state)
+
+        def body(carry, batch):
+            x_mat, mats, step = carry
+            loss, grads = grads_fn(plan.unflatten(x_mat), batch)
+            x_mat, mats = local_step_mat(x_mat, mats, plan.flatten(grads),
+                                         step)
+            return (x_mat, mats, step + 1), loss
+
+        (x_mat, mats, step), losses = jax.lax.scan(
+            body, (x_mat, mats, state["step"]), batches)
+
+        if gossip and self.kernel_comm_supported:
+            r = step // self.config.p - 1
+            x_mat, mats = comm_round_mat(x_mat, mats, plan.row_counts(), r)
+        params = plan.unflatten(x_mat)
+        state = self.unmat_state(plan, mats, state, step)
+        if gossip and not self.kernel_comm_supported:
+            # e.g. CPD with a non-kernel compressor: tree comm at the boundary
+            params, state = self.comm_round(state, params)
         return params, state, losses
 
     # -- comm-cost model ----------------------------------------------------------

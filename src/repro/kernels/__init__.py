@@ -5,6 +5,19 @@ sign_compress  — blockwise scaled-sign + bit-pack (CPD-SGDM wire format)
 gossip_mix     — fused W-row neighbour AXPY after ppermute
 
 Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling; ``ops.py``
-holds the jit'd pytree wrappers (interpret-mode on CPU); ``ref.py`` the
-pure-jnp oracles used by the allclose sweeps in tests/test_kernels.py.
+holds the ``KernelPlan`` flatten-once layout and the jit'd pytree wrappers
+(interpret-mode on CPU); ``ref.py`` the pure-jnp oracles used by the
+allclose sweeps in tests/test_kernels.py.
 """
+
+
+def default_interpret() -> bool:
+    """Whether Pallas calls should run in interpret mode *right now*.
+
+    Evaluated lazily (not pinned at import time) so backend selection that
+    happens after this package is imported — ``jax.config`` updates in
+    tests, subprocess runners forcing host devices — is respected.  Every
+    kernel entry point also takes an explicit ``interpret=`` override.
+    """
+    import jax
+    return jax.default_backend() != "tpu"

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 __all__ = ["gossip_mix", "LANE", "BLOCK_ROWS"]
 
 LANE = 1024
@@ -30,8 +32,10 @@ def _kernel(*refs, weights):
 
 
 @functools.partial(jax.jit, static_argnames=("weights", "interpret"))
-def gossip_mix(tensors, *, weights, interpret: bool = True):
+def gossip_mix(tensors, *, weights, interpret: bool | None = None):
     """tensors: tuple of (rows, 1024) f32; weights: tuple of floats."""
+    if interpret is None:
+        interpret = default_interpret()
     assert len(tensors) == len(weights) >= 1
     rows, lane = tensors[0].shape
     assert lane == LANE and rows % BLOCK_ROWS == 0, (rows, lane)

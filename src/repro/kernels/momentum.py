@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 __all__ = ["momentum_update", "LANE", "BLOCK_ROWS"]
 
 LANE = 1024
@@ -42,8 +44,10 @@ def _kernel(x_ref, m_ref, g_ref, lr_ref, x_out, m_out, *, mu, wd, nesterov):
 @functools.partial(jax.jit, static_argnames=("mu", "wd", "nesterov",
                                              "interpret"))
 def momentum_update(x, m, g, lr, *, mu: float, wd: float = 0.0,
-                    nesterov: bool = False, interpret: bool = True):
+                    nesterov: bool = False, interpret: bool | None = None):
     """x, m, g: (rows, LANE) float32; lr: scalar.  Returns (x_new, m_new)."""
+    if interpret is None:
+        interpret = default_interpret()
     rows, lane = x.shape
     assert lane == LANE and rows % BLOCK_ROWS == 0, (rows, lane)
     grid = (rows // BLOCK_ROWS,)

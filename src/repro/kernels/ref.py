@@ -7,8 +7,8 @@ import jax.numpy as jnp
 from repro.core.compression import sign_pack as _sign_pack
 from repro.core.compression import sign_unpack as _sign_unpack
 
-__all__ = ["momentum_update_ref", "sign_pack_ref", "sign_unpack_ref",
-           "gossip_mix_ref"]
+__all__ = ["momentum_update_ref", "sign_pack_ref", "sign_pack_rows_ref",
+           "sign_unpack_ref", "gossip_mix_ref"]
 
 
 def momentum_update_ref(x, m, g, lr, *, mu, wd=0.0, nesterov=False):
@@ -25,6 +25,25 @@ def sign_pack_ref(x, block: int = 1024):
     rows = x.shape[0]
     packed, scales = jax.vmap(lambda r: _sign_pack(r, block))(x)
     return packed.reshape(rows, block // 8), scales.reshape(rows)
+
+
+def sign_pack_rows_ref(x, counts=None, block: int = 1024):
+    """Counts-aware matrix oracle for ``sign_pack_pallas``.
+
+    Same padding-masked scale the per-leaf oracle computes — ``counts`` is
+    each row's true length (``KernelPlan.row_counts``); padding entries are
+    assumed zero, exactly as the flatten-once layout guarantees.
+    """
+    rows = x.shape[0]
+    x = x.astype(jnp.float32)
+    if counts is None:
+        counts = jnp.full((rows,), float(block), jnp.float32)
+    counts = jnp.asarray(counts, jnp.float32).reshape(rows)
+    scales = jnp.sum(jnp.abs(x), axis=1) / jnp.maximum(counts, 1.0)
+    bits = (x >= 0).astype(jnp.uint8).reshape(rows, block // 8, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    packed = jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+    return packed, scales.reshape(rows, 1)
 
 
 def sign_unpack_ref(packed, scales, block: int = 1024):

@@ -142,7 +142,7 @@ def _make_optimizer(run: RunCfg, comm):
     return make_optimizer(
         o.name, comm, eta=o.eta, mu=o.mu, p=o.p, gamma=o.gamma,
         weight_decay=o.weight_decay, compressor=comp,
-        use_kernel=o.use_kernel)
+        use_kernel=o.use_kernel, kernel_interpret=o.kernel_interpret)
 
 
 # --------------------------------------------------------------------------- train
@@ -224,21 +224,45 @@ def build_train(run: RunCfg, mesh, shape: InputShape,
         params, state = opt_full_sh(params, state, grads)
         return params, state, losses.mean()
 
-    def train_round(params, state, batches):
-        """p local momentum steps then exactly one gossip round.
+    def gfn(p_, b):
+        (losses, _mets), grads = grad_fn(p_, b)
+        return losses.mean(), grads
 
-        The scan structure lives in ``opt.round``; only the optimizer calls
-        are shard_mapped into the manual domain (the forward/backward stays
-        in the GSPMD domain).
-        """
-        def gfn(p_, b):
-            (losses, _mets), grads = grad_fn(p_, b)
-            return losses.mean(), grads
+    if run.optim.use_kernel and opt.kernel_comm_supported:
+        # kernel execution path: the whole round runs on the flatten-once
+        # (n_workers, rows, 1024) matrix — flatten/unflatten happen in the
+        # GSPMD domain (the worker dim stays sharded over the worker axes;
+        # inside shard_map each device sees its (1, rows, 1024) shard), and
+        # only the matrix-domain optimizer calls enter the manual domain.
+        from repro.kernels import ops as kops
+        plan = kops.KernelPlan.for_tree(params_struct, worker_dim=True)
+        mspec = P(layout.worker_axes or None, None, None)
+        opt_local_mat_sh = smap(opt.local_step_mat,
+                                in_specs=(mspec, mspec, mspec, P()),
+                                out_specs=(mspec, mspec))
+        opt_comm_mat_sh = smap(functools.partial(opt.comm_round_mat,
+                                                 plan=plan),
+                               in_specs=(mspec, mspec, P(), P()),
+                               out_specs=(mspec, mspec))
 
-        return opt.round(
-            state, params, gfn, batches,
-            local_step=lambda s, p_, g: opt_local_sh(p_, s, g),
-            comm_round=lambda s, p_: opt_comm_sh(p_, s))
+        def train_round(params, state, batches):
+            """p momentum steps + one gossip, all on the kernel layout."""
+            return opt.kernel_round(
+                state, params, gfn, batches,
+                local_step_mat=opt_local_mat_sh,
+                comm_round_mat=opt_comm_mat_sh)
+    else:
+        def train_round(params, state, batches):
+            """p local momentum steps then exactly one gossip round.
+
+            The scan structure lives in ``opt.round``; only the optimizer
+            calls are shard_mapped into the manual domain (the forward/
+            backward stays in the GSPMD domain).
+            """
+            return opt.round(
+                state, params, gfn, batches,
+                local_step=lambda s, p_, g: opt_local_sh(p_, s, g),
+                comm_round=lambda s, p_: opt_comm_sh(p_, s))
 
     round_batch_struct = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct((p_round,) + s.shape, s.dtype),

@@ -24,6 +24,10 @@ def main():
     ap.add_argument("--topology-schedule", default=None,
                     help="static|one_peer_exp|alt_axes|random_matching "
                          "(time-varying gossip graph)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run the fused round on the flatten-once Pallas "
+                         "kernel layout (recommended on TPU; interpret "
+                         "mode — the correctness harness — on CPU)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -60,6 +64,8 @@ def main():
         optim = dataclasses.replace(optim, p=args.p)
     if args.eta is not None:
         optim = dataclasses.replace(optim, eta=args.eta)
+    if args.use_kernel:
+        optim = dataclasses.replace(optim, use_kernel=True)
     parallel = run.parallel
     if args.topology:
         parallel = dataclasses.replace(parallel, topology=args.topology)
@@ -79,7 +85,8 @@ def main():
     pack = build_train(run, mesh, shape)
     n_w = pack.layout.n_workers
     print(f"arch={args.arch} optimizer={optim.name} p={optim.p} "
-          f"workers={n_w} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+          f"workers={n_w} kernel={optim.use_kernel} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     def batch_fn(t):
         return train_batch_arrays(

@@ -133,10 +133,10 @@ class SimTrainer:
             return params, state, losses.reshape(-1)
 
         def tail_fn(params, state, batches):
-            """Trailing steps past the last full round: local steps only."""
+            """Trailing steps past the last full round: local steps only
+            (``gossip=False`` keeps the kernel flatten-once path eligible)."""
             params, state, losses = opt.round(
-                state, params, grads_fn, batches,
-                comm_round=lambda s, p: (p, s))
+                state, params, grads_fn, batches, gossip=False)
             return params, state, losses
 
         self._block = jax.jit(block_fn)

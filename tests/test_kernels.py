@@ -1,10 +1,17 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype/hyper-param sweeps."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/hyper-param sweeps,
+the flatten-once ``KernelPlan`` layout, and round-level equivalence of the
+kernel execution path against the jnp round."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import default_interpret, ops, ref
 from repro.kernels.gossip_mix import BLOCK_ROWS as GBR
 from repro.kernels.gossip_mix import gossip_mix
 from repro.kernels.momentum import BLOCK_ROWS as MBR
@@ -112,3 +119,296 @@ def test_pdsgdm_use_kernel_matches_jnp_path():
         outs.append(p2["w"])
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------- KernelPlan
+def _odd_trees():
+    """Oddly-shaped, mixed-dtype pytrees (scalar, ragged, >1-row leaves)."""
+    key = jax.random.PRNGKey(11)
+    yield {"a": _rand(key, (13, 17)),
+           "b": {"c": _rand(jax.random.fold_in(key, 1), (3,), jnp.bfloat16),
+                 "d": _rand(jax.random.fold_in(key, 2), (2, 5, 7))},
+           "e": jnp.float32(3.5)}
+    yield [_rand(key, (1024,)), _rand(jax.random.fold_in(key, 3), (1025,)),
+           _rand(jax.random.fold_in(key, 4), (300, 11), jnp.bfloat16)]
+    yield {"one": _rand(key, (2, 3, 5, 7, 2))}
+
+
+@pytest.mark.parametrize("i", range(3))
+def test_kernel_plan_roundtrip_property(i):
+    """flatten ∘ unflatten == identity (shapes, dtypes, values) for mixed
+    f32/bf16 and oddly-shaped leaves, with and without a worker dim."""
+    tree = list(_odd_trees())[i]
+    plan = ops.KernelPlan.for_tree(tree)
+    mat = plan.flatten(tree)
+    assert mat.shape == (plan.rows, 1024) and mat.dtype == jnp.float32
+    assert plan.rows % ops.PLAN_BLOCK_ROWS == 0
+    back = plan.unflatten(mat)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # stacked-worker variant: same per-worker layout, leading dim preserved
+    K = 3
+    wtree = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (K,) + jnp.shape(x)), tree)
+    wplan = ops.KernelPlan.for_tree(wtree, worker_dim=True)
+    wmat = wplan.flatten(wtree)
+    assert wmat.shape == (K, wplan.rows, 1024)
+    np.testing.assert_array_equal(np.asarray(wmat[0]), np.asarray(mat))
+    for a, b in zip(jax.tree_util.tree_leaves(wtree),
+                    jax.tree_util.tree_leaves(wplan.unflatten(wmat))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_kernel_plan_row_counts():
+    """Per-leaf row alignment: every leaf starts a fresh row; counts carry
+    the tail lengths and zero out pure alignment padding."""
+    tree = {"a": jnp.zeros((1500,)), "b": jnp.zeros((4,)),
+            "c": jnp.zeros((2048,))}
+    plan = ops.KernelPlan.for_tree(tree)
+    counts = np.asarray(plan.row_counts()).reshape(-1)
+    # a: rows 0-1 (1024, 476); b: row 2 (4); c: rows 3-4 (1024, 1024)
+    assert list(counts[:5]) == [1024.0, 476.0, 4.0, 1024.0, 1024.0]
+    assert (counts[5:] == 0).all()
+    assert plan.n_valid == 1500 + 4 + 2048
+
+
+# ------------------------------------------------- padding-scale regression
+def test_sign_pack_padded_tail_matches_oracle_bit_exact():
+    """Regression: the kernel's tail-block scale must equal the padding-
+    masked jnp oracle *bit-exactly* (it used to be deflated by
+    n_valid/1024 because the kernel averaged over the full row)."""
+    from repro.core import compression
+    n = 2 * 1024 + 300                       # not a multiple of 1024
+    x = _rand(jax.random.PRNGKey(3), (n,))
+    plan = ops.KernelPlan.for_tree({"w": x})
+    mat = plan.flatten({"w": x})
+    pk, sl = ops.sign_pack(mat, counts=plan.row_counts())
+    pr, sr = compression.sign_pack(x, 1024)  # the per-leaf oracle
+    np.testing.assert_array_equal(np.asarray(pk[:3]), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(sl[:3, 0]), np.asarray(sr))
+    assert (np.asarray(sl[3:]) == 0).all()   # alignment rows: scale 0
+    # and the full quantized value round-trips identically
+    q = plan.unflatten(ops.sign_unpack(pk, sl))["w"]
+    q_ref = compression.sign_unpack(pr, sr, n, (n,), jnp.float32, 1024)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    # counts-aware matrix oracle agrees with the kernel everywhere
+    pk2, sl2 = ref.sign_pack_rows_ref(mat, plan.row_counts())
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pk2))
+    np.testing.assert_array_equal(np.asarray(sl), np.asarray(sl2))
+
+
+def test_interpret_is_lazy_and_overridable():
+    """INTERPRET is no longer pinned at import: the default is a function
+    of the *current* backend, and every wrapper takes an override."""
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    params = {"w": _rand(jax.random.PRNGKey(0), (9, 5))}
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    g = jax.tree_util.tree_map(lambda x: 0.1 * x, params)
+    xa, _ = ops.momentum_update_tree(params, m, g, mu=0.9, lr=0.1,
+                                     interpret=True)
+    xb, _ = ops.momentum_update_tree(params, m, g, mu=0.9, lr=0.1,
+                                     interpret=None)
+    np.testing.assert_allclose(np.asarray(xa["w"]), np.asarray(xb["w"]),
+                               atol=1e-7)
+    out = ops.gossip_mix_tree((params, g), (0.5, 0.5), interpret=True)
+    want = jax.tree_util.tree_map(lambda a, b: 0.5 * a + 0.5 * b, params, g)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want["w"]),
+                               atol=1e-6)
+
+
+# --------------------------------------------------- round-level equivalence
+def _round_equiv(opt_factory, tol):
+    """use_kernel=True fused round == jnp fused round over 2 rounds."""
+    K, P = 4, 4
+    def params0():
+        key = jax.random.PRNGKey(0)
+        return {"w1": _rand(key, (K, 33, 65)),
+                "w2": _rand(jax.random.fold_in(key, 1), (K, 7)),
+                "w3": _rand(jax.random.fold_in(key, 2), (K, 2, 5, 11))}
+
+    def loss_fn(pp, b):
+        return 0.5 * sum(jnp.sum((l - b[0, 0]) ** 2)
+                         for l in jax.tree_util.tree_leaves(pp))
+
+    grad = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def grads_fn(params, batch):
+        losses, grads = grad(params, batch)
+        return losses.mean(), grads
+
+    batches = jnp.stack([
+        _rand(jax.random.fold_in(jax.random.PRNGKey(9), t), (K, 2, 3))
+        for t in range(P)])
+    outs = []
+    for use_kernel in (False, True):
+        opt = opt_factory(K, P, use_kernel)
+        params, state = params0(), None
+        state = opt.init(params)
+        roundj = jax.jit(lambda s, pp, bs: opt.round(s, pp, grads_fn, bs))
+        for _ in range(2):
+            params, state, losses = roundj(state, params, batches)
+        outs.append((params, state, losses))
+    (pa, sa, la), (pb, sb, lb) = outs
+    assert int(sb["step"]) == 2 * P
+    for a, b in zip(jax.tree_util.tree_leaves((pa, sa["m"], la)),
+                    jax.tree_util.tree_leaves((pb, sb["m"], lb))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol)
+    if "xhat" in sa:
+        for a, b in zip(jax.tree_util.tree_leaves(sa["xhat"]),
+                        jax.tree_util.tree_leaves(sb["xhat"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=tol)
+
+
+def test_kernel_round_equals_jnp_round_dense_pdsgdm():
+    from repro.core import PDSGDM, PDSGDMConfig
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import ring
+    _round_equiv(
+        lambda K, P, uk: PDSGDM(
+            PDSGDMConfig(eta=0.05, mu=0.9, p=P, weight_decay=1e-4,
+                         use_kernel=uk), DenseComm(ring(K))),
+        tol=2e-5)
+
+
+def test_kernel_round_equals_jnp_round_dense_cpdsgdm_packed():
+    """CPD-SGDM: the kernel wire (Pallas pack on the flatten-once layout)
+    must reproduce the per-leaf jnp Q — per-leaf row alignment makes the
+    sign blocks identical, so xhat trajectories coincide."""
+    from repro.core import CPDSGDM, CPDSGDMConfig, SignCompressor
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import ring
+    _round_equiv(
+        lambda K, P, uk: CPDSGDM(
+            CPDSGDMConfig(eta=0.05, mu=0.9, p=P, gamma=0.4,
+                          weight_decay=1e-4, use_kernel=uk),
+            DenseComm(ring(K)), SignCompressor()),
+        tol=2e-5)
+
+
+def test_kernel_round_csgdm_and_fallback_compressor():
+    """The baselines ride the kernel round too: C-SGDM (grad all-reduce on
+    the matrix, identity comm) and CPD with a non-kernel compressor (tree
+    comm fallback at the round boundary) both match their jnp rounds."""
+    from repro.core import (CPDSGDM, CPDSGDMConfig, SignCompressor,
+                            make_optimizer)
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import ring
+    K = 4
+    params = {"w": _rand(jax.random.PRNGKey(0), (K, 130))}
+
+    def grads_fn(pp, b):
+        return jnp.float32(0.0), jax.tree_util.tree_map(lambda x: 0.3 * x, pp)
+
+    outs = []
+    for uk in (False, True):
+        opt = make_optimizer("c_sgdm", DenseComm(ring(K)), eta=0.05, mu=0.9,
+                             use_kernel=uk)
+        st = opt.init(params)
+        p1, _, _ = jax.jit(lambda s, pp, bs: opt.round(
+            s, pp, grads_fn, bs))(st, params, jnp.zeros((1, 1)))
+        outs.append(np.asarray(p1["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+
+    outs = []
+    for uk in (False, True):
+        opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=2, gamma=0.4,
+                                    use_kernel=uk),
+                      DenseComm(ring(K)), SignCompressor(block=64))
+        assert not opt.kernel_comm_supported
+        st = opt.init(params)
+        p1, s1, _ = jax.jit(lambda s, pp, bs: opt.round(
+            s, pp, grads_fn, bs))(st, params, jnp.zeros((2, 1)))
+        outs.append((np.asarray(p1["w"]), np.asarray(s1["xhat"]["w"])))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-5)
+    np.testing.assert_allclose(outs[0][1], outs[1][1], atol=1e-5)
+
+
+def test_kernel_round_tail_no_gossip():
+    """gossip=False (the trainer's fused tail) skips comm on the kernel
+    path exactly as the jnp path does."""
+    from repro.core import PDSGDM, PDSGDMConfig
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import ring
+    K = 4
+    params = {"w": _rand(jax.random.PRNGKey(0), (K, 33, 5))}
+
+    def grads_fn(pp, b):
+        return jnp.float32(0.0), jax.tree_util.tree_map(lambda x: 0.3 * x, pp)
+
+    batches = jnp.zeros((2, 1))
+    outs = []
+    for uk in (False, True):
+        opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=4, use_kernel=uk),
+                     DenseComm(ring(K)))
+        st = opt.init(params)
+        p1, s1, _ = jax.jit(lambda s, pp, bs: opt.round(
+            s, pp, grads_fn, bs, gossip=False))(st, params, batches)
+        assert int(s1["step"]) == 2
+        outs.append(p1["w"])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               atol=1e-5)
+
+
+_SCRIPT_SHARDED_KERNEL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    # tp=1 mesh: the kernel layout's sign blocks (full per-worker leaves)
+    # coincide with the per-device tree blocks, so the equivalence is tight
+    # even for CPD-SGDM's compressed wire.
+    for opt_name in ["pd_sgdm", "cpd_sgdm"]:
+        finals = []
+        for uk in (False, True):
+            run = RunCfg(model=mcfg,
+                         parallel=ParallelCfg(profile="A", remat="none"),
+                         optim=OptimCfg(name=opt_name, eta=0.05, mu=0.9, p=3,
+                                        weight_decay=1e-4, use_kernel=uk))
+            mesh = make_debug_mesh(8, 1)
+            pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+            K = pack.layout.n_workers
+            batches = [train_batch_arrays(mcfg, K, 1, 16,
+                       jax.random.fold_in(jax.random.PRNGKey(1), t))
+                       for t in range(3)]
+            params, state = pack.init_fn(jax.random.PRNGKey(0))
+            rb = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+            for _ in range(2):
+                params, state, losses = pack.train_round(params, state, rb)
+            finals.append(jax.tree_util.tree_map(np.asarray, (params, state)))
+        for a, b in zip(jax.tree_util.tree_leaves(finals[0]),
+                        jax.tree_util.tree_leaves(finals[1])):
+            np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)
+        print("KERNEL_ROUND_EQ_OK", opt_name)
+""")
+
+
+def _run_sub(script, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    if env_extra:
+        env.update(env_extra)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_kernel_round_equals_jnp_round_sharded():
+    """use_kernel=True TrainPack.train_round == the jnp tree round on the
+    ShardedComm backend (ppermute gossip, CPD's packed kernel wire)."""
+    out = _run_sub(_SCRIPT_SHARDED_KERNEL)
+    assert "KERNEL_ROUND_EQ_OK pd_sgdm" in out
+    assert "KERNEL_ROUND_EQ_OK cpd_sgdm" in out
