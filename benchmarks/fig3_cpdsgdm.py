@@ -14,7 +14,9 @@ def main():
         ("cpd_sgdm_p4_sign", make_opt("cpd_sgdm", p=4,
                                       compressor=SignCompressor(block=64))),
         ("cpd_sgdm_p4_qsgd4bit", make_opt("cpd_sgdm", p=4,
-                                          compressor=QSGDCompressor(levels=8))),
+                                          # levels=7 is the 4-bit wire; 8
+                                          # would round up to 8 bits/elem
+                                          compressor=QSGDCompressor(levels=7))),
         ("cpd_sgdm_p4_top10pct", make_opt("cpd_sgdm", p=4, gamma=0.2,
                                           compressor=TopKCompressor(
                                               fraction=0.1))),

@@ -14,6 +14,8 @@ Sections
   kernels   Pallas kernel microbenchmarks (interpret mode) vs jnp references
   kernel_path  per-leaf jnp round vs per-step kernel vs flatten-once fused
                round (interpret-parity layout comparison)
+  wire      bytes/round and round-time per wire codec on the fused path
+            (also writes its own BENCH_wire_codecs.json when standalone)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -57,7 +59,7 @@ import sys
 import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
-            "kernels", "kernel_path", "roofline"]
+            "kernels", "kernel_path", "wire", "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -110,6 +112,9 @@ def main() -> None:
     if "kernel_path" in want:
         from benchmarks import kernel_path
         kernel_path.main()
+    if "wire" in want:
+        from benchmarks import wire_codecs
+        wire_codecs.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

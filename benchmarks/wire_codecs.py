@@ -1,0 +1,126 @@
+"""Wire-codec benchmark: bytes/round and round-time per codec on the
+fused path.
+
+One CPD-SGDM fused round (p local momentum steps + consensus + compressed
+wire) is driven over a many-leaf ragged parameter tree with each wire
+codec in turn.  Two numbers per codec:
+
+  * ``bytes_per_round``  — the exact accounted (≡ shipped) payload bytes
+    per worker per gossip round, from ``opt.bytes_per_comm_round``; the
+    ``x_bf16`` derived field is the reduction vs a bf16 full-precision
+    wire of the same tree.
+  * ``rounds_per_s``     — wall-clock fused rounds/sec on this host.  The
+    kernel-wire codecs (sign/topk/qsgd at block 1024) execute their
+    Pallas pack in interpret mode on CPU, so absolute times carry the
+    emulation overhead (see benchmarks/kernel_path.py); the bytes column
+    is host-independent.
+
+Standalone runs write ``benchmarks/BENCH_wire_codecs.json`` (same row
+schema as ``benchmarks/run.py``); under ``python -m benchmarks.run`` the
+rows also land in the main ``BENCH_<tag>.json``.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor,
+                        QSGDCompressor, RandKCompressor, SignCompressor,
+                        TopKCompressor)
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+
+K = 4
+P = 4
+REPEATS = 3
+ROUNDS = 8
+
+CODECS = [
+    ("identity", IdentityCompressor()),
+    ("sign", SignCompressor()),
+    ("topk", TopKCompressor(fraction=0.01)),
+    ("randk", RandKCompressor(fraction=0.01)),
+    ("qsgd", QSGDCompressor(levels=7)),
+]
+
+
+def _params():
+    """Many-leaf tree with ragged sizes (tail-padded blocks exercised)."""
+    key = jax.random.PRNGKey(0)
+    leaves = {}
+    for i, shape in enumerate(
+            [(257, 129), (64, 300), (1000,), (33, 65), (7, 11, 13),
+             (2048,), (129,), (301, 5)] * 2):
+        leaves[f"w{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i), (K,) + shape) * 0.1
+    return leaves
+
+
+def _grads_fn(params, batch):
+    grads = jax.tree_util.tree_map(lambda x: 0.3 * x + batch, params)
+    return jnp.zeros(()), grads
+
+
+def _time_rounds(round_fn, params, state, batches):
+    def run():
+        p_, s_ = params, state
+        for _ in range(ROUNDS):
+            p_, s_, _losses = round_fn(s_, p_, batches)
+        jax.block_until_ready(p_)
+    run()
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return ROUNDS / best
+
+
+def main():
+    results = {}
+    params = _params()
+    per_worker = jax.tree_util.tree_map(lambda x: x[0], params)
+    n_elems = sum(l.size for l in jax.tree_util.tree_leaves(per_worker))
+    deg = ring(K).degree
+    bf16_baseline = deg * n_elems * 2
+    batches = jnp.zeros((P, 1))
+    for name, comp in CODECS:
+        opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=P, gamma=0.4,
+                                    weight_decay=1e-4),
+                      DenseComm(ring(K)), comp)
+        round_fn = jax.jit(
+            lambda s, pp, bs, o=opt: o.round(s, pp, _grads_fn, bs))
+        rps = _time_rounds(round_fn, params, opt.init(params), batches)
+        bpr = opt.bytes_per_comm_round(per_worker)
+        results[name] = (bpr, rps)
+        csv_row(f"wire_codecs/{name}", 1e6 / rps,
+                f"bytes_per_round={bpr};x_bf16={bf16_baseline / bpr:.2f};"
+                f"rounds_per_s={rps:.2f}")
+    return results
+
+
+def _write_json(results) -> str:
+    from benchmarks.common import collected_rows
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_wire_codecs.json")
+    rows = [r for r in collected_rows() if r["name"].startswith("wire_codecs/")]
+    doc = {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "sections": ["wire_codecs"],
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    res = main()
+    print(f"bench_json,0.0,path={os.path.relpath(_write_json(res))}")

@@ -149,7 +149,15 @@ class OptimCfg:
     p: int = 4
     gamma: float = 0.4
     weight_decay: float = 1e-4
-    compressor: str = "sign"        # for cpd_sgdm / choco
+    # --- wire codec (cpd_sgdm / choco): which δ-contraction ships, and its
+    # shape knobs.  Every named compressor has a first-class wire format
+    # (repro.core.wire): sign → packed bits + scales, topk → (idx, val)
+    # slots, randk → values only (indices key-derived), qsgd → uintN
+    # levels + norms.  Irrelevant knobs are ignored per operator.
+    compressor: str = "sign"        # identity | sign | topk | randk | qsgd
+    compressor_block: int = 1024    # sign/topk/qsgd block (1024 = kernel lane)
+    compressor_fraction: float = 0.01   # topk / randk kept fraction
+    compressor_levels: int = 7      # qsgd levels (7 -> 4-bit wire)
     # Pallas execution path: run the fused round on the flatten-once
     # (rows, 1024) kernel layout — momentum scan, gossip mix and CPD's
     # packed sign wire in one layout, flattened once per round.  The

@@ -6,7 +6,7 @@ Public API::
                             PDSGDM, PDSGDMConfig, CPDSGDM, CPDSGDMConfig,
                             make_optimizer)
 """
-from repro.core import schedules, topology
+from repro.core import schedules, topology, wire
 from repro.core.baselines import CSGDM, choco_sgd, d_sgd, make_optimizer, pd_sgd
 from repro.core.compression import (Compressor, IdentityCompressor,
                                     QSGDCompressor, RandKCompressor,
@@ -17,13 +17,15 @@ from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.topology import (Topology, TopologySchedule, make_schedule,
                                  make_topology, spectral_gap)
+from repro.core.wire import WireCodec, make_codec
 
 __all__ = [
-    "topology", "schedules",
+    "topology", "schedules", "wire",
     "Topology", "TopologySchedule", "make_topology", "make_schedule",
     "spectral_gap",
     "Compressor", "IdentityCompressor", "SignCompressor", "TopKCompressor",
     "RandKCompressor", "QSGDCompressor", "make_compressor", "contraction_ratio",
+    "WireCodec", "make_codec",
     "CommBackend", "DenseComm", "ShardedComm",
     "PDSGDM", "PDSGDMConfig", "CPDSGDM", "CPDSGDMConfig",
     "CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer",

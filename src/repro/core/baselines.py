@@ -7,7 +7,9 @@
 * **D-SGD**  [Lian et al. '17] — gossip every step, no momentum.
 * **PD-SGD** [Li et al. '19]  — periodic gossip, no momentum.
 * **CHOCO-SGD** [Koloskova et al. '19] — compressed gossip every step,
-  no momentum, no periodicity.
+  no momentum, no periodicity.  Built on CPD-SGDM's comm round, so it
+  ships the real wire-codec payload (``repro.core.wire``) for *every*
+  compression operator on both backends — same bytes, same accounting.
 """
 from __future__ import annotations
 

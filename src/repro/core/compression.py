@@ -3,10 +3,13 @@
 An operator ``Q`` is a δ-contraction if ``‖x − Q(x)‖² ≤ (1 − δ)‖x‖²`` for some
 δ ∈ (0, 1].  CPD-SGDM (Alg. 2) sends ``q = Q(x_{t+1} − x̂_t)`` over the wire.
 
-Everything here is pure ``jnp`` and doubles as the oracle for the Pallas
-``sign_compress`` kernel (see ``repro.kernels.ref``).  The sign operator uses
-*blockwise* scales and 8-signs-per-byte bit packing so that the simulated
-semantics, the kernel semantics, and the bytes-on-wire accounting all agree.
+Every operator is paired with a :class:`~repro.core.wire.WireCodec` — the
+concrete pack/unpack of its on-the-wire payload — and ``apply`` is defined
+as the codec round-trip ``unpack ∘ pack``, so the simulated semantics, the
+kernel semantics, and the bytes-on-wire accounting agree *by construction*
+for all five operators (not just sign).  Operators are *blockwise* (blocks
+of :data:`SIGN_BLOCK` elements by default) so the flatten-once kernel
+layout's rows coincide with the per-leaf blocks.
 
 All operators are deterministic given the PRNG key; stochastic ones (rand-k)
 thread the key explicitly so every worker can reproduce its neighbour's
@@ -107,16 +110,24 @@ def contraction_ratio(x: jnp.ndarray, qx: jnp.ndarray) -> jnp.ndarray:
 class Compressor:
     """Base δ-contraction operator.
 
-    ``apply(x, key)`` returns Q(x) with the same shape/dtype as x.
-    ``wire_bits_per_element`` is the on-the-wire cost model used by the
-    comm-cost accounting (Fig. 2 reproduction) and by the packed sharded
-    exchange where applicable.
+    ``apply(x, key)`` returns Q(x) with the same shape/dtype as x — it is
+    defined as ``unpack ∘ pack`` of the paired wire codec
+    (``repro.core.wire.make_codec``), so the simulated math and the bytes
+    on the wire can never disagree.  ``wire_bits_per_element`` is the
+    per-element *rate model* (Fig. 2 curves); ``wire_bytes`` is the exact
+    payload size, taken from the codec's array shapes.
     """
 
     name: str = "identity"
 
+    def _codec(self):
+        from repro.core.wire import make_codec   # lazy: wire imports us
+        return make_codec(self)
+
     def apply(self, x: jnp.ndarray, key: jax.Array | None = None) -> jnp.ndarray:
-        raise NotImplementedError
+        codec = self._codec()
+        return codec.unpack(codec.pack(x, key), x.size, x.shape, x.dtype,
+                            key=key)
 
     def wire_bits_per_element(self, dtype=jnp.float32) -> float:
         raise NotImplementedError
@@ -126,7 +137,16 @@ class Compressor:
         raise NotImplementedError
 
     def wire_bytes(self, x: jnp.ndarray) -> int:
-        return int(np.ceil(x.size * self.wire_bits_per_element(x.dtype) / 8.0))
+        """Exact shipped bytes for one leaf: the summed ``nbytes`` of the
+        codec's wire payload (falls back to the per-element rate model for
+        compressors without a codec)."""
+        from repro.core.wire import make_codec
+        try:
+            codec = make_codec(self)
+        except TypeError:
+            return int(np.ceil(
+                x.size * self.wire_bits_per_element(x.dtype) / 8.0))
+        return codec.wire_bytes(x.size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +158,11 @@ class IdentityCompressor(Compressor):
 
     def wire_bits_per_element(self, dtype=jnp.float32):
         return float(jnp.dtype(dtype).itemsize * 8)
+
+    def wire_bytes(self, x: jnp.ndarray) -> int:
+        # shipping *this tensor* uncompressed is dtype-faithful; note the
+        # codec (CPD's wire) ships the f32 drift instead (4 bytes/elem)
+        return int(x.size * jnp.dtype(x.dtype).itemsize)
 
     def delta_lower_bound(self, d):
         return 1.0
@@ -168,81 +193,81 @@ class SignCompressor(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class TopKCompressor(Compressor):
-    """Keep the top ``fraction`` of entries by magnitude.  δ = k/d exactly."""
+    """Keep the top ``fraction`` of entries by magnitude, *blockwise*.
+
+    Leaves are processed in blocks of ``block`` elements (matching the sign
+    operator and the kernel row layout, so the kernel wire blocks are
+    identical to this per-leaf semantics); each block keeps its own
+    ``ceil(fraction · d_b)`` largest entries.  For leaves with d ≤ block
+    this coincides with global top-k.  δ ≥ fraction (per-block k/d ≥ f).
+    Wire: (int32 idx, f32 val) per kept slot — see
+    ``repro.core.wire.TopKCodec``.
+    """
 
     name: str = "topk"
     fraction: float = 0.01
+    block: int = SIGN_BLOCK
 
     def _k(self, d: int) -> int:
         return max(1, int(np.ceil(self.fraction * d)))
 
-    def apply(self, x, key=None):
-        flat = x.reshape(-1)
-        k = self._k(flat.shape[0])
-        _, idx = jax.lax.top_k(jnp.abs(flat), k)
-        mask = jnp.zeros_like(flat).at[idx].set(1.0)
-        return (flat * mask).reshape(x.shape)
-
     def wire_bits_per_element(self, dtype=jnp.float32):
-        # k values + k int32 indices
-        return self.fraction * (jnp.dtype(dtype).itemsize * 8 + 32)
+        # W slots of (idx, val) per block of `block` elements
+        from repro.core.wire import topk_width
+        return topk_width(self.fraction, self.block) * 64.0 / self.block
 
     def delta_lower_bound(self, d):
-        return self._k(d) / d
+        if d <= self.block:
+            return self._k(d) / d
+        return self.fraction       # min over blocks of ceil(f·d_b)/d_b ≥ f
 
 
 @dataclasses.dataclass(frozen=True)
 class RandKCompressor(Compressor):
-    """Keep a uniformly random fraction (unscaled).  E‖x−Q‖² = (1−k/d)‖x‖²."""
+    """Keep a uniformly random fraction (unscaled).  E‖x−Q‖² = (1−k/d)‖x‖².
+
+    The kept coordinates are derived from the PRNG key alone — the key is
+    shared by sender and receiver (it folds the leaf index and the round,
+    never the worker id), so only the k values ever cross the wire
+    (``repro.core.wire.RandKCodec``)."""
 
     name: str = "randk"
     fraction: float = 0.01
 
-    def apply(self, x, key=None):
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        flat = x.reshape(-1)
-        d = flat.shape[0]
-        k = max(1, int(np.ceil(self.fraction * d)))
-        idx = jax.random.choice(key, d, shape=(k,), replace=False)
-        mask = jnp.zeros_like(flat).at[idx].set(1.0)
-        return (flat * mask).reshape(x.shape)
-
     def wire_bits_per_element(self, dtype=jnp.float32):
-        # indices reproducible from the shared key: only k values on the wire
-        return self.fraction * jnp.dtype(dtype).itemsize * 8
+        # indices reproducible from the shared key: only k f32 values ship
+        return self.fraction * 32.0
 
     def delta_lower_bound(self, d):
         return max(1.0 / d, self.fraction)  # in expectation
 
 
 @dataclasses.dataclass(frozen=True)
-class QSGDCompressor:
-    """QSGD-style s-level stochastic quantization, norm-scaled (ref [3]).
+class QSGDCompressor(Compressor):
+    """QSGD-style s-level quantization, norm-scaled, *blockwise* (ref [3]).
 
     Deterministic rounding variant (nearest level) so it is a contraction
     (stochastic QSGD is unbiased but not a contraction without scaling).
+    Each block of ``block`` elements carries its own max-|x| norm; the
+    2·levels+1 symmetric levels bit-pack into ``qsgd_bits(levels)`` ∈
+    {2, 4, 8} bits per element (``repro.core.wire.QSGDCodec``).  The
+    default ``levels=7`` is the 4-bit wire.
     """
 
     name: str = "qsgd"
-    levels: int = 16  # 4-bit
-
-    def apply(self, x, key=None):
-        flat = x.reshape(-1).astype(jnp.float32)
-        norm = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-30)
-        q = jnp.round(flat / norm * self.levels) / self.levels * norm
-        return q.reshape(x.shape).astype(x.dtype)
+    levels: int = 7   # 15 symmetric levels -> 4-bit nibble packing
+    block: int = SIGN_BLOCK
 
     def wire_bits_per_element(self, dtype=jnp.float32):
-        return float(np.ceil(np.log2(2 * self.levels + 1)))
+        from repro.core.wire import qsgd_bits
+        return qsgd_bits(self.levels) + 32.0 / self.block
 
     def delta_lower_bound(self, d):
-        # |x - q| <= norm/(2s) elementwise -> ratio <= d/(4 s^2) … loose;
-        # guarantee only the trivial bound here.
-        return 1.0 / d
-
-    def wire_bytes(self, x: jnp.ndarray) -> int:
-        return int(np.ceil(x.size * self.wire_bits_per_element(x.dtype) / 8.0))
+        # the per-block max element quantizes exactly -> δ ≥ 1/d; nearest
+        # rounding also gives |x−q| ≤ norm/(2s) per element, so per block
+        # ratio ≤ d_b/(4s²) — take whichever guarantee is stronger.
+        d_eff = min(d, self.block)
+        return max(1.0 / d, 1.0 - d_eff / (4.0 * self.levels ** 2))
 
 
 def make_compressor(name: str, **kw) -> Compressor:

@@ -7,17 +7,33 @@ Local loop identical to PD-SGDM; at a communication round (mod(t+1,p)==0)::
     send q⁽ᵏ⁾ / recv q⁽ʲ⁾ for j ∈ N_k                    (line 8)
     x̂⁽ʲ⁾ₜ₊₁ = x̂⁽ʲ⁾ₜ + q⁽ʲ⁾                              (line 9, error comp.)
 
-Key TPU adaptation: with the sign compressor and the sharded backend the
-payload crossing the interconnect is the *bit-packed* ``(uint8 signs, f32
-block scales)`` pair — the HLO ``collective-permute`` genuinely moves ~1/16th
-(bf16) of the raw bytes, so the dry-run roofline reflects the paper's
-compression claim rather than modelling it.
+Key TPU adaptation: what crosses the interconnect is the compressor's
+*wire codec* payload (``repro.core.wire``) — bit-packed signs + scales,
+(idx, val) top-k slots, key-derived rand-k values, or uintN QSGD levels —
+never the full-precision tensor.  The HLO ``collective-permute`` genuinely
+moves the compressed bytes for **every** operator, so the dry-run roofline
+and the comm-MB accounting reflect the paper's compression claim rather
+than modelling it (``bytes_per_comm_round`` is computed from the payload
+array shapes themselves: accounted ≡ shipped by construction).
+
+Three wire execution paths, one dispatch:
+
+* **kernel wire** — codec has a (rows, 1024) Pallas format and its block
+  equals the kernel lane: one flatten-once pack, payload sliced to the
+  used rows, per-neighbour exchange, one unpack per source.  Used on both
+  backends (DenseComm simulates the exchange, ShardedComm ships through
+  ``ppermute``), and entirely matrix-domain inside ``kernel_round``.
+* **per-leaf codec wire** — any codec, any block: jnp pack/unpack per
+  leaf, the payload tree shipped generically through ``ppermute`` (rand-k
+  ships only values; indices are re-derived from the shared round key).
+* **legacy apply** (``packed_wire=False``) — Q applied leaf-wise, the f32
+  result shipped at full precision; the debugging/ablation baseline.
 
 Auxiliary copies: each worker stores x̂ for itself and for each neighbour
-(``xhat_nbrs``), updated only from received compressed payloads — neighbours'
-x̂ are never shipped at full precision (that would defeat the point).  In the
-dense simulation backend all copies coincide, so only the canonical stacked
-x̂ is stored.
+(``xhat_nbrs``), updated only from received compressed payloads —
+neighbours' x̂ are never shipped at full precision (that would defeat the
+point).  In the dense simulation backend all copies coincide, so only the
+canonical stacked x̂ is stored.
 """
 from __future__ import annotations
 
@@ -28,10 +44,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import (Compressor, SignCompressor, sign_pack,
-                                    sign_unpack, sign_wire_bytes)
+from repro.core.compression import Compressor, SignCompressor
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
+from repro.core.wire import make_codec
 
 __all__ = ["CPDSGDMConfig", "CPDSGDM"]
 
@@ -41,7 +57,9 @@ tmap = jax.tree_util.tree_map
 @dataclasses.dataclass(frozen=True)
 class CPDSGDMConfig(PDSGDMConfig):
     gamma: float = 0.4               # consensus step size γ (paper: 0.4/0.5)
-    packed_wire: bool = True         # bit-pack sign payloads for ppermute
+    # ship the codec payload over the wire (False = legacy debug path:
+    # apply Q leaf-wise and ship the full-precision f32 result)
+    packed_wire: bool = True
 
 
 class CPDSGDM(PDSGDM):
@@ -51,6 +69,10 @@ class CPDSGDM(PDSGDM):
                  compressor: Optional[Compressor] = None):
         super().__init__(config, comm)
         self.compressor = compressor if compressor is not None else SignCompressor()
+        try:
+            self.codec = make_codec(self.compressor)
+        except TypeError:                # custom operator without a codec
+            self.codec = None
         if isinstance(comm, ShardedComm) and comm.topology.name == "complete":
             raise ValueError(
                 "CPD-SGDM sharded backend needs a shift-structured topology "
@@ -79,48 +101,58 @@ class CPDSGDM(PDSGDM):
     def _key(ax: int, sh: int) -> str:
         return f"ax{ax}_sh{sh:+d}"
 
-    # -- compression helpers -----------------------------------------------------
-    def _apply_Q(self, tree, step):
-        """Q leaf-wise; per-worker under the dense (worker-stacked) backend."""
-        comp = self.compressor
+    # -- wire dispatch -----------------------------------------------------------
+    @staticmethod
+    def _wire_key(r, leaf_i: int):
+        """PRNG key for leaf ``leaf_i``'s payload in communication round
+        ``r``.  Folds the leaf index and the round but *not* the worker id:
+        the key is shared knowledge across the graph, which is what lets
+        rand-k receivers re-derive the kept coordinates with zero extra
+        communication (and keeps the two backends key-equivalent)."""
         base = jax.random.PRNGKey(17)
+        return jax.random.fold_in(jax.random.fold_in(base, leaf_i), r)
+
+    def _kernel_wire(self) -> bool:
+        """Whether the wire payload is produced by the Pallas codec kernels
+        on the flatten-once (rows, 1024) layout — the production wire
+        format on *both* backends (DenseComm simulates the exchange;
+        ShardedComm ships the payload through ``ppermute``).  Requires the
+        codec's block to equal the kernel lane width so the kernel blocks
+        are identical to the per-leaf jnp codec's blocks."""
+        from repro.kernels import ops as kops
+        return (self.config.packed_wire and self.codec is not None
+                and self.codec.rows_supported
+                and self.codec.block == kops.LANE)
+
+    def _payload_wire(self) -> bool:
+        """Per-leaf jnp codec wire: the generic payload path for codecs
+        without a (matching) kernel format — any sign/top-k/QSGD block
+        width, rand-k, identity."""
+        return self.config.packed_wire and self.codec is not None
+
+    # -- legacy Q (packed_wire=False debug path) ----------------------------------
+    def _apply_Q(self, tree, r):
+        """Q leaf-wise; per-worker under the dense (worker-stacked) backend.
+        Keys are the shared wire keys, so this path and the payload path
+        draw identical rand-k coordinates."""
+        comp = self.compressor
 
         def per_leaf(i, leaf):
-            key = jax.random.fold_in(jax.random.fold_in(base, i), step)
+            key = self._wire_key(r, i)
             if isinstance(self.comm, DenseComm):
-                K = leaf.shape[0]
-                keys = jax.random.split(key, K)
-                return jax.vmap(comp.apply)(leaf, keys)
+                return jax.vmap(lambda xl: comp.apply(xl, key))(leaf)
             return comp.apply(leaf, key)
 
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         q = [per_leaf(i, l) for i, l in enumerate(leaves)]
         return jax.tree_util.tree_unflatten(treedef, q)
 
-    def _kernel_wire(self) -> bool:
-        """Whether the wire payload is produced by the Pallas sign kernels on
-        the flatten-once (rows, 1024) layout — the production wire format on
-        *both* backends (DenseComm simulates the exchange; ShardedComm ships
-        the packed pair through ``ppermute``).  Requires the compressor's
-        scale block to equal the kernel lane width so the kernel blocks are
-        identical to the per-leaf jnp oracle's blocks."""
-        from repro.kernels import ops as kops
-        return (self.config.packed_wire
-                and isinstance(self.compressor, SignCompressor)
-                and self.compressor.block == kops.LANE)
-
-    def _use_packed(self) -> bool:
-        """Per-leaf jnp bit-packed wire: the fallback for sharded sign
-        compressors whose block width differs from the kernel lane."""
-        return (self.config.packed_wire
-                and isinstance(self.compressor, SignCompressor)
-                and isinstance(self.comm, ShardedComm))
-
     # -- communication round (Alg. 2 lines 6-9) ------------------------------------
     def comm_round(self, state, params):
         cfg = self.config
         gamma = jnp.float32(cfg.gamma)
         xhat = state["xhat"]
+        r = self.round_index(state)
 
         # line 6: consensus from *locally stored* copies — zero communication.
         if isinstance(self.comm, ShardedComm):
@@ -129,7 +161,7 @@ class CPDSGDM(PDSGDM):
                 nbr = state["xhat_nbrs"][self._key(ax, sh)]
                 mixhat = tmap(lambda a, b: a + jnp.float32(w) * b, mixhat, nbr)
         else:
-            mixhat = self.comm.mix(xhat, r=self.round_index(state))
+            mixhat = self.comm.mix(xhat, r=r)
         params_new = tmap(
             lambda x, mh, h: (x.astype(jnp.float32) + gamma * (mh - h)).astype(x.dtype),
             params, mixhat, xhat)
@@ -138,66 +170,11 @@ class CPDSGDM(PDSGDM):
 
         new_state = dict(state)
         if self._kernel_wire():
-            # lines 7-9 on the flatten-once kernel layout: one Pallas pack,
-            # one (uint8, f32-scales) payload per neighbour exchange.
-            from repro.kernels import ops as kops
-            plan = kops.KernelPlan.for_tree(diff, worker_dim=True)
-            interp = self.config.kernel_interpret
-            packed, scales = kops.sign_pack(
-                plan.flatten(diff), counts=plan.row_counts(),
-                interpret=interp)
-            q_self = plan.unflatten(
-                kops.sign_unpack(packed, scales, interpret=interp),
-                dtype=jnp.float32)
-            new_state["xhat"] = tmap(lambda h, q: h + q, xhat, q_self)
-            if isinstance(self.comm, ShardedComm):
-                # ship only the rows that carry data: the wire bytes then
-                # equal the accounted Σ ceil(size/1024) blocks exactly
-                u = plan.used_rows
-                wire_p, wire_s = packed[..., :u, :], scales[..., :u, :]
-                nbrs = dict(state["xhat_nbrs"])
-                for (ax, sh, _w) in self.comm.nonself_shifts():
-                    k = self._key(ax, sh)
-                    q_recv = plan.unflatten(
-                        kops.sign_unpack(
-                            plan.pad_wire(
-                                self.comm._receive_from(wire_p, ax, sh)),
-                            plan.pad_wire(
-                                self.comm._receive_from(wire_s, ax, sh)),
-                            interpret=interp),
-                        dtype=jnp.float32)
-                    nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
-                new_state["xhat_nbrs"] = nbrs
-        elif self._use_packed():
-            # lines 7-9 with bit-packed wire format (the TPU-native path).
-            block = self.compressor.block
-            leaves, treedef = jax.tree_util.tree_flatten(diff)
-            packs = [sign_pack(l, block) for l in leaves]
-            q_self = [
-                sign_unpack(p, s, l.size, l.shape, jnp.float32, block)
-                for (p, s), l in zip(packs, leaves)
-            ]
-            new_state["xhat"] = jax.tree_util.tree_unflatten(
-                treedef, [h + q for h, q in zip(
-                    jax.tree_util.tree_leaves(xhat), q_self)])
-            nbrs = dict(state["xhat_nbrs"])
-            for (ax, sh, _w) in self.comm.nonself_shifts():
-                k = self._key(ax, sh)
-                recv = [
-                    (self.comm._receive_from(p, ax, sh),
-                     self.comm._receive_from(s, ax, sh))
-                    for (p, s) in packs
-                ]
-                q_recv = [
-                    sign_unpack(p, s, l.size, l.shape, jnp.float32, block)
-                    for (p, s), l in zip(recv, leaves)
-                ]
-                nbrs[k] = jax.tree_util.tree_unflatten(
-                    treedef, [h + q for h, q in zip(
-                        jax.tree_util.tree_leaves(nbrs[k]), q_recv)])
-            new_state["xhat_nbrs"] = nbrs
+            self._comm_kernel_wire(new_state, xhat, diff)
+        elif self._payload_wire():
+            self._comm_payload_wire(new_state, xhat, diff, r)
         else:
-            q = self._apply_Q(diff, state["step"])
+            q = self._apply_Q(diff, r)
             new_state["xhat"] = tmap(lambda h, qq: h + qq.astype(jnp.float32),
                                      xhat, q)
             if isinstance(self.comm, ShardedComm):
@@ -210,6 +187,79 @@ class CPDSGDM(PDSGDM):
                 new_state["xhat_nbrs"] = nbrs
 
         return params_new, new_state
+
+    def _comm_kernel_wire(self, new_state, xhat, diff):
+        """Lines 7-9 on the flatten-once kernel layout: one Pallas codec
+        pack, one payload tree per neighbour exchange, sliced to the rows
+        that carry data so the wire bytes equal the accounted blocks
+        exactly (alignment padding never ships)."""
+        from repro.kernels import ops as kops
+        dense = isinstance(self.comm, DenseComm)
+        plan = kops.KernelPlan.for_tree(diff, worker_dim=dense)
+        interp = self.config.kernel_interpret
+        payload = self.codec.rows_pack(plan.flatten(diff),
+                                       counts=plan.row_counts(),
+                                       interpret=interp)
+        q_self = plan.unflatten(self.codec.rows_unpack(payload,
+                                                       interpret=interp),
+                                dtype=jnp.float32)
+        new_state["xhat"] = tmap(lambda h, q: h + q, xhat, q_self)
+        if isinstance(self.comm, ShardedComm):
+            u = plan.used_rows
+            nbrs = dict(new_state["xhat_nbrs"])
+            for (ax, sh, _w) in self.comm.nonself_shifts():
+                k = self._key(ax, sh)
+                recv = {name: plan.pad_wire(
+                            self.comm._receive_from(arr[..., :u, :], ax, sh))
+                        for name, arr in payload.items()}
+                q_recv = plan.unflatten(
+                    self.codec.rows_unpack(recv, interpret=interp),
+                    dtype=jnp.float32)
+                nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
+            new_state["xhat_nbrs"] = nbrs
+
+    def _comm_payload_wire(self, new_state, xhat, diff, r):
+        """Lines 7-9 with per-leaf jnp codec payloads: the generic wire for
+        every operator and block width.  DenseComm packs/unpacks per
+        stacked worker (simulating the exchange); ShardedComm ships each
+        payload's :meth:`~repro.core.wire.WireCodec.wire` entries through
+        one ``ppermute`` each — rand-k indices never cross the wire."""
+        codec = self.codec
+        dense = isinstance(self.comm, DenseComm)
+        leaves, treedef = jax.tree_util.tree_flatten(diff)
+        payloads, keys, q_self = [], [], []
+        for i, leaf in enumerate(leaves):
+            key = self._wire_key(r, i)
+            shape = leaf.shape[1:] if dense else leaf.shape
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            if dense:
+                payload = jax.vmap(lambda xl: codec.pack(xl, key))(leaf)
+                q = jax.vmap(lambda p: codec.unpack(p, n, shape,
+                                                    jnp.float32, key=key)
+                             )(payload)
+            else:
+                payload = codec.pack(leaf, key)
+                q = codec.unpack(payload, n, shape, jnp.float32, key=key)
+            payloads.append(payload)
+            keys.append(key)
+            q_self.append(q)
+        new_state["xhat"] = jax.tree_util.tree_unflatten(
+            treedef, [h + q for h, q in zip(
+                treedef.flatten_up_to(xhat), q_self)])
+        if isinstance(self.comm, ShardedComm):
+            nbrs = dict(new_state["xhat_nbrs"])
+            for (ax, sh, _w) in self.comm.nonself_shifts():
+                k = self._key(ax, sh)
+                q_recv = []
+                for leaf, payload, key in zip(leaves, payloads, keys):
+                    recv = self.comm.receive_payload(codec.wire(payload),
+                                                     ax, sh)
+                    q_recv.append(codec.unpack(recv, leaf.size, leaf.shape,
+                                               jnp.float32, key=key))
+                nbrs[k] = jax.tree_util.tree_unflatten(
+                    treedef, [h + q for h, q in zip(
+                        treedef.flatten_up_to(nbrs[k]), q_recv)])
+            new_state["xhat_nbrs"] = nbrs
 
     # -- kernel round (flatten-once matrix domain) --------------------------------
     @property
@@ -240,10 +290,9 @@ class CPDSGDM(PDSGDM):
 
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
         """Alg. 2 lines 6-9 entirely on the kernel layout: consensus from
-        stored copies, one Pallas sign pack, the packed pair through the
+        stored copies, one Pallas codec pack, the payload tree through the
         wire (sliced to ``plan.used_rows`` so alignment padding never
         ships), error-compensation updates — no tree rematerialization."""
-        from repro.kernels import ops as kops
         assert plan is not None, "CPD-SGDM matrix comm needs the KernelPlan"
         cfg = self.config
         gamma = jnp.float32(cfg.gamma)
@@ -260,23 +309,22 @@ class CPDSGDM(PDSGDM):
             mixhat = self.comm.mix(xhat, r=r)
         x_new = x_mat + gamma * (mixhat - xhat)
 
-        # lines 7-9: Q on the matrix, packed payload on the wire.
-        packed, scales = kops.sign_pack(x_new - xhat, counts=counts,
-                                        interpret=interp)
+        # lines 7-9: codec pack on the matrix, payload on the wire.
+        payload = self.codec.rows_pack(x_new - xhat, counts=counts,
+                                       interpret=interp)
         new_mats = dict(mats)
-        new_mats["xhat"] = xhat + kops.sign_unpack(packed, scales,
-                                                   interpret=interp)
+        new_mats["xhat"] = xhat + self.codec.rows_unpack(payload,
+                                                         interpret=interp)
         if isinstance(self.comm, ShardedComm):
             u = plan.used_rows
-            wire_p, wire_s = packed[..., :u, :], scales[..., :u, :]
             nbrs = dict(mats["xhat_nbrs"])
             for (ax, sh, _w) in self.comm.nonself_shifts():
                 k = self._key(ax, sh)
-                q_recv = kops.sign_unpack(
-                    plan.pad_wire(self.comm._receive_from(wire_p, ax, sh)),
-                    plan.pad_wire(self.comm._receive_from(wire_s, ax, sh)),
-                    interpret=interp)
-                nbrs[k] = nbrs[k] + q_recv
+                recv = {name: plan.pad_wire(
+                            self.comm._receive_from(arr[..., :u, :], ax, sh))
+                        for name, arr in payload.items()}
+                nbrs[k] = nbrs[k] + self.codec.rows_unpack(recv,
+                                                           interpret=interp)
             new_mats["xhat_nbrs"] = nbrs
         return x_new, new_mats
 
@@ -284,19 +332,20 @@ class CPDSGDM(PDSGDM):
     def bytes_per_comm_round(self, params, r: int = 0) -> int:
         """Per-worker wire bytes for communication round ``r``.
 
-        Packed sign wire: the *exact* payload — per leaf,
-        ``ceil(size/block)`` blocks of ``block/8`` sign bytes + one f32
-        scale each (padding included), × the round's topology degree
-        (≈ 1/16.5 of raw f32, ≈ 1/15.5 of bf16).  Other compressors keep
-        the per-element ``wire_bits_per_element`` model."""
+        Codec wire: the *exact* payload — per leaf, the summed ``nbytes``
+        of the codec's wire arrays (padding blocks included, they really
+        ship), × the round's topology degree.  Accounted ≡ shipped by
+        construction; asserted against the traced ppermute payloads in
+        ``tests/test_wire.py``.  ``packed_wire=False`` ships the
+        full-precision f32 q, and is charged as such."""
         from repro.core.gossip import gossip_bytes_per_round
-        comp = self.compressor
-        if self.config.packed_wire and isinstance(comp, SignCompressor):
+        if self.config.packed_wire and self.codec is not None:
             payload = sum(
-                sign_wire_bytes(int(np.prod(l.shape)), comp.block)
+                self.codec.wire_bytes(int(np.prod(l.shape, dtype=np.int64)))
                 for l in jax.tree_util.tree_leaves(params))
             return self.comm.topology_at(r).degree * payload
-        bits = comp.wire_bits_per_element(
-            jax.tree_util.tree_leaves(params)[0].dtype)
+        bits = (32.0 if self.codec is not None
+                else self.compressor.wire_bits_per_element(
+                    jax.tree_util.tree_leaves(params)[0].dtype))
         return gossip_bytes_per_round(params, self.comm,
                                       bits_per_element=bits, r=r)

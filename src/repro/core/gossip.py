@@ -21,8 +21,12 @@ Both expose::
     shift_views(tree)        -> {(axis,shift): tree}   # raw neighbour tensors
     weights()                -> {(axis,shift): w}
 
-``shift_views`` is what CPD-SGDM uses to move the *compressed, packed*
-payload ``q`` between neighbours.
+``shift_views`` / ``receive_payload`` are what CPD-SGDM uses to move the
+*compressed* wire-codec payload (``repro.core.wire``) between neighbours:
+a payload is a plain dict of arrays, and each array crosses the wire as
+one ``ppermute`` — uint8 sign bits, int32 top-k indices, f32 values —
+so the HLO collective carries exactly the codec's bytes, for every
+compressor, not just sign.
 
 Either backend can be built from a single :class:`Topology` (static graph)
 or from a :class:`TopologySchedule` (time-varying graph): ``mix`` then
@@ -191,6 +195,14 @@ class ShardedComm(CommBackend):
     def receive_tree(self, tree, axis: int, shift: int):
         return jax.tree_util.tree_map(
             partial(self._receive_from, axis=axis, shift=shift), tree)
+
+    def receive_payload(self, payload: Dict[str, object], axis: int,
+                        shift: int) -> Dict[str, object]:
+        """Ship one wire-codec payload from the (axis, shift) neighbour:
+        one ``ppermute`` per payload array, dtypes preserved (this is
+        where compression becomes real bytes on the interconnect)."""
+        return {k: self._receive_from(v, axis, shift)
+                for k, v in payload.items()}
 
     def _mix_with(self, top: Topology, tree):
         """One gossip round under a specific topology (static trace)."""

@@ -1,0 +1,451 @@
+"""First-class wire codecs: one pack/unpack subsystem for every compressor.
+
+A :class:`WireCodec` is the *wire format* of a δ-contraction operator: the
+concrete pytree-of-arrays payload that crosses the interconnect, plus the
+pack/unpack maps between a parameter-drift tensor and that payload.  The
+compressor (``repro.core.compression``) owns the math Q(x); the codec owns
+the bytes — and ``Q = unpack ∘ pack`` *by construction*, so the simulated
+semantics, the shipped payload, and the byte accounting can never drift
+apart.
+
+Payload layouts (per leaf of ``n`` elements, ``nb = ceil(n / block)``):
+
+=========  =====================================================  ==========
+codec      payload (dict of arrays)                               bytes
+=========  =====================================================  ==========
+identity   ``vals``   f32 (n,)                                    4·n
+sign       ``bits``   u8 (nb, block/8), ``scales`` f32 (nb,)      nb·(block/8+4)
+topk       ``idx``    i32 (nb, W), ``vals`` f32 (nb, W)           nb·W·8
+randk      ``vals``   f32 (k,)  — ``idx`` derived from the key    k·4
+qsgd       ``levels`` u8 (nb, block·bits/8), ``norms`` f32 (nb,)  nb·(block·bits/8+4)
+=========  =====================================================  ==========
+
+with ``W = max(1, ceil(fraction·block))`` (top-k slot width, uniform across
+blocks so the payload is rectangular — tail blocks fill unused slots with
+``(idx 0, val 0)`` placeholders that unpack to nothing) and
+``bits = qsgd_bits(levels)`` ∈ {2, 4, 8} (smallest byte-divisor holding the
+``2·levels+1`` symmetric quantization levels).
+
+Two execution domains share one semantics:
+
+* **per-leaf** (``pack`` / ``unpack``): pure jnp on any leaf shape, any
+  ``block`` — the tree-form comm path and the dense simulation.  Blockwise
+  codecs reshape the leaf to padded ``(nb, block)`` rows and call the
+  canonical rows implementations below (:func:`topk_rows`,
+  :func:`qsgd_rows`, ``compression.sign_pack``).
+* **rows** (``rows_pack`` / ``rows_unpack``): the Pallas kernels on the
+  flatten-once ``(rows, 1024)`` layout (``repro.kernels``), available when
+  ``rows_supported`` and ``block == 1024``.  Per-leaf row alignment
+  (``KernelPlan``) makes the kernel blocks identical to the per-leaf
+  blocks, so the two domains are bit-exact against each other.
+
+``wire(payload)`` is the subset of entries that actually ship: rand-k's
+indices are derived from the round key shared by sender and receiver, so
+only the values cross the wire (``unpack`` re-derives the indices when the
+payload arrives without them).  ``wire_bytes(n)`` is computed from the
+payload shapes themselves, so *accounted bytes ≡ shipped bytes* holds by
+construction (asserted in ``tests/test_wire.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import (Compressor, IdentityCompressor,
+                                    QSGDCompressor, RandKCompressor,
+                                    SIGN_BLOCK, SignCompressor,
+                                    TopKCompressor, sign_pack, sign_unpack,
+                                    sign_wire_bytes)
+
+__all__ = [
+    "WireCodec", "IdentityCodec", "SignCodec", "TopKCodec", "RandKCodec",
+    "QSGDCodec", "make_codec", "topk_rows", "topk_rows_unpack", "qsgd_rows",
+    "qsgd_rows_unpack", "qsgd_bits", "topk_width", "payload_nbytes",
+]
+
+Payload = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------- rows kernels
+# Canonical pure-jnp rows implementations.  These are the per-leaf *and* the
+# oracle semantics; the Pallas kernels (repro.kernels.topk_select /
+# qsgd_quant) must match them bit-exactly (tests/test_kernels.py).
+
+def _row_counts(n: int, block: int) -> jnp.ndarray:
+    """(nb,) f32 valid-element count per padded row of one n-element leaf.
+    Identical to ``KernelPlan.row_counts`` restricted to that leaf."""
+    nb = -(-n // block)
+    c = np.full((nb,), float(block), np.float32)
+    c[-1] = float(n - (nb - 1) * block)
+    return jnp.asarray(c)
+
+
+def _to_rows(x: jnp.ndarray, block: int):
+    """Leaf → zero-padded f32 (nb, block) rows + valid counts."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(-1, block), _row_counts(n, block)
+
+
+def topk_width(fraction: float, block: int) -> int:
+    """Top-k payload slot width: uniform across blocks (and across every
+    leaf of a kernel plan) so payload matrices are rectangular."""
+    return max(1, int(np.ceil(fraction * block)))
+
+
+def topk_rows(x: jnp.ndarray, counts: Optional[jnp.ndarray] = None, *,
+              fraction: float, width: Optional[int] = None):
+    """Blockwise magnitude top-k select on (R, B) rows.
+
+    Returns ``(idx (R, W) int32, vals (R, W) f32)``.  Slot ``j`` of a row is
+    *active* iff ``j < ceil(fraction · counts[row])`` — the kept-coordinate
+    count follows the row's true (non-padding) length; inactive slots are
+    ``(0, 0.0)`` placeholders.  Ordering is |x| descending with ties broken
+    by lower index (``lax.top_k`` stability == the kernel's iterative
+    lowest-index argmax).
+    """
+    R, B = x.shape
+    W = width if width is not None else topk_width(fraction, B)
+    x = x.astype(jnp.float32)
+    if counts is None:
+        counts = jnp.full((R,), float(B), jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(x), W)
+    vals = jnp.take_along_axis(x, idx, axis=1)
+    k_active = jnp.ceil(
+        jnp.float32(fraction) * counts.reshape(R, 1)).astype(jnp.int32)
+    active = jnp.arange(W, dtype=jnp.int32)[None, :] < k_active
+    return (jnp.where(active, idx, 0).astype(jnp.int32),
+            jnp.where(active, vals, 0.0))
+
+
+def topk_rows_unpack(idx: jnp.ndarray, vals: jnp.ndarray,
+                     block: int) -> jnp.ndarray:
+    """Inverse scatter of :func:`topk_rows` → (R, block) f32.  Placeholder
+    slots carry val 0.0, so a scatter-*add* makes them vanish even when
+    their idx collides with a real selection."""
+    R = idx.shape[0]
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    return jnp.zeros((R, block), jnp.float32).at[rows, idx].add(vals)
+
+
+def qsgd_bits(levels: int) -> int:
+    """Bits per element packing the 2·levels+1 symmetric quantization
+    levels: the smallest divisor of 8 that holds them (so whole elements
+    pack into bytes)."""
+    need = 2 * levels + 1
+    for b in (2, 4, 8):
+        if (1 << b) >= need:
+            return b
+    raise ValueError(f"qsgd levels={levels} needs > 8 bits; use ≤ 127")
+
+
+def qsgd_rows(x: jnp.ndarray, *, levels: int):
+    """Blockwise QSGD quantize + bit-pack on (R, B) rows.
+
+    Per row: ``norm = max |x|``; levels ``u = round(x/norm · s) + s`` ∈
+    [0, 2s] packed ``8/bits`` per byte.  Returns
+    ``(packed (R, B·bits/8) u8, norms (R,) f32)``.  Deterministic nearest
+    rounding (the contraction variant); padding zeros quantize to the
+    center level and unpack back to exactly 0.
+    """
+    R, B = x.shape
+    bits = qsgd_bits(levels)
+    vpb = 8 // bits
+    assert B % vpb == 0, (B, bits)
+    x = x.astype(jnp.float32)
+    s = jnp.float32(levels)
+    norm = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    # scale formed first, then exactly one elementwise multiply: the
+    # ``x / norm · s`` chain would be reassociated differently by XLA in
+    # the fused-round jit than in the Pallas lowering (1-ulp drift near
+    # rounding ties); this form leaves the compiler nothing to reassociate
+    qscale = s / jnp.maximum(norm, 1e-30)
+    u = (jnp.round(x * qscale) + s).astype(jnp.uint8)
+    grouped = u.reshape(R, B // vpb, vpb)
+    weights = (jnp.uint8(1) << (jnp.uint8(bits)
+                                * jnp.arange(vpb, dtype=jnp.uint8)))
+    packed = jnp.sum(grouped * weights, axis=-1).astype(jnp.uint8)
+    return packed, norm.reshape(R)
+
+
+def qsgd_rows_unpack(packed: jnp.ndarray, norms: jnp.ndarray, *,
+                     levels: int, block: int) -> jnp.ndarray:
+    """Inverse of :func:`qsgd_rows` → (R, block) f32 = (u − s)·(1/s)·norm.
+
+    Bit-determinism contract (the kernel mirrors every step): the 1/s
+    reciprocal is a precomputed f32 constant, not a division (XLA
+    strength-reduces constant divisions inconsistently across lowerings);
+    the scale is formed per row before the single elementwise multiply (no
+    reassociation freedom); and the result passes through a select on
+    ``norm > 0`` so empty/padding rows decode to exact +0.  Every
+    *materialized* value matches the Pallas kernel bit-for-bit; note that
+    XLA-CPU may still contract the final multiply into a downstream add
+    (fma) when this whole expression is fused into a larger consumer — a
+    ≤1-ulp, consumer-side effect (see tests/test_kernels.py).
+    """
+    R = packed.shape[0]
+    bits = qsgd_bits(levels)
+    vpb = 8 // bits
+    mask = jnp.uint8((1 << bits) - 1)
+    shifts = jnp.uint8(bits) * jnp.arange(vpb, dtype=jnp.uint8)
+    u = (packed[:, :, None] >> shifts) & mask
+    s = jnp.float32(levels)
+    inv_s = jnp.float32(np.float32(1.0) / np.float32(levels))
+    norms = norms.reshape(R, 1)
+    scale = inv_s * norms
+    vals = (u.reshape(R, block).astype(jnp.float32) - s) * scale
+    return jnp.where(norms > 0, vals, 0.0)
+
+
+# ------------------------------------------------------------------- codecs
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Wire format of one compressor: payload layout + pack/unpack maps.
+
+    ``pack``/``unpack`` are the per-leaf jnp domain (any shape, vmap-able
+    over a stacked worker dim); ``rows_pack``/``rows_unpack`` the Pallas
+    (rows, 1024) kernel domain, available iff :attr:`rows_supported`.
+    ``wire(payload)`` is what ships; ``wire_bytes(n)`` its exact size.
+    """
+
+    name: str = "codec"
+    block: int = 0
+
+    @property
+    def rows_supported(self) -> bool:
+        """Whether the (rows, 1024) Pallas kernel path exists for this
+        codec (the caller additionally requires ``block == kernels.LANE``)."""
+        return False
+
+    # -- per-leaf (tree) domain -------------------------------------------
+    def pack(self, x: jnp.ndarray, key=None) -> Payload:
+        raise NotImplementedError
+
+    def unpack(self, payload: Payload, n: int, shape, dtype,
+               key=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- (rows, 1024) kernel domain ---------------------------------------
+    def rows_pack(self, mat, counts=None, *, interpret=None) -> Payload:
+        raise NotImplementedError(f"{self.name}: no kernel wire format")
+
+    def rows_unpack(self, payload: Payload, *, interpret=None):
+        raise NotImplementedError(f"{self.name}: no kernel wire format")
+
+    # -- accounting --------------------------------------------------------
+    def wire(self, payload: Payload) -> Payload:
+        """The payload entries that actually cross the wire (drops entries
+        the receiver re-derives from the shared key)."""
+        return payload
+
+    def wire_bytes(self, n: int) -> int:
+        """Exact shipped bytes for an n-element leaf — Σ nbytes of the
+        :meth:`wire` arrays, padding blocks included (they really ship)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(WireCodec):
+    """Uncompressed wire.  CPD-SGDM's q is the f32 drift x − x̂, so the
+    honest payload is f32 regardless of the parameter dtype."""
+
+    name: str = "identity"
+
+    def pack(self, x, key=None):
+        return {"vals": x.reshape(-1).astype(jnp.float32)}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        return payload["vals"].reshape(shape).astype(dtype)
+
+    def wire_bytes(self, n):
+        return 4 * int(n)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignCodec(WireCodec):
+    """Blockwise scaled sign: 1 bit/element + one f32 scale per block."""
+
+    name: str = "sign"
+    block: int = SIGN_BLOCK
+
+    @property
+    def rows_supported(self):
+        return True
+
+    def pack(self, x, key=None):
+        bits, scales = sign_pack(x, self.block)
+        return {"bits": bits, "scales": scales}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        return sign_unpack(payload["bits"], payload["scales"], n, shape,
+                           dtype, self.block)
+
+    def rows_pack(self, mat, counts=None, *, interpret=None):
+        from repro.kernels import ops as kops
+        bits, scales = kops.sign_pack(mat, counts=counts,
+                                      interpret=interpret)
+        return {"bits": bits, "scales": scales}
+
+    def rows_unpack(self, payload, *, interpret=None):
+        from repro.kernels import ops as kops
+        return kops.sign_unpack(payload["bits"], payload["scales"],
+                                interpret=interpret)
+
+    def wire_bytes(self, n):
+        return sign_wire_bytes(n, self.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(WireCodec):
+    """Blockwise top-k: W = ceil(fraction·block) (idx, val) slots per block;
+    active slots follow each block's true length."""
+
+    name: str = "topk"
+    fraction: float = 0.01
+    block: int = SIGN_BLOCK
+
+    @property
+    def width(self) -> int:
+        return topk_width(self.fraction, self.block)
+
+    @property
+    def rows_supported(self):
+        # the select kernel unrolls W per-row argmax steps; its unroll cap
+        # is the kernel's to own (lazy import: core stays kernel-free)
+        from repro.kernels.topk_select import MAX_WIDTH
+        return self.width <= MAX_WIDTH
+
+    def pack(self, x, key=None):
+        rows, counts = _to_rows(x, self.block)
+        idx, vals = topk_rows(rows, counts, fraction=self.fraction,
+                              width=self.width)
+        return {"idx": idx, "vals": vals}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        q = topk_rows_unpack(payload["idx"], payload["vals"], self.block)
+        return q.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+    def rows_pack(self, mat, counts=None, *, interpret=None):
+        from repro.kernels import ops as kops
+        idx, vals = kops.topk_pack(mat, counts=counts,
+                                   fraction=self.fraction,
+                                   interpret=interpret)
+        return {"idx": idx, "vals": vals}
+
+    def rows_unpack(self, payload, *, interpret=None):
+        from repro.kernels import ops as kops
+        return kops.topk_unpack(payload["idx"], payload["vals"],
+                                interpret=interpret)
+
+    def wire_bytes(self, n):
+        nb = -(-int(n) // self.block)
+        return nb * self.width * (4 + 4)     # int32 idx + f32 val per slot
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKCodec(WireCodec):
+    """Random-k with key-derived coordinates: sender and receiver run the
+    same ``derive_idx(key, n)``, so only the k values ship — zero index
+    bytes on the wire.  The key folds (leaf, round) but *not* the worker
+    id: it is shared knowledge across the whole graph."""
+
+    name: str = "randk"
+    fraction: float = 0.01
+
+    def k(self, n: int) -> int:
+        return max(1, int(np.ceil(self.fraction * int(n))))
+
+    def derive_idx(self, key, n: int) -> jnp.ndarray:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return jax.random.choice(key, n, shape=(self.k(n),), replace=False)
+
+    def pack(self, x, key=None):
+        flat = x.reshape(-1).astype(jnp.float32)
+        idx = self.derive_idx(key, flat.shape[0])
+        return {"idx": idx, "vals": flat[idx]}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        idx = payload.get("idx")
+        if idx is None:                      # wire payload: re-derive
+            idx = self.derive_idx(key, n)
+        flat = jnp.zeros((n,), jnp.float32).at[idx].set(payload["vals"])
+        return flat.reshape(shape).astype(dtype)
+
+    def wire(self, payload):
+        return {"vals": payload["vals"]}
+
+    def wire_bytes(self, n):
+        return self.k(n) * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec(WireCodec):
+    """Blockwise s-level quantization, bit-packed uintN levels + one f32
+    norm per block (deterministic nearest-rounding contraction variant)."""
+
+    name: str = "qsgd"
+    levels: int = 7
+    block: int = SIGN_BLOCK
+
+    @property
+    def bits(self) -> int:
+        return qsgd_bits(self.levels)
+
+    @property
+    def rows_supported(self):
+        return True
+
+    def pack(self, x, key=None):
+        rows, _ = _to_rows(x, self.block)
+        packed, norms = qsgd_rows(rows, levels=self.levels)
+        return {"levels": packed, "norms": norms}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        q = qsgd_rows_unpack(payload["levels"], payload["norms"],
+                             levels=self.levels, block=self.block)
+        return q.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+    def rows_pack(self, mat, counts=None, *, interpret=None):
+        from repro.kernels import ops as kops
+        packed, norms = kops.qsgd_pack(mat, levels=self.levels,
+                                       interpret=interpret)
+        return {"levels": packed, "norms": norms}
+
+    def rows_unpack(self, payload, *, interpret=None):
+        from repro.kernels import ops as kops
+        return kops.qsgd_unpack(payload["levels"], payload["norms"],
+                                levels=self.levels, interpret=interpret)
+
+    def wire_bytes(self, n):
+        nb = -(-int(n) // self.block)
+        return nb * (self.block * self.bits // 8 + 4)
+
+
+def make_codec(comp: Compressor) -> WireCodec:
+    """The wire codec paired with a compressor instance."""
+    if isinstance(comp, SignCompressor):
+        return SignCodec(block=comp.block)
+    if isinstance(comp, TopKCompressor):
+        return TopKCodec(fraction=comp.fraction, block=comp.block)
+    if isinstance(comp, RandKCompressor):
+        return RandKCodec(fraction=comp.fraction)
+    if isinstance(comp, QSGDCompressor):
+        return QSGDCodec(levels=comp.levels, block=comp.block)
+    if isinstance(comp, IdentityCompressor):
+        return IdentityCodec()
+    raise TypeError(f"no wire codec for compressor {comp!r}")
+
+
+def payload_nbytes(payload: Payload) -> int:
+    """Σ nbytes over a (possibly abstract) payload tree — the shipped-bytes
+    side of the accounted ≡ shipped assertion."""
+    return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+               for a in jax.tree_util.tree_leaves(payload))

@@ -1,8 +1,15 @@
 """Pallas TPU kernels for the paper's memory-bound hot spots.
 
 momentum       — fused SGDM update (PD-SGDM inner loop)
-sign_compress  — blockwise scaled-sign + bit-pack (CPD-SGDM wire format)
+sign_compress  — blockwise scaled-sign + bit-pack (sign wire codec)
+topk_select    — per-row magnitude top-k select/scatter (top-k wire codec)
+qsgd_quant     — s-level quantize + uintN bit-pack (QSGD wire codec)
 gossip_mix     — fused W-row neighbour AXPY after ppermute
+
+The three wire-codec kernel pairs all operate on the flatten-once
+(rows, 1024) layout and are dispatched through ``repro.core.wire``'s
+``rows_pack``/``rows_unpack`` — one codec interface covers the per-leaf
+jnp fallback and the kernel path on both comm backends.
 
 Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling; ``ops.py``
 holds the ``KernelPlan`` flatten-once layout and the jit'd pytree wrappers

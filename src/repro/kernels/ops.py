@@ -33,17 +33,21 @@ import numpy as np
 from repro.kernels import default_interpret
 from repro.kernels import gossip_mix as gm
 from repro.kernels import momentum as mom
+from repro.kernels import qsgd_quant as qq
 from repro.kernels import sign_compress as sc
+from repro.kernels import topk_select as tk
 
 __all__ = ["KernelPlan", "PLAN_BLOCK_ROWS", "LANE", "default_interpret",
            "momentum_update_mat", "gossip_mix_mat", "sign_pack",
-           "sign_unpack", "momentum_update_tree", "gossip_mix_tree"]
+           "sign_unpack", "topk_pack", "topk_unpack", "qsgd_pack",
+           "qsgd_unpack", "momentum_update_tree", "gossip_mix_tree"]
 
 LANE = mom.LANE  # 1024
 
 # one layout serves every kernel: lcm of the kernels' BLOCK_ROWS
 PLAN_BLOCK_ROWS = int(np.lcm.reduce(
-    [mom.BLOCK_ROWS, gm.BLOCK_ROWS, sc.BLOCK_ROWS]))
+    [mom.BLOCK_ROWS, gm.BLOCK_ROWS, sc.BLOCK_ROWS, tk.BLOCK_ROWS,
+     qq.BLOCK_ROWS]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,12 +203,8 @@ def sign_pack(x_mat, counts=None, *, interpret: bool | None = None):
     tiled across any leading worker dims automatically.
     """
     lead, rows = x_mat.shape[:-2], x_mat.shape[-2]
-    if counts is not None:
-        c = jnp.asarray(counts, jnp.float32).reshape(rows, 1)
-        if lead:
-            c = jnp.tile(c, (int(np.prod(lead)), 1))
-        counts = c
-    packed, scales = sc.sign_pack_pallas(_rows2d(x_mat), counts,
+    packed, scales = sc.sign_pack_pallas(_rows2d(x_mat),
+                                         _tile_counts(counts, rows, lead),
                                          interpret=interpret)
     return (packed.reshape(lead + (rows, sc.PACKED)),
             scales.reshape(lead + (rows, 1)))
@@ -215,6 +215,61 @@ def sign_unpack(packed, scales, *, interpret: bool | None = None):
     lead, rows = packed.shape[:-2], packed.shape[-2]
     out = sc.sign_unpack_pallas(packed.reshape(-1, sc.PACKED),
                                 scales.reshape(-1, 1), interpret=interpret)
+    return out.reshape(lead + (rows, LANE))
+
+
+def _tile_counts(counts, rows, lead):
+    """Normalize a (rows,)/(rows, 1) counts operand and tile it across any
+    leading worker dims (the per-row layout is identical per worker)."""
+    if counts is None:
+        return None
+    c = jnp.asarray(counts, jnp.float32).reshape(rows, 1)
+    if lead:
+        c = jnp.tile(c, (int(np.prod(lead)), 1))
+    return c
+
+
+def topk_pack(x_mat, counts=None, *, fraction: float,
+              interpret: bool | None = None):
+    """(..., rows, 1024) → (idx (..., rows, W) i32, vals (..., rows, W) f32)
+    with W = ceil(fraction·1024) — the blockwise top-k wire payload.
+
+    ``counts``: per-row valid lengths (:meth:`KernelPlan.row_counts`); the
+    active slot count per row is ``ceil(fraction · count)``.
+    """
+    lead, rows = x_mat.shape[:-2], x_mat.shape[-2]
+    idx, vals = tk.topk_select_pallas(
+        _rows2d(x_mat), _tile_counts(counts, rows, lead),
+        fraction=fraction, interpret=interpret)
+    w = idx.shape[-1]
+    return (idx.reshape(lead + (rows, w)), vals.reshape(lead + (rows, w)))
+
+
+def topk_unpack(idx, vals, *, interpret: bool | None = None):
+    """Inverse scatter of :func:`topk_pack` → (..., rows, 1024) f32."""
+    lead, rows, w = idx.shape[:-2], idx.shape[-2], idx.shape[-1]
+    out = tk.topk_scatter_pallas(idx.reshape(-1, w), vals.reshape(-1, w),
+                                 interpret=interpret)
+    return out.reshape(lead + (rows, LANE))
+
+
+def qsgd_pack(x_mat, *, levels: int, interpret: bool | None = None):
+    """(..., rows, 1024) → (levels (..., rows, 1024·bits/8) u8,
+    norms (..., rows, 1) f32) — the blockwise QSGD wire payload."""
+    lead, rows = x_mat.shape[:-2], x_mat.shape[-2]
+    packed, norms = qq.qsgd_quant_pallas(_rows2d(x_mat), levels=levels,
+                                         interpret=interpret)
+    return (packed.reshape(lead + (rows, packed.shape[-1])),
+            norms.reshape(lead + (rows, 1)))
+
+
+def qsgd_unpack(packed, norms, *, levels: int,
+                interpret: bool | None = None):
+    """Inverse of :func:`qsgd_pack`: (..., rows, 1024) f32."""
+    lead, rows = packed.shape[:-2], packed.shape[-2]
+    out = qq.qsgd_dequant_pallas(packed.reshape(-1, packed.shape[-1]),
+                                 norms.reshape(-1, 1), levels=levels,
+                                 interpret=interpret)
     return out.reshape(lead + (rows, LANE))
 
 

@@ -6,9 +6,17 @@ import jax.numpy as jnp
 
 from repro.core.compression import sign_pack as _sign_pack
 from repro.core.compression import sign_unpack as _sign_unpack
+# the canonical jnp rows implementations in core.wire double as the
+# oracles for the top-k select and QSGD quantize kernels: kernel vs these
+# must be bit-exact (tests/test_kernels.py)
+from repro.core.wire import qsgd_rows as qsgd_rows_ref
+from repro.core.wire import qsgd_rows_unpack as qsgd_rows_unpack_ref
+from repro.core.wire import topk_rows as topk_rows_ref
+from repro.core.wire import topk_rows_unpack as topk_rows_unpack_ref
 
 __all__ = ["momentum_update_ref", "sign_pack_ref", "sign_pack_rows_ref",
-           "sign_unpack_ref", "gossip_mix_ref"]
+           "sign_unpack_ref", "gossip_mix_ref", "topk_rows_ref",
+           "topk_rows_unpack_ref", "qsgd_rows_ref", "qsgd_rows_unpack_ref"]
 
 
 def momentum_update_ref(x, m, g, lr, *, mu, wd=0.0, nesterov=False):

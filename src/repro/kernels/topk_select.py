@@ -1,0 +1,125 @@
+"""Blockwise top-k selection kernels: per-row magnitude top-k on the
+flatten-once (rows, 1024) layout — the top-k wire format's hot spot.
+
+Two kernels:
+
+  * ``topk_select_kernel``  — x (rows, 1024) f32 → idx (rows, W) int32 +
+                              vals (rows, W) f32, W = ceil(fraction·1024).
+  * ``topk_scatter_kernel`` — inverse: Q(x)[i] = val_j where idx_j == i.
+
+One *row* is one top-k block (matching ``compression.TopKCompressor``'s
+per-leaf blocks via the ``KernelPlan`` row alignment).  Selection is W
+unrolled rounds of (row-max |x|, lowest-index argmin tie-break, mask-out):
+pure VPU reductions over one vreg-resident row block, no sort and no
+gather — on TPU the "argmax" is the broadcasted-iota min-reduce idiom, so
+nothing leaves registers between rounds.  This matches ``lax.top_k``'s
+descending-|x|, stable-by-index order bit-exactly (the jnp oracle is
+``repro.core.wire.topk_rows``).
+
+Padding contract: slot ``j`` of a row is active iff
+``j < ceil(fraction · counts[row])`` — the kept count follows the row's
+true length (``counts`` from ``KernelPlan.row_counts``), so tail blocks
+keep the same fraction as full blocks and pure-padding rows emit only
+``(idx 0, val 0.0)`` placeholders, which the scatter (an *add*) turns into
+exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+
+__all__ = ["topk_select_pallas", "topk_scatter_pallas", "LANE",
+           "BLOCK_ROWS", "MAX_WIDTH"]
+
+LANE = 1024
+BLOCK_ROWS = 128
+MAX_WIDTH = 128      # the select kernel unrolls W rounds; cap the unroll
+
+
+def _select_kernel(x_ref, cnt_ref, idx_ref, val_ref, *, width, fraction):
+    x = x_ref[...]                                    # (BR, 1024) f32
+    cnt = cnt_ref[...]                                # (BR, 1) f32
+    br = x.shape[0]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (br, LANE), 1)
+    k_active = jnp.ceil(jnp.float32(fraction) * cnt).astype(jnp.int32)
+    a = jnp.abs(x)
+    for j in range(width):
+        m = jnp.max(a, axis=1, keepdims=True)
+        sel = jnp.min(jnp.where(a == m, lanes, LANE), axis=1, keepdims=True)
+        hit = lanes == sel
+        val = jnp.sum(jnp.where(hit, x, 0.0), axis=1, keepdims=True)
+        active = jnp.int32(j) < k_active
+        idx_ref[:, j:j + 1] = jnp.where(active, sel, 0)
+        val_ref[:, j:j + 1] = jnp.where(active, val, 0.0)
+        a = jnp.where(hit, -1.0, a)       # |x| ≥ 0: never re-selected
+
+
+def _scatter_kernel(idx_ref, val_ref, out_ref, *, width):
+    idx = idx_ref[...]                                # (BR, W) int32
+    vals = val_ref[...]                               # (BR, W) f32
+    br = idx.shape[0]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (br, LANE), 1)
+    acc = jnp.zeros((br, LANE), jnp.float32)
+    for j in range(width):
+        acc = acc + jnp.where(lanes == idx[:, j:j + 1],
+                              vals[:, j:j + 1], 0.0)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("fraction", "width",
+                                             "interpret"))
+def topk_select_pallas(x, counts=None, *, fraction: float,
+                       width: int | None = None,
+                       interpret: bool | None = None):
+    """x: (rows, 1024) f32 → (idx (rows, W) i32, vals (rows, W) f32)."""
+    if interpret is None:
+        interpret = default_interpret()
+    rows, lane = x.shape
+    assert lane == LANE and rows % BLOCK_ROWS == 0, (rows, lane)
+    if width is None:
+        width = max(1, int(np.ceil(fraction * LANE)))
+    assert width <= MAX_WIDTH, (
+        f"top-k width {width} > {MAX_WIDTH}: the select kernel unrolls W "
+        "selection rounds — use the jnp rows path for coarse fractions")
+    if counts is None:
+        counts = jnp.full((rows, 1), float(LANE), jnp.float32)
+    grid = (rows // BLOCK_ROWS,)
+    kernel = functools.partial(_select_kernel, width=width,
+                               fraction=float(fraction))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0)),
+                   pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, width), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, width), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), counts.reshape(rows, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_scatter_pallas(idx, vals, *, interpret: bool | None = None):
+    """(rows, W) i32 + (rows, W) f32 → Q(x) (rows, 1024) f32."""
+    if interpret is None:
+        interpret = default_interpret()
+    rows, width = idx.shape
+    assert vals.shape == (rows, width) and rows % BLOCK_ROWS == 0
+    grid = (rows // BLOCK_ROWS,)
+    kernel = functools.partial(_scatter_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32)],
+        interpret=interpret,
+    )(idx, vals.astype(jnp.float32))[0]

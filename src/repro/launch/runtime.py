@@ -135,10 +135,26 @@ def build_comm(run: RunCfg, layout: Layout):
     return ShardedComm(topo, axis_names=waxes)
 
 
+def _compressor_kwargs(o) -> dict:
+    """OptimCfg knobs → the named compressor's constructor args."""
+    name = o.compressor.lower()
+    if name == "sign":
+        return {"block": o.compressor_block}
+    if name == "topk":
+        return {"fraction": o.compressor_fraction,
+                "block": o.compressor_block}
+    if name == "randk":
+        return {"fraction": o.compressor_fraction}
+    if name == "qsgd":
+        return {"levels": o.compressor_levels,
+                "block": o.compressor_block}
+    return {}
+
+
 def _make_optimizer(run: RunCfg, comm):
     o = run.optim
-    comp = make_compressor(o.compressor) if o.name.startswith(
-        ("cpd", "choco")) else None
+    comp = make_compressor(o.compressor, **_compressor_kwargs(o)) if \
+        o.name.startswith(("cpd", "choco")) else None
     return make_optimizer(
         o.name, comm, eta=o.eta, mu=o.mu, p=o.p, gamma=o.gamma,
         weight_decay=o.weight_decay, compressor=comp,

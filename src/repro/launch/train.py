@@ -28,6 +28,16 @@ def main():
                     help="run the fused round on the flatten-once Pallas "
                          "kernel layout (recommended on TPU; interpret "
                          "mode — the correctness harness — on CPU)")
+    ap.add_argument("--compressor", default=None,
+                    help="cpd_sgdm/choco wire codec: "
+                         "identity|sign|topk|randk|qsgd")
+    ap.add_argument("--compressor-fraction", type=float, default=None,
+                    help="topk/randk kept fraction")
+    ap.add_argument("--compressor-levels", type=int, default=None,
+                    help="qsgd quantization levels (7 = 4-bit wire)")
+    ap.add_argument("--compressor-block", type=int, default=None,
+                    help="sign/topk/qsgd block width (1024 = kernel lane; "
+                         "other widths use the per-leaf jnp wire)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -66,6 +76,17 @@ def main():
         optim = dataclasses.replace(optim, eta=args.eta)
     if args.use_kernel:
         optim = dataclasses.replace(optim, use_kernel=True)
+    if args.compressor:
+        optim = dataclasses.replace(optim, compressor=args.compressor)
+    if args.compressor_fraction is not None:
+        optim = dataclasses.replace(
+            optim, compressor_fraction=args.compressor_fraction)
+    if args.compressor_levels is not None:
+        optim = dataclasses.replace(
+            optim, compressor_levels=args.compressor_levels)
+    if args.compressor_block is not None:
+        optim = dataclasses.replace(
+            optim, compressor_block=args.compressor_block)
     parallel = run.parallel
     if args.topology:
         parallel = dataclasses.replace(parallel, topology=args.topology)

@@ -15,14 +15,29 @@ from repro.core.compression import (IdentityCompressor, QSGDCompressor,
                                     TopKCompressor, contraction_ratio,
                                     make_compressor, sign_pack, sign_unpack)
 
+# deterministic δ-contractions: the guarantee holds per realization.
+# Blocks both smaller and larger than the generated vectors (n ≤ 3000)
+# are covered, so single-block and multi-block (tail-padded) paths run.
 COMPRESSORS = [
     IdentityCompressor(),
     SignCompressor(block=64),
     SignCompressor(block=1024),
     TopKCompressor(fraction=0.1),
     TopKCompressor(fraction=0.01),
+    TopKCompressor(fraction=0.1, block=64),
+    QSGDCompressor(levels=7),
     QSGDCompressor(levels=16),
+    QSGDCompressor(levels=1),
+    QSGDCompressor(levels=7, block=64),
 ]
+# ... plus rand-k, whose δ holds in expectation only (tested separately):
+# together these are all five operators of make_compressor.
+ALL_FIVE = COMPRESSORS + [RandKCompressor(fraction=0.25)]
+
+
+def test_all_five_operators_covered():
+    assert {c.name for c in ALL_FIVE} == {
+        "identity", "sign", "topk", "randk", "qsgd"}
 
 
 @st.composite
@@ -34,16 +49,42 @@ def vectors(draw):
     return (rng.standard_normal(n) * scale).astype(np.float32)
 
 
-@pytest.mark.parametrize("comp", COMPRESSORS, ids=lambda c: f"{c.name}")
+@pytest.mark.parametrize(
+    "comp", COMPRESSORS,
+    ids=lambda c: f"{c.name}-{getattr(c, 'block', getattr(c, 'levels', ''))}"
+    if c.name in ("sign",) else
+    f"{c.name}-{getattr(c, 'fraction', getattr(c, 'levels', ''))}"
+    f"-{getattr(c, 'block', '')}" if c.name in ("topk", "qsgd")
+    else c.name)
 @given(x=vectors())
 @settings(max_examples=25, deadline=None)
 def test_delta_contraction(comp, x):
-    """‖x − Q(x)‖² ≤ (1 − δ)‖x‖² with δ = delta_lower_bound(d)."""
+    """Definition 1: ‖x − Q(x)‖² ≤ (1 − δ)‖x‖² with the operator's own
+    guaranteed δ = delta_lower_bound(d), over random shapes and scales."""
     xj = jnp.asarray(x)
     q = comp.apply(xj, jax.random.PRNGKey(0))
     ratio = float(contraction_ratio(xj, q))
     delta = comp.delta_lower_bound(x.size)
+    assert 0.0 < delta <= 1.0, (comp.name, delta)
     assert ratio <= (1.0 - delta) + 1e-4, (comp.name, ratio, delta)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@given(x=vectors())
+@settings(max_examples=10, deadline=None)
+def test_delta_contraction_dtypes(dtype, x):
+    """The contraction property survives the leaf dtype round-trip (Q
+    returns the input dtype; the bound is measured in f32)."""
+    xj = jnp.asarray(x).astype(dtype)
+    for comp in [SignCompressor(), TopKCompressor(fraction=0.1),
+                 QSGDCompressor(levels=7)]:
+        q = comp.apply(xj, jax.random.PRNGKey(0))
+        assert q.dtype == xj.dtype and q.shape == xj.shape
+        ratio = float(contraction_ratio(xj, q))
+        delta = comp.delta_lower_bound(x.size)
+        # bf16 rounding of Q(x) costs a little slack on top of Def. 1
+        slack = 1e-4 if dtype == jnp.float32 else 2e-2
+        assert ratio <= (1.0 - delta) + slack, (comp.name, ratio, delta)
 
 
 @given(x=vectors())
@@ -102,6 +143,6 @@ def test_make_compressor():
 
 
 def test_zero_vector_safe():
-    for comp in COMPRESSORS:
+    for comp in ALL_FIVE:
         q = comp.apply(jnp.zeros((128,)), jax.random.PRNGKey(0))
         assert bool(jnp.isfinite(q).all())

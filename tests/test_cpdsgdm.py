@@ -120,10 +120,12 @@ def test_packed_wire_bytes_accounting():
     assert plan.used_rows * (1024 // 8 + 4) == sign_wire_bytes(n)
     raw_bf16 = deg * n * 2
     assert 14.0 < raw_bf16 / got < 16.0        # the ~1/16th-of-bf16 claim
-    # identity compressor still uses the per-element model (full precision)
+    # identity compressor: CPD's q is the f32 drift x − x̂ — that is what
+    # ships, so that is what is charged (accounted ≡ shipped), even for
+    # bf16 params
     full = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=4, gamma=0.4),
                    DenseComm(ring(K)), IdentityCompressor())
-    assert full.bytes_per_comm_round(params) == deg * n * 2
+    assert full.bytes_per_comm_round(params) == deg * n * 4
 
 
 def test_packed_wire_schedule_degree_accounting():

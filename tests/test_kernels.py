@@ -176,6 +176,65 @@ def test_kernel_plan_row_counts():
     assert plan.n_valid == 1500 + 4 + 2048
 
 
+# ----------------------------------------------------- wire codec kernels
+@pytest.mark.parametrize("fraction", [0.01, 0.05])
+def test_topk_kernel_matches_rows_oracle_bit_exact(fraction):
+    """Pallas top-k select/scatter == the jnp rows oracle (lax.top_k based)
+    bit-exactly, including tie ordering, active-slot masking from counts,
+    and pure-padding rows."""
+    from repro.kernels.topk_select import BLOCK_ROWS as TBR
+    rows = 2 * TBR
+    x = _rand(jax.random.PRNGKey(1), (rows, 1024))
+    x = x.at[3].set(0.0)                       # all-zero row: tie cascade
+    counts = jnp.full((rows,), 1024.0).at[5].set(300.0).at[7].set(0.0)
+    x = x.at[5, 300:].set(0.0).at[7].set(0.0)  # padding is zero by contract
+    idx_k, val_k = ops.topk_pack(x, counts=counts, fraction=fraction,
+                                 interpret=True)
+    idx_r, val_r = ref.topk_rows_ref(x, counts, fraction=fraction)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_array_equal(np.asarray(val_k), np.asarray(val_r))
+    assert (np.asarray(val_k[7]) == 0).all()   # padding row: placeholders
+    un_k = ops.topk_unpack(idx_k, val_k, interpret=True)
+    un_r = ref.topk_rows_unpack_ref(idx_r, val_r, 1024)
+    np.testing.assert_array_equal(np.asarray(un_k), np.asarray(un_r))
+
+
+@pytest.mark.parametrize("levels", [1, 7, 16])
+def test_qsgd_kernel_matches_rows_oracle_bit_exact(levels):
+    """Pallas QSGD quantize/dequantize == the jnp rows oracle bit-exactly
+    for 2/4/8-bit packings, zero rows included."""
+    from repro.kernels.qsgd_quant import BLOCK_ROWS as QBR
+    rows = QBR
+    x = _rand(jax.random.PRNGKey(2), (rows, 1024)) * 3.0
+    x = x.at[0].set(0.0)                       # norm-0 row
+    pk_k, nm_k = ops.qsgd_pack(x, levels=levels, interpret=True)
+    pk_r, nm_r = ref.qsgd_rows_ref(x, levels=levels)
+    np.testing.assert_array_equal(np.asarray(pk_k), np.asarray(pk_r))
+    np.testing.assert_array_equal(np.asarray(nm_k[:, 0]), np.asarray(nm_r))
+    un_k = ops.qsgd_unpack(pk_k, nm_k, levels=levels, interpret=True)
+    un_r = ref.qsgd_rows_unpack_ref(pk_r, nm_r, levels=levels, block=1024)
+    np.testing.assert_array_equal(np.asarray(un_k), np.asarray(un_r))
+    assert (np.asarray(un_k[0]) == 0).all()
+
+
+def test_codec_kernel_roundtrip_equals_compressor_apply():
+    """Kernel-path pack∘unpack on the flatten-once layout == the per-leaf
+    compressor semantics, bit-exactly, through the KernelPlan (ragged
+    leaves, padded tails)."""
+    from repro.core import QSGDCompressor, TopKCompressor
+    from repro.core.wire import make_codec
+    x = _rand(jax.random.PRNGKey(3), (2 * 1024 + 300,))
+    plan = ops.KernelPlan.for_tree({"w": x})
+    mat = plan.flatten({"w": x})
+    for comp in [TopKCompressor(fraction=0.01), QSGDCompressor(levels=7)]:
+        codec = make_codec(comp)
+        payload = codec.rows_pack(mat, counts=plan.row_counts(),
+                                  interpret=True)
+        q = plan.unflatten(codec.rows_unpack(payload, interpret=True))["w"]
+        np.testing.assert_array_equal(np.asarray(q),
+                                      np.asarray(comp.apply(x)))
+
+
 # ------------------------------------------------- padding-scale regression
 def test_sign_pack_padded_tail_matches_oracle_bit_exact():
     """Regression: the kernel's tail-block scale must equal the padding-
@@ -221,14 +280,13 @@ def test_interpret_is_lazy_and_overridable():
 
 
 # --------------------------------------------------- round-level equivalence
-def _round_equiv(opt_factory, tol):
-    """use_kernel=True fused round == jnp fused round over 2 rounds."""
-    K, P = 4, 4
-    def params0():
-        key = jax.random.PRNGKey(0)
-        return {"w1": _rand(key, (K, 33, 65)),
-                "w2": _rand(jax.random.fold_in(key, 1), (K, 7)),
-                "w3": _rand(jax.random.fold_in(key, 2), (K, 2, 5, 11))}
+def _run_rounds(opt, K=4, P=4):
+    """Drive 2 fused rounds of ``opt`` on a fixed problem; return
+    (params, state, losses)."""
+    key = jax.random.PRNGKey(0)
+    params = {"w1": _rand(key, (K, 33, 65)),
+              "w2": _rand(jax.random.fold_in(key, 1), (K, 7)),
+              "w3": _rand(jax.random.fold_in(key, 2), (K, 2, 5, 11))}
 
     def loss_fn(pp, b):
         return 0.5 * sum(jnp.sum((l - b[0, 0]) ** 2)
@@ -243,25 +301,35 @@ def _round_equiv(opt_factory, tol):
     batches = jnp.stack([
         _rand(jax.random.fold_in(jax.random.PRNGKey(9), t), (K, 2, 3))
         for t in range(P)])
-    outs = []
-    for use_kernel in (False, True):
-        opt = opt_factory(K, P, use_kernel)
-        params, state = params0(), None
-        state = opt.init(params)
-        roundj = jax.jit(lambda s, pp, bs: opt.round(s, pp, grads_fn, bs))
-        for _ in range(2):
-            params, state, losses = roundj(state, params, batches)
-        outs.append((params, state, losses))
-    (pa, sa, la), (pb, sb, lb) = outs
-    assert int(sb["step"]) == 2 * P
-    for a, b in zip(jax.tree_util.tree_leaves((pa, sa["m"], la)),
-                    jax.tree_util.tree_leaves((pb, sb["m"], lb))):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol)
+    state = opt.init(params)
+    roundj = jax.jit(lambda s, pp, bs: opt.round(s, pp, grads_fn, bs))
+    for _ in range(2):
+        params, state, losses = roundj(state, params, batches)
+    return params, state, losses
+
+
+def _assert_round_outputs_close(a, b, tol):
+    """tol=0.0 demands bitwise equality; otherwise allclose(atol=tol)."""
+    (pa, sa, la), (pb, sb, lb) = a, b
+    leaves_a = jax.tree_util.tree_leaves((pa, sa["m"], la))
+    leaves_b = jax.tree_util.tree_leaves((pb, sb["m"], lb))
     if "xhat" in sa:
-        for a, b in zip(jax.tree_util.tree_leaves(sa["xhat"]),
-                        jax.tree_util.tree_leaves(sb["xhat"])):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+        leaves_a += jax.tree_util.tree_leaves(sa["xhat"])
+        leaves_b += jax.tree_util.tree_leaves(sb["xhat"])
+    for x, y in zip(leaves_a, leaves_b):
+        if tol == 0.0:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                        atol=tol)
+
+
+def _round_equiv(opt_factory, tol):
+    """use_kernel=True fused round == jnp fused round over 2 rounds."""
+    K, P = 4, 4
+    outs = [_run_rounds(opt_factory(K, P, uk), K, P) for uk in (False, True)]
+    assert int(outs[1][1]["step"]) == 2 * P
+    _assert_round_outputs_close(outs[0], outs[1], tol)
 
 
 def test_kernel_round_equals_jnp_round_dense_pdsgdm():
@@ -275,19 +343,51 @@ def test_kernel_round_equals_jnp_round_dense_pdsgdm():
         tol=2e-5)
 
 
-def test_kernel_round_equals_jnp_round_dense_cpdsgdm_packed():
-    """CPD-SGDM: the kernel wire (Pallas pack on the flatten-once layout)
-    must reproduce the per-leaf jnp Q — per-leaf row alignment makes the
-    sign blocks identical, so xhat trajectories coincide."""
-    from repro.core import CPDSGDM, CPDSGDMConfig, SignCompressor
+@pytest.mark.parametrize("comp_name", ["sign", "topk", "qsgd"])
+def test_kernel_round_equals_perleaf_oracle_dense_cpdsgdm(comp_name):
+    """CPD-SGDM with every kernel-wire codec: the Pallas pack on the
+    flatten-once layout must reproduce the per-leaf jnp codec — per-leaf
+    row alignment makes the blocks identical, so xhat trajectories
+    coincide.  Three drivers of the same 2 rounds:
+
+      (a) use_kernel=True   — matrix-domain kernel round;
+      (b) use_kernel=False  — tree round, kernel-wire comm;
+      (c) use_kernel=False with the kernel wire disabled — the *per-leaf
+          jnp codec oracle* path.
+
+    (b) ≡ (c) bit-exactly for sign and top-k (same jnp momentum, codec
+    pack proven bit-equal to the kernel pack; sign's ±1·scale product and
+    top-k's scatter are exact, so even fma contraction cannot move them).
+    QSGD's decoded q ends in a true multiply, which XLA-CPU may contract
+    into the consumer's x̂ + q add (an LLVM-level fma that no HLO-level
+    barrier blocks) — its payload and every materialized value are still
+    bit-exact (asserted at codec level elsewhere), so the round-level
+    comparison allows ≤1 ulp.  (a) ≈ (b) to kernel-momentum tolerance.
+    """
+    from repro.core import (CPDSGDM, CPDSGDMConfig, QSGDCompressor,
+                            SignCompressor, TopKCompressor)
     from repro.core.gossip import DenseComm
     from repro.core.topology import ring
-    _round_equiv(
-        lambda K, P, uk: CPDSGDM(
+    comp = {"sign": SignCompressor(),
+            "topk": TopKCompressor(fraction=0.02),
+            "qsgd": QSGDCompressor(levels=7)}[comp_name]
+    K, P = 4, 4
+
+    def make(uk):
+        return CPDSGDM(
             CPDSGDMConfig(eta=0.05, mu=0.9, p=P, gamma=0.4,
                           weight_decay=1e-4, use_kernel=uk),
-            DenseComm(ring(K)), SignCompressor()),
-        tol=2e-5)
+            DenseComm(ring(K)), comp)
+
+    opt_mat, opt_tree, opt_leaf = make(True), make(False), make(False)
+    assert opt_mat.kernel_comm_supported
+    opt_leaf._kernel_wire = lambda: False      # force the per-leaf oracle
+    out_mat = _run_rounds(opt_mat, K, P)
+    out_tree = _run_rounds(opt_tree, K, P)
+    out_leaf = _run_rounds(opt_leaf, K, P)
+    oracle_tol = 0.0 if comp_name != "qsgd" else 6e-7   # ≤1 ulp (fma)
+    _assert_round_outputs_close(out_tree, out_leaf, tol=oracle_tol)
+    _assert_round_outputs_close(out_mat, out_tree, tol=2e-5)
 
 
 def test_kernel_round_csgdm_and_fallback_compressor():
@@ -365,16 +465,20 @@ _SCRIPT_SHARDED_KERNEL = textwrap.dedent("""
 
     mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
-    # tp=1 mesh: the kernel layout's sign blocks (full per-worker leaves)
+    # tp=1 mesh: the kernel layout's codec blocks (full per-worker leaves)
     # coincide with the per-device tree blocks, so the equivalence is tight
-    # even for CPD-SGDM's compressed wire.
-    for opt_name in ["pd_sgdm", "cpd_sgdm"]:
+    # for every compressed wire (sign / top-k / QSGD), not just sign.
+    for opt_name, comp in [("pd_sgdm", "sign"), ("cpd_sgdm", "sign"),
+                           ("cpd_sgdm", "topk"), ("cpd_sgdm", "qsgd")]:
         finals = []
         for uk in (False, True):
             run = RunCfg(model=mcfg,
                          parallel=ParallelCfg(profile="A", remat="none"),
                          optim=OptimCfg(name=opt_name, eta=0.05, mu=0.9, p=3,
-                                        weight_decay=1e-4, use_kernel=uk))
+                                        weight_decay=1e-4, use_kernel=uk,
+                                        compressor=comp,
+                                        compressor_fraction=0.01,
+                                        compressor_levels=7))
             mesh = make_debug_mesh(8, 1)
             pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
             K = pack.layout.n_workers
@@ -389,7 +493,7 @@ _SCRIPT_SHARDED_KERNEL = textwrap.dedent("""
         for a, b in zip(jax.tree_util.tree_leaves(finals[0]),
                         jax.tree_util.tree_leaves(finals[1])):
             np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)
-        print("KERNEL_ROUND_EQ_OK", opt_name)
+        print("KERNEL_ROUND_EQ_OK", opt_name, comp)
 """)
 
 
@@ -408,7 +512,10 @@ def _run_sub(script, env_extra=None):
 @pytest.mark.slow
 def test_kernel_round_equals_jnp_round_sharded():
     """use_kernel=True TrainPack.train_round == the jnp tree round on the
-    ShardedComm backend (ppermute gossip, CPD's packed kernel wire)."""
+    ShardedComm backend (ppermute gossip, CPD's packed kernel wire) for
+    each kernel-wire codec."""
     out = _run_sub(_SCRIPT_SHARDED_KERNEL)
-    assert "KERNEL_ROUND_EQ_OK pd_sgdm" in out
-    assert "KERNEL_ROUND_EQ_OK cpd_sgdm" in out
+    assert "KERNEL_ROUND_EQ_OK pd_sgdm sign" in out
+    assert "KERNEL_ROUND_EQ_OK cpd_sgdm sign" in out
+    assert "KERNEL_ROUND_EQ_OK cpd_sgdm topk" in out
+    assert "KERNEL_ROUND_EQ_OK cpd_sgdm qsgd" in out

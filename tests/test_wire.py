@@ -1,0 +1,224 @@
+"""Wire codec subsystem: payload round-trips, accounted ≡ shipped bytes,
+and the rand-k shared-key zero-communication-indices property."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor,
+                        QSGDCompressor, RandKCompressor, SignCompressor,
+                        TopKCompressor, make_codec)
+from repro.core.gossip import DenseComm
+from repro.core.topology import ring
+from repro.core.wire import payload_nbytes
+
+COMPRESSORS = [
+    IdentityCompressor(),
+    SignCompressor(),
+    SignCompressor(block=64),
+    TopKCompressor(fraction=0.01),
+    TopKCompressor(fraction=0.3),
+    RandKCompressor(fraction=0.05),
+    QSGDCompressor(levels=7),
+    QSGDCompressor(levels=16),
+    QSGDCompressor(levels=1),
+]
+
+_ids = lambda c: f"{c.name}-{getattr(c, 'block', getattr(c, 'levels', ''))}" \
+    if c.name in ("sign", "qsgd") else \
+    (f"{c.name}-{getattr(c, 'fraction', '')}" if c.name in ("topk", "randk")
+     else c.name)
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS, ids=_ids)
+@pytest.mark.parametrize("n", [1, 7, 1024, 2348])
+def test_codec_roundtrip_equals_apply(comp, n):
+    """Q = unpack ∘ pack by construction: the codec round-trip must equal
+    ``Compressor.apply`` bit-exactly, for every operator and shape."""
+    codec = make_codec(comp)
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n,)) * 2.5
+    payload = codec.pack(x, key)
+    q = codec.unpack(payload, n, x.shape, x.dtype, key=key)
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(comp.apply(x, key)))
+    assert q.shape == x.shape and q.dtype == x.dtype
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS, ids=_ids)
+@pytest.mark.parametrize("n", [1, 7, 1024, 2348, 100 * 1024 + 300])
+def test_accounted_bytes_equal_shipped_bytes_dense(comp, n):
+    """``wire_bytes`` must equal the summed nbytes of the wire payload's
+    actual arrays (dense-simulated: the payload a worker would ship,
+    materialized abstractly), and ``bytes_per_comm_round`` must be exactly
+    degree × Σ-leaf payload — no per-element approximation anywhere."""
+    codec = make_codec(comp)
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+    wire = jax.eval_shape(
+        lambda a: codec.wire(codec.pack(a, jax.random.PRNGKey(0))), x)
+    assert payload_nbytes(wire) == codec.wire_bytes(n), comp
+    # optimizer-level accounting: degree × Σ leaf payloads
+    K = 8
+    opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=4, gamma=0.4),
+                  DenseComm(ring(K)), comp)
+    params = {"a": jnp.zeros((n,)), "b": jnp.zeros((33, 65))}
+    got = opt.bytes_per_comm_round(params)
+    want = ring(K).degree * (codec.wire_bytes(n) + codec.wire_bytes(33 * 65))
+    assert got == want, comp
+
+
+def test_compressed_wire_under_half_bf16_baseline():
+    """Acceptance: every non-identity codec at its default wire config
+    ships < 50% of the bf16 full-precision baseline on a realistically-
+    sized leaf.  (A deliberately coarse top-k — 8-byte slots × a large
+    fraction — can exceed bf16; that is a configuration choice the exact
+    accounting now makes visible instead of hiding.)"""
+    n = 1 << 20
+    baseline = 2 * n                     # bf16 full-precision gossip
+    for comp in [SignCompressor(), SignCompressor(block=64),
+                 TopKCompressor(fraction=0.01), RandKCompressor(),
+                 RandKCompressor(fraction=0.05), QSGDCompressor()]:
+        ratio = make_codec(comp).wire_bytes(n) / baseline
+        assert ratio < 0.5, (comp, ratio)
+    # an 8-bit qsgd wire is definitionally ~half of bf16 (plus norms):
+    # the exact accounting reports it honestly instead of rounding down
+    assert make_codec(QSGDCompressor(levels=16)).wire_bytes(n) / baseline \
+        == pytest.approx(0.5, abs=5e-3)
+
+
+def test_randk_shared_key_reconstructs_indices():
+    """Rand-k's satellite property: the wire carries *only* values; sender
+    and receiver derive identical indices from the shared key — zero extra
+    communication — and different rounds draw different coordinates."""
+    comp = RandKCompressor(fraction=0.1)
+    codec = make_codec(comp)
+    n = 3000
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    key = jax.random.PRNGKey(42)
+    payload = codec.pack(x, key)
+    wire = codec.wire(payload)
+    assert set(wire) == {"vals"}                       # indices never ship
+    assert payload_nbytes(wire) == codec.wire_bytes(n) == codec.k(n) * 4
+    # receiver-side: same key → same indices → identical reconstruction
+    idx_sender = codec.derive_idx(key, n)
+    idx_receiver = codec.derive_idx(key, n)
+    np.testing.assert_array_equal(np.asarray(idx_sender),
+                                  np.asarray(idx_receiver))
+    q_full = codec.unpack(payload, n, x.shape, x.dtype, key=key)
+    q_wire = codec.unpack(wire, n, x.shape, x.dtype, key=key)
+    np.testing.assert_array_equal(np.asarray(q_full), np.asarray(q_wire))
+    # the kept set really is k distinct coordinates of x
+    kept = np.asarray(idx_sender)
+    assert len(set(kept.tolist())) == codec.k(n)
+    np.testing.assert_array_equal(np.asarray(q_wire)[kept],
+                                  np.asarray(x)[kept])
+    # a different round key draws a different coordinate set
+    idx2 = np.asarray(codec.derive_idx(jax.random.PRNGKey(43), n))
+    assert set(idx2.tolist()) != set(kept.tolist())
+
+
+def test_dense_payload_wire_matches_legacy_apply_path():
+    """The dense backend's payload-wire comm round (packs/unpacks the
+    simulated wire) must equal the legacy apply-only path bitwise — the
+    wire format is a refactor of the math, not a change to it."""
+    K = 4
+    for comp in [SignCompressor(block=64), TopKCompressor(fraction=0.1),
+                 RandKCompressor(fraction=0.2), QSGDCompressor(levels=7)]:
+        outs = []
+        for packed in (True, False):
+            opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=2, gamma=0.4,
+                                        packed_wire=packed),
+                          DenseComm(ring(K)), comp)
+            params = {"w": jax.random.normal(jax.random.PRNGKey(3),
+                                             (K, 130))}
+            state = opt.init(params)
+            state["step"] = jnp.int32(opt.config.p)
+            p_new, s_new = opt.comm_round(state, params)
+            outs.append((np.asarray(p_new["w"]),
+                         np.asarray(s_new["xhat"]["w"])))
+        np.testing.assert_array_equal(outs[0][0], outs[1][0])
+        np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
+_SCRIPT_SHARDED_SHIPPED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor,
+                            QSGDCompressor, RandKCompressor, SignCompressor,
+                            TopKCompressor)
+    from repro.core.gossip import ShardedComm
+    from repro.core.topology import ring
+    from repro.launch.mesh import make_mesh
+    from repro.launch.runtime import _smap
+
+    mesh = make_mesh((8,), ("w",))
+    comm = ShardedComm(ring(8), axis_names=("w",))
+    smap = _smap(mesh)
+
+    shipped = []
+    orig = ShardedComm._receive_from
+    def tallied(self, x, axis, shift):
+        shipped.append(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize)
+        return orig(self, x, axis, shift)
+    ShardedComm._receive_from = tallied
+
+    cases = [IdentityCompressor(), SignCompressor(), SignCompressor(block=64),
+             TopKCompressor(fraction=0.01), RandKCompressor(fraction=0.05),
+             QSGDCompressor(levels=7)]
+    params = {"a": jnp.zeros((8, 1500)), "b": jnp.zeros((8, 33, 65))}
+    bf16_baseline = ring(8).degree * (1500 + 33 * 65) * 2
+    for comp in cases:
+        opt = CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=2, gamma=0.4),
+                      comm, comp)
+
+        def one_round(p):
+            st = opt.init(p)
+            st["step"] = jnp.int32(opt.config.p)
+            p_new, _ = opt.comm_round(st, p)
+            return p_new
+
+        shipped.clear()
+        jax.eval_shape(smap(one_round, in_specs=(P("w"),),
+                            out_specs=P("w")), params)
+        got = sum(shipped)
+        want = opt.bytes_per_comm_round(
+            {"a": jax.ShapeDtypeStruct((1500,), jnp.float32),
+             "b": jax.ShapeDtypeStruct((33, 65), jnp.float32)})
+        assert got == want, (comp.name, got, want)
+        if comp.name != "identity":
+            assert got < 0.5 * bf16_baseline, (comp.name, got, bf16_baseline)
+        print("SHIPPED_OK", comp.name, got)
+    print("ALL_SHIPPED_OK")
+""")
+
+
+def _run_sub(script, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    if env_extra:
+        env.update(env_extra)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_accounted_bytes_equal_shipped_bytes_sharded():
+    """Accounted ≡ shipped on the production backend: tally the tensors
+    actually handed to ``ppermute`` while tracing one sharded CPD comm
+    round, per codec — the sum must equal ``bytes_per_comm_round``
+    exactly, and every non-identity codec must ship < 50% of the bf16
+    full-precision baseline."""
+    out = _run_sub(_SCRIPT_SHARDED_SHIPPED)
+    assert "ALL_SHIPPED_OK" in out
+    for name in ["identity", "sign", "topk", "randk", "qsgd"]:
+        assert f"SHIPPED_OK {name}" in out
