@@ -23,7 +23,13 @@ small trees (the derived row notes when it does); on TPU the kernels are
 the fast path, interpret mode exists only as the correctness harness.
 
 Derived: rounds/sec per driver and speedups at each communication period p.
+
+``BENCH_REPEATS`` / ``BENCH_ROUNDS`` / ``BENCH_PS`` trim the measurement
+for CI smoke runs — absolute times shrink but the within-run *ratios*
+(``fused_vs_perstep_parity``) stay comparable, which is what
+``tools/bench_compare.py`` gates on.
 """
+import os
 import time
 
 import jax
@@ -35,8 +41,9 @@ from repro.core.gossip import DenseComm
 from repro.core.topology import ring
 
 K = 4
-REPEATS = 3
-ROUNDS = 12          # rounds timed per repeat
+REPEATS = int(os.environ.get("BENCH_REPEATS", "3"))
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "12"))  # rounds timed per repeat
+PS = [int(p) for p in os.environ.get("BENCH_PS", "1,4,8").split(",")]
 
 
 def _params():
@@ -83,7 +90,7 @@ def _time_rounds(round_fn, params, state, batches):
 def main():
     results = {}
     params = _params()
-    for p in [1, 4, 8]:
+    for p in PS:
         batches = jnp.zeros((p, 1))
         drivers = {}
 

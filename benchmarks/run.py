@@ -16,6 +16,9 @@ Sections
                round (interpret-parity layout comparison)
   wire      bytes/round and round-time per wire codec on the fused path
             (also writes its own BENCH_wire_codecs.json when standalone)
+  noniid    heterogeneity sweep: Dirichlet-α × p × optimizer, judged on
+            the global loss of the averaged model (MT-DSGDm vs PD-SGDM
+            vs QG vs D-PSGD; standalone writes BENCH_noniid.json)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -59,7 +62,7 @@ import sys
 import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
-            "kernels", "kernel_path", "wire", "roofline"]
+            "kernels", "kernel_path", "wire", "noniid", "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -115,6 +118,9 @@ def main() -> None:
     if "wire" in want:
         from benchmarks import wire_codecs
         wire_codecs.main()
+    if "noniid" in want:
+        from benchmarks import noniid_sweep
+        noniid_sweep.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

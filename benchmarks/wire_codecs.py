@@ -18,6 +18,11 @@ codec in turn.  Two numbers per codec:
 Standalone runs write ``benchmarks/BENCH_wire_codecs.json`` (same row
 schema as ``benchmarks/run.py``); under ``python -m benchmarks.run`` the
 rows also land in the main ``BENCH_<tag>.json``.
+
+``BENCH_REPEATS`` / ``BENCH_ROUNDS`` trim the timing loops for CI smoke
+runs; the ``bytes_per_round`` / ``x_bf16`` columns are measurement-free
+(payload arithmetic) and stay exact, which is what
+``tools/bench_compare.py`` gates on.
 """
 import json
 import os
@@ -35,8 +40,8 @@ from repro.core.topology import ring
 
 K = 4
 P = 4
-REPEATS = 3
-ROUNDS = 8
+REPEATS = int(os.environ.get("BENCH_REPEATS", "3"))
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "8"))
 
 CODECS = [
     ("identity", IdentityCompressor()),

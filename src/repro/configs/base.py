@@ -143,12 +143,18 @@ class ParallelCfg:
 
 @dataclasses.dataclass(frozen=True)
 class OptimCfg:
-    name: str = "pd_sgdm"           # pd_sgdm | cpd_sgdm | c_sgdm | d_sgd | ...
+    # pd_sgdm | cpd_sgdm | mt_dsgdm | qg_dsgdm | c_sgdm | d_sgd | ...
+    name: str = "pd_sgdm"
     eta: float = 0.1
     mu: float = 0.9
     p: int = 4
     gamma: float = 0.4
     weight_decay: float = 1e-4
+    # mt_dsgdm only: ship the gradient-tracking correction c through the
+    # named wire codec below (compressed tracking) instead of full
+    # precision.  Off by default — MT's correction wire is f32 unless
+    # explicitly opted in (`--track-compressed` in launch.train).
+    track_compressed: bool = False
     # --- wire codec (cpd_sgdm / choco): which δ-contraction ships, and its
     # shape knobs.  Every named compressor has a first-class wire format
     # (repro.core.wire): sign → packed bits + scales, topk → (idx, val)

@@ -17,6 +17,8 @@ from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.topology import (Topology, TopologySchedule, make_schedule,
                                  make_topology, spectral_gap)
+from repro.core.tracking import (MTDSGDMConfig, MTDSGDm, QGDSGDMConfig,
+                                 QGDSGDm)
 from repro.core.wire import WireCodec, make_codec
 
 __all__ = [
@@ -28,5 +30,6 @@ __all__ = [
     "WireCodec", "make_codec",
     "CommBackend", "DenseComm", "ShardedComm",
     "PDSGDM", "PDSGDMConfig", "CPDSGDM", "CPDSGDMConfig",
+    "MTDSGDm", "MTDSGDMConfig", "QGDSGDm", "QGDSGDMConfig",
     "CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer",
 ]

@@ -4,7 +4,8 @@
   gradients are globally averaged every step, replicas stay bitwise
   identical.  Implemented as gradient-mixing with the complete topology so
   the dense and sharded backends share code with the decentralized methods.
-* **D-SGD**  [Lian et al. '17] — gossip every step, no momentum.
+* **D-SGD**  [Lian et al. '17] — D-PSGD: gossip every step, no momentum;
+  the momentum-free control the non-IID sweep reports against.
 * **PD-SGD** [Li et al. '19]  — periodic gossip, no momentum.
 * **CHOCO-SGD** [Koloskova et al. '19] — compressed gossip every step,
   no momentum, no periodicity.  Built on CPD-SGDM's comm round, so it
@@ -20,6 +21,8 @@ from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.topology import complete
+from repro.core.tracking import (MTDSGDMConfig, MTDSGDm, QGDSGDMConfig,
+                                 QGDSGDm)
 
 __all__ = ["CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer"]
 
@@ -84,6 +87,20 @@ def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
                                    lr_schedule=lr_schedule,
                                    use_kernel=use_kernel,
                                    kernel_interpret=kernel_interpret), comm)
+    if name in ("mt_dsgdm", "mtdsgdm", "mt"):
+        return MTDSGDm(MTDSGDMConfig(eta=eta, mu=mu, p=p,
+                                     weight_decay=weight_decay,
+                                     lr_schedule=lr_schedule,
+                                     use_kernel=use_kernel,
+                                     kernel_interpret=kernel_interpret),
+                       comm, compressor)
+    if name in ("qg_dsgdm", "qgdsgdm", "qg"):
+        return QGDSGDm(QGDSGDMConfig(eta=eta, mu=mu, p=p,
+                                     weight_decay=weight_decay,
+                                     lr_schedule=lr_schedule,
+                                     use_kernel=use_kernel,
+                                     kernel_interpret=kernel_interpret),
+                       comm)
     if name in ("cpd_sgdm", "cpdsgdm"):
         return CPDSGDM(CPDSGDMConfig(eta=eta, mu=mu, p=p, gamma=gamma,
                                      weight_decay=weight_decay,

@@ -47,7 +47,7 @@ import numpy as np
 from repro.core.compression import Compressor, SignCompressor
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
-from repro.core.wire import make_codec
+from repro.core.wire import make_codec, wire_key
 
 __all__ = ["CPDSGDMConfig", "CPDSGDM"]
 
@@ -102,15 +102,9 @@ class CPDSGDM(PDSGDM):
         return f"ax{ax}_sh{sh:+d}"
 
     # -- wire dispatch -----------------------------------------------------------
-    @staticmethod
-    def _wire_key(r, leaf_i: int):
-        """PRNG key for leaf ``leaf_i``'s payload in communication round
-        ``r``.  Folds the leaf index and the round but *not* the worker id:
-        the key is shared knowledge across the graph, which is what lets
-        rand-k receivers re-derive the kept coordinates with zero extra
-        communication (and keeps the two backends key-equivalent)."""
-        base = jax.random.PRNGKey(17)
-        return jax.random.fold_in(jax.random.fold_in(base, leaf_i), r)
+    # shared with MT-DSGDm's correction wire: one key derivation for every
+    # codec payload in the repo (see repro.core.wire.wire_key)
+    _wire_key = staticmethod(wire_key)
 
     def _kernel_wire(self) -> bool:
         """Whether the wire payload is produced by the Pallas codec kernels

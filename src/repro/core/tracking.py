@@ -1,0 +1,425 @@
+"""Heterogeneity-robust momentum variants riding the fused round.
+
+The source paper's Assumption 4 bounds per-worker gradients uniformly —
+exactly the assumption non-IID (Dirichlet-skewed) workloads violate, and
+where PD-SGDM's plain local momentum drifts toward per-worker optima.
+Two first-class optimizers remove (MT) or dampen (QG) that dependence
+while keeping the paper's periodic structure (p local steps, one gossip):
+
+* **MT-DSGDm** — Momentum Tracking [Takezawa et al. '22, arXiv:2209.15505],
+  adapted to periodic gossip.  Each worker carries a gradient-tracking
+  correction ``c`` whose worker-mean equals the worker-mean of the latest
+  gradients (the tracking invariant), feeds *c* — not the raw local
+  gradient — into the momentum recursion, and gossips ``(x, c)`` pairs at
+  every communication round::
+
+      ĝ⁽ᵏ⁾ₜ = ∇F(x⁽ᵏ⁾ₜ; ξ) + λ x⁽ᵏ⁾ₜ            (wd folded, PyTorch semantics)
+      c⁽ᵏ⁾ₜ = c⁽ᵏ⁾ₜ₋₁ + ĝ⁽ᵏ⁾ₜ − ĝ⁽ᵏ⁾ₜ₋₁          (local tracking update)
+      m⁽ᵏ⁾ₜ = μ m⁽ᵏ⁾ₜ₋₁ + c⁽ᵏ⁾ₜ
+      x⁽ᵏ⁾ₜ₊½ = x⁽ᵏ⁾ₜ − η m⁽ᵏ⁾ₜ
+      if mod(t+1, p) == 0:                        (gossip: TWO tensors)
+          x⁽ᵏ⁾ ← Σⱼ w_kj x⁽ʲ⁾₊½ ;   c⁽ᵏ⁾ ← Σⱼ w_kj Q(c⁽ʲ⁾)
+
+  With ``c₀ = ĝ₋₁ = 0`` the first step gives ``c = ĝ``, and both the
+  local update and the (doubly-stochastic) mixing preserve
+  ``mean_k c⁽ᵏ⁾ = mean_k ĝ⁽ᵏ⁾`` — the correction every worker descends
+  along tracks the *global* gradient direction regardless of how skewed
+  its local data is.  ``Q`` is optional compressed tracking: any wire
+  codec (sign / top-k / rand-k / QSGD, ``repro.core.wire``) applied to
+  the correction wire — every worker ships the codec payload and mixes
+  the *quantized* corrections (its own included, so dense and sharded
+  agree bitwise); ``Q = identity`` (no compressor) is the default.
+  ``bytes_per_comm_round`` charges the true 2-tensor payload: full-
+  precision x plus the exact codec bytes of c.
+
+* **QG-DSGDm** — quasi-global momentum [Lin et al. '21, arXiv:2102.04761],
+  adapted to periodic gossip.  The momentum buffer is frozen inside a
+  round and updated once per gossip from the *globally mixed* round
+  displacement — local gradient noise and heterogeneity never enter it
+  directly::
+
+      x⁽ᵏ⁾ₜ₊½ = x⁽ᵏ⁾ₜ − η (ĝ⁽ᵏ⁾ₜ + μ m⁽ᵏ⁾)       (m frozen within the round)
+      at a gossip round r:
+          x⁽ᵏ⁾ ← Σⱼ w_kj x⁽ʲ⁾₊½
+          m⁽ᵏ⁾ ← μ m⁽ᵏ⁾ + (1−μ) (x⁽ᵏ⁾_prev − x⁽ᵏ⁾) / (η p)
+          x⁽ᵏ⁾_prev ← x⁽ᵏ⁾
+
+  One extra state tree (``xprev``, the post-gossip params of the previous
+  round), zero extra communication — the wire stays one tensor.
+
+Both run through the canonical fused round on both backends and on the
+flatten-once (rows, 1024) kernel layout: the tracking update is a Pallas
+AXPY (``gossip_mix_mat``), the momentum step is the momentum kernel, and
+MT's dual gossip mixes matrix-to-matrix (compressed tracking uses the
+codec's rows kernels when ``block == 1024``).  State trees (``c``,
+``g_prev``, ``xprev``) are checkpointed exactly like CPD-SGDM's ``xhat``.
+
+Backend support mirrors CPD-SGDM's gating: compressed tracking on the
+sharded backend needs a static shift-structured topology (the payload
+exchange is per-neighbour ``ppermute``); full-precision MT and QG compose
+with time-varying schedules on both backends (the dual mix rides the same
+per-round ``lax.switch`` programs as x).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor
+from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
+from repro.core.wire import make_codec, wire_key
+
+__all__ = ["MTDSGDMConfig", "MTDSGDm", "QGDSGDMConfig", "QGDSGDm"]
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class MTDSGDMConfig(PDSGDMConfig):
+    """MT-DSGDm shares PD-SGDM's knobs; the tracking wire is shaped by the
+    compressor handed to the optimizer (None = full-precision c)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QGDSGDMConfig(PDSGDMConfig):
+    """QG-DSGDm shares PD-SGDM's knobs (``nesterov`` is rejected: the
+    buffer is not a gradient accumulator, there is nothing to look ahead
+    along)."""
+
+
+class MTDSGDm(PDSGDM):
+    """Momentum Tracking, periodic form.  Gossips ``(x, c)`` pairs."""
+
+    def __init__(self, config: MTDSGDMConfig, comm: CommBackend,
+                 compressor: Optional[Compressor] = None):
+        super().__init__(config, comm)
+        self.compressor = compressor
+        self.codec = make_codec(compressor) if compressor is not None else None
+        if self.codec is not None and isinstance(comm, ShardedComm):
+            if comm.topology.name == "complete":
+                raise ValueError(
+                    "MT-DSGDm compressed tracking on the sharded backend "
+                    "needs a shift-structured topology (ring/torus/"
+                    "exponential); 'complete' has no per-neighbour wire.")
+            if comm.period > 1:
+                raise ValueError(
+                    "MT-DSGDm compressed tracking requires a static "
+                    "topology on the sharded backend: the correction "
+                    "payload is exchanged per fixed neighbour.  Time-"
+                    "varying schedules run compressed tracking on the "
+                    "dense backend, or drop the compressor (full-precision "
+                    "c composes with schedules on both backends).")
+
+    # -- state ---------------------------------------------------------------
+    def init(self, params):
+        state = super().init(params)
+        zeros = lambda t: tmap(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), t)
+        # c₀ = ĝ₋₁ = 0: the first local step sets c = ĝ₀, establishing the
+        # tracking invariant mean(c) = mean(ĝ) from step 0 onward.
+        state["c"] = zeros(params)
+        state["g_prev"] = zeros(params)
+        return state
+
+    # -- local step (tracking + momentum) -------------------------------------
+    def local_step(self, state, params, grads):
+        cfg = self.config
+        lr = cfg.lr(state["step"]).astype(jnp.float32)
+        mu = jnp.float32(cfg.mu)
+        wd = jnp.float32(cfg.weight_decay)
+
+        # ĝ = g + λx (decay folded before tracking, so c tracks the
+        # regularized gradient the momentum actually consumes)
+        g32 = tmap(lambda g, x: g.astype(jnp.float32)
+                   + wd * x.astype(jnp.float32), grads, params)
+        c_new = tmap(lambda c, g, gp: c + g - gp,
+                     state["c"], g32, state["g_prev"])
+
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+            new_params, new_m = kops.momentum_update_tree(
+                params, state["m"], c_new, mu=cfg.mu, lr=lr,
+                weight_decay=0.0, nesterov=cfg.nesterov,
+                interpret=cfg.kernel_interpret)
+        else:
+            def upd(x, m, c):
+                m_new = mu * m + c
+                d = (c + mu * m_new) if cfg.nesterov else m_new
+                x_new = x.astype(jnp.float32) - lr * d
+                return x_new.astype(x.dtype), m_new
+
+            xs, treedef = jax.tree_util.tree_flatten(params)
+            ms = treedef.flatten_up_to(state["m"])
+            cs = treedef.flatten_up_to(c_new)
+            pairs = [upd(x, m, c) for x, m, c in zip(xs, ms, cs)]
+            new_params = treedef.unflatten([x for x, _ in pairs])
+            new_m = treedef.unflatten([m for _, m in pairs])
+
+        new_state = dict(state)
+        new_state["m"] = new_m
+        new_state["c"] = c_new
+        new_state["g_prev"] = g32
+        new_state["step"] = state["step"] + 1
+        return new_params, new_state
+
+    # -- communication: gossip (x, c) ------------------------------------------
+    def _quantized_c(self, c, r):
+        """Q(c) per worker through the wire codec (pack∘unpack), with the
+        shared (leaf, round) keys — identical draws on both backends."""
+        leaves, treedef = jax.tree_util.tree_flatten(c)
+        out = []
+        for i, leaf in enumerate(leaves):
+            key = wire_key(r, i)
+            if isinstance(self.comm, DenseComm):
+                shape = leaf.shape[1:]
+                n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+                q = jax.vmap(lambda x: self.codec.unpack(
+                    self.codec.pack(x, key), n, shape, jnp.float32,
+                    key=key))(leaf)
+            else:
+                q = self.codec.unpack(self.codec.pack(leaf, key), leaf.size,
+                                      leaf.shape, jnp.float32, key=key)
+            out.append(q)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _mix_c_sharded(self, c, r):
+        """Compressed-tracking mix on the production backend: each worker
+        quantizes its own c, ships the codec's wire payload to every
+        neighbour (one ppermute per payload array), and mixes the decoded
+        corrections — self term quantized too, matching the dense sim."""
+        leaves, treedef = jax.tree_util.tree_flatten(c)
+        payloads, keys, mixed = [], [], []
+        w0 = jnp.float32(self.comm.self_weight())
+        for i, leaf in enumerate(leaves):
+            key = wire_key(r, i)
+            payload = self.codec.pack(leaf, key)
+            q = self.codec.unpack(payload, leaf.size, leaf.shape,
+                                  jnp.float32, key=key)
+            payloads.append(payload)
+            keys.append(key)
+            mixed.append(w0 * q)
+        for (ax, sh, w) in self.comm.nonself_shifts():
+            for j, (leaf, payload, key) in enumerate(
+                    zip(leaves, payloads, keys)):
+                recv = self.comm.receive_payload(self.codec.wire(payload),
+                                                 ax, sh)
+                q_r = self.codec.unpack(recv, leaf.size, leaf.shape,
+                                        jnp.float32, key=key)
+                mixed[j] = mixed[j] + jnp.float32(w) * q_r
+        return jax.tree_util.tree_unflatten(treedef, mixed)
+
+    def comm_round(self, state, params):
+        r = self.round_index(state)
+        params_new = self.comm.mix(params, r=r)
+        new_state = dict(state)
+        if self.codec is None:
+            new_state["c"] = self.comm.mix(state["c"], r=r)
+        elif isinstance(self.comm, ShardedComm):
+            new_state["c"] = self._mix_c_sharded(state["c"], r)
+        else:
+            new_state["c"] = self.comm.mix(
+                self._quantized_c(state["c"], r), r=r)
+        return params_new, new_state
+
+    # -- kernel round (flatten-once matrix domain) ------------------------------
+    def _kernel_wire(self) -> bool:
+        from repro.kernels import ops as kops
+        return (self.codec is not None and self.codec.rows_supported
+                and self.codec.block == kops.LANE)
+
+    @property
+    def kernel_comm_supported(self) -> bool:
+        """Full-precision c mixes like x (always matrix-capable);
+        compressed tracking needs the codec's rows kernels — other codecs
+        fall back to the tree comm at the round boundary."""
+        return self.codec is None or self._kernel_wire()
+
+    def mat_state(self, plan, state) -> dict:
+        mats = super().mat_state(plan, state)
+        mats["c"] = plan.flatten(state["c"])
+        mats["g_prev"] = plan.flatten(state["g_prev"])
+        return mats
+
+    def unmat_state(self, plan, mats, state, step) -> dict:
+        new_state = super().unmat_state(plan, mats, state, step)
+        new_state["c"] = plan.unflatten(mats["c"], dtype=jnp.float32)
+        new_state["g_prev"] = plan.unflatten(mats["g_prev"],
+                                             dtype=jnp.float32)
+        return new_state
+
+    def local_step_mat(self, x_mat, mats, g_mat, step):
+        """Tracking update as a fused Pallas AXPY, then the momentum
+        kernel — the extra tracking matrix rides the same flatten-once
+        layout as params and momentum."""
+        from repro.kernels import ops as kops
+        cfg = self.config
+        interp = cfg.kernel_interpret
+        if cfg.weight_decay:
+            g32 = kops.gossip_mix_mat((g_mat, x_mat),
+                                      (1.0, cfg.weight_decay),
+                                      interpret=interp)
+        else:
+            g32 = g_mat
+        c_new = kops.gossip_mix_mat((mats["c"], g32, mats["g_prev"]),
+                                    (1.0, 1.0, -1.0), interpret=interp)
+        x_new, m_new = kops.momentum_update_mat(
+            x_mat, mats["m"], c_new, mu=cfg.mu,
+            lr=cfg.lr(step).astype(jnp.float32), weight_decay=0.0,
+            nesterov=cfg.nesterov, interpret=interp)
+        return x_new, {**mats, "m": m_new, "c": c_new, "g_prev": g32}
+
+    def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
+        """Dual gossip on the kernel layout: x and c mix matrix-to-matrix;
+        compressed tracking packs c with the codec's rows kernels and
+        ships the payload sliced to ``plan.used_rows`` (alignment padding
+        never crosses the wire), exactly like CPD-SGDM's drift wire."""
+        x_new = self._gossip_mat(x_mat, r)
+        c = mats["c"]
+        if self.codec is None:
+            c_new = self._gossip_mat(c, r)
+        else:
+            interp = self.config.kernel_interpret
+            payload = self.codec.rows_pack(c, counts=counts,
+                                           interpret=interp)
+            q_self = self.codec.rows_unpack(payload, interpret=interp)
+            if isinstance(self.comm, ShardedComm):
+                assert plan is not None, (
+                    "MT-DSGDm matrix comm needs the KernelPlan")
+                u = plan.used_rows
+                c_new = jnp.float32(self.comm.self_weight()) * q_self
+                for (ax, sh, w) in self.comm.nonself_shifts():
+                    recv = {name: plan.pad_wire(
+                                self.comm._receive_from(arr[..., :u, :],
+                                                        ax, sh))
+                            for name, arr in payload.items()}
+                    c_new = c_new + jnp.float32(w) * self.codec.rows_unpack(
+                        recv, interpret=interp)
+            else:
+                c_new = self._gossip_mat(q_self, r)
+        return x_new, {**mats, "c": c_new}
+
+    # -- comm-cost model --------------------------------------------------------
+    def bytes_per_comm_round(self, params, r: int = 0) -> int:
+        """The true 2-tensor payload: full-precision x (leaf dtypes) plus
+        the correction wire — exact codec bytes when compressed, f32
+        otherwise — both × the round's topology degree."""
+        from repro.core.gossip import gossip_bytes_per_round
+        x_bytes = gossip_bytes_per_round(params, self.comm, r=r)
+        leaves = jax.tree_util.tree_leaves(params)
+        if self.codec is not None:
+            c_payload = sum(
+                self.codec.wire_bytes(int(np.prod(l.shape, dtype=np.int64)))
+                for l in leaves)
+        else:
+            c_payload = sum(int(np.prod(l.shape, dtype=np.int64)) * 4
+                            for l in leaves)
+        return x_bytes + self.comm.topology_at(r).degree * c_payload
+
+
+class QGDSGDm(PDSGDM):
+    """Quasi-global momentum, periodic form.  Gossips x only."""
+
+    def __init__(self, config: QGDSGDMConfig, comm: CommBackend):
+        if config.nesterov:
+            raise ValueError(
+                "QG-DSGDm has no nesterov variant: the quasi-global buffer "
+                "is a displacement average, not a gradient accumulator")
+        super().__init__(config, comm)
+
+    # -- state ---------------------------------------------------------------
+    def init(self, params):
+        state = super().init(params)
+        # the previous round's post-gossip params (f32 master copy): the
+        # buffer update differences against it at every communication round
+        state["xprev"] = tmap(lambda x: x.astype(jnp.float32), params)
+        return state
+
+    # -- local step: momentum-corrected gradient, frozen buffer ----------------
+    def local_step(self, state, params, grads):
+        cfg = self.config
+        lr = cfg.lr(state["step"]).astype(jnp.float32)
+        mu = jnp.float32(cfg.mu)
+        wd = jnp.float32(cfg.weight_decay)
+
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+            # the momentum kernel's x update is exactly x − η(μm + ĝ);
+            # its m update is discarded (the buffer only moves at gossip)
+            new_params, _ = kops.momentum_update_tree(
+                params, state["m"], grads, mu=cfg.mu, lr=lr,
+                weight_decay=cfg.weight_decay, nesterov=False,
+                interpret=cfg.kernel_interpret)
+        else:
+            def upd(x, m, g):
+                g32 = g.astype(jnp.float32) + wd * x.astype(jnp.float32)
+                d = mu * m + g32
+                return (x.astype(jnp.float32) - lr * d).astype(x.dtype)
+
+            xs, treedef = jax.tree_util.tree_flatten(params)
+            ms = treedef.flatten_up_to(state["m"])
+            gs = treedef.flatten_up_to(grads)
+            new_params = treedef.unflatten(
+                [upd(x, m, g) for x, m, g in zip(xs, ms, gs)])
+
+        new_state = dict(state)
+        new_state["step"] = state["step"] + 1
+        return new_params, new_state
+
+    def _round_lr(self, r):
+        """η at the round's last local step (t = (r+1)·p − 1): the
+        normalizer of the displacement → direction conversion."""
+        cfg = self.config
+        step_last = (jnp.asarray(r) + 1) * cfg.p - 1
+        return cfg.lr(step_last).astype(jnp.float32)
+
+    # -- communication: mix, then fold the global displacement into m ----------
+    def comm_round(self, state, params):
+        cfg = self.config
+        mu = jnp.float32(cfg.mu)
+        r = self.round_index(state)
+        mixed = self.comm.mix(params, r=r)
+        inv = jnp.float32(1.0) / (self._round_lr(r) * jnp.float32(cfg.p))
+        d_hat = tmap(lambda xp, xm: (xp - xm.astype(jnp.float32)) * inv,
+                     state["xprev"], mixed)
+        new_state = dict(state)
+        new_state["m"] = tmap(
+            lambda m, d: mu * m + (jnp.float32(1.0) - mu) * d,
+            state["m"], d_hat)
+        new_state["xprev"] = tmap(lambda x: x.astype(jnp.float32), mixed)
+        return mixed, new_state
+
+    # -- kernel round ----------------------------------------------------------
+    def mat_state(self, plan, state) -> dict:
+        mats = super().mat_state(plan, state)
+        mats["xprev"] = plan.flatten(state["xprev"])
+        return mats
+
+    def unmat_state(self, plan, mats, state, step) -> dict:
+        new_state = super().unmat_state(plan, mats, state, step)
+        new_state["xprev"] = plan.unflatten(mats["xprev"],
+                                            dtype=jnp.float32)
+        return new_state
+
+    def local_step_mat(self, x_mat, mats, g_mat, step):
+        from repro.kernels import ops as kops
+        cfg = self.config
+        x_new, _ = kops.momentum_update_mat(
+            x_mat, mats["m"], g_mat, mu=cfg.mu,
+            lr=cfg.lr(step).astype(jnp.float32),
+            weight_decay=cfg.weight_decay, nesterov=False,
+            interpret=cfg.kernel_interpret)
+        return x_new, mats
+
+    def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
+        cfg = self.config
+        mu = jnp.float32(cfg.mu)
+        x_new = self._gossip_mat(x_mat, r)
+        inv = jnp.float32(1.0) / (self._round_lr(r) * jnp.float32(cfg.p))
+        d_hat = (mats["xprev"] - x_new) * inv
+        m_new = mu * mats["m"] + (jnp.float32(1.0) - mu) * d_hat
+        return x_new, {**mats, "m": m_new, "xprev": x_new}

@@ -65,9 +65,23 @@ __all__ = [
     "WireCodec", "IdentityCodec", "SignCodec", "TopKCodec", "RandKCodec",
     "QSGDCodec", "make_codec", "topk_rows", "topk_rows_unpack", "qsgd_rows",
     "qsgd_rows_unpack", "qsgd_bits", "topk_width", "payload_nbytes",
+    "wire_key",
 ]
 
 Payload = Dict[str, jnp.ndarray]
+
+
+def wire_key(r, leaf_i: int):
+    """PRNG key for leaf ``leaf_i``'s payload in communication round ``r``.
+
+    Folds the leaf index and the round but *not* the worker id: the key is
+    shared knowledge across the graph, which is what lets rand-k receivers
+    re-derive the kept coordinates with zero extra communication (and keeps
+    the two backends key-equivalent).  Shared by every optimizer that ships
+    codec payloads (CPD-SGDM's drift wire, MT-DSGDm's correction wire).
+    """
+    base = jax.random.PRNGKey(17)
+    return jax.random.fold_in(jax.random.fold_in(base, leaf_i), r)
 
 
 # --------------------------------------------------------------- rows kernels

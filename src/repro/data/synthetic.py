@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["LMStreamCfg", "lm_batch", "ClassStreamCfg", "class_batch"]
+__all__ = ["LMStreamCfg", "lm_batch", "ClassStreamCfg", "class_batch",
+           "worker_class_probs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,21 +79,30 @@ def _class_means(cfg: ClassStreamCfg):
     return jax.random.normal(key, (cfg.n_classes,) + cfg.image) * 1.5
 
 
+def worker_class_probs(cfg: ClassStreamCfg) -> jnp.ndarray:
+    """(n_workers, n_classes) per-worker label marginal.
+
+    The Dirichlet(α) partitioner: each worker's class distribution is one
+    draw from Dirichlet(α·1) — small α concentrates mass on few classes
+    (strongly non-IID), large α approaches uniform, ``alpha=None`` is the
+    exact uniform (IID) marginal.  Deterministic in ``cfg.seed`` alone —
+    the partition is fixed for a run, only the sampled batches vary with
+    the step.
+    """
+    if cfg.dirichlet_alpha is not None:
+        dkey = jax.random.PRNGKey(cfg.seed + 2000)
+        return jax.random.dirichlet(
+            dkey, jnp.full((cfg.n_classes,), cfg.dirichlet_alpha),
+            (cfg.n_workers,))
+    return jnp.full((cfg.n_workers, cfg.n_classes), 1.0 / cfg.n_classes)
+
+
 def class_batch(cfg: ClassStreamCfg, step: int):
     """(n_workers, batch, 32, 32, 3) images + labels."""
     means = _class_means(cfg)
     key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
     kw = jax.random.split(key, cfg.n_workers)
-
-    if cfg.dirichlet_alpha is not None:
-        # fixed per-worker class distribution (non-IID)
-        dkey = jax.random.PRNGKey(cfg.seed + 2000)
-        probs = jax.random.dirichlet(
-            dkey, jnp.full((cfg.n_classes,), cfg.dirichlet_alpha),
-            (cfg.n_workers,))
-    else:
-        probs = jnp.full((cfg.n_workers, cfg.n_classes),
-                         1.0 / cfg.n_classes)
+    probs = worker_class_probs(cfg)
 
     def one_worker(k, p):
         k1, k2 = jax.random.split(k)

@@ -153,8 +153,12 @@ def _compressor_kwargs(o) -> dict:
 
 def _make_optimizer(run: RunCfg, comm):
     o = run.optim
+    # cpd/choco always ship a codec payload; mt ships the correction wire
+    # compressed only when explicitly opted in (track_compressed)
+    wants_comp = (o.name.startswith(("cpd", "choco"))
+                  or (o.name.startswith("mt") and o.track_compressed))
     comp = make_compressor(o.compressor, **_compressor_kwargs(o)) if \
-        o.name.startswith(("cpd", "choco")) else None
+        wants_comp else None
     return make_optimizer(
         o.name, comm, eta=o.eta, mu=o.mu, p=o.p, gamma=o.gamma,
         weight_decay=o.weight_decay, compressor=comp,
@@ -312,13 +316,14 @@ def build_train(run: RunCfg, mesh, shape: InputShape,
 
 
 def _state_spec(state_struct, pspec):
-    """Optimizer-state specs: momentum/x̂ mirror params; step replicated."""
+    """Optimizer-state specs: per-element trees (momentum, CPD's x̂,
+    MT's tracking c / ĝ_prev, QG's xprev) mirror params; step replicated."""
     def build(struct, like):
         out = {}
         for k, v in struct.items():
             if k == "step":
                 out[k] = P()
-            elif k in ("m", "xhat"):
+            elif k in ("m", "xhat", "c", "g_prev", "xprev"):
                 out[k] = like
             elif k == "xhat_nbrs":
                 out[k] = {kk: like for kk in v}

@@ -16,7 +16,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--optimizer", default=None,
-                    help="pd_sgdm|cpd_sgdm|c_sgdm|d_sgd|pd_sgd|choco_sgd")
+                    help="pd_sgdm|cpd_sgdm|mt_dsgdm|qg_dsgdm|c_sgdm|"
+                         "d_sgd|pd_sgd|choco_sgd")
     ap.add_argument("--p", type=int, default=None)
     ap.add_argument("--eta", type=float, default=None)
     ap.add_argument("--topology", default=None,
@@ -38,6 +39,10 @@ def main():
     ap.add_argument("--compressor-block", type=int, default=None,
                     help="sign/topk/qsgd block width (1024 = kernel lane; "
                          "other widths use the per-leaf jnp wire)")
+    ap.add_argument("--track-compressed", action="store_true",
+                    help="mt_dsgdm: ship the gradient-tracking correction "
+                         "through the --compressor wire codec instead of "
+                         "full precision")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -87,6 +92,8 @@ def main():
     if args.compressor_block is not None:
         optim = dataclasses.replace(
             optim, compressor_block=args.compressor_block)
+    if args.track_compressed:
+        optim = dataclasses.replace(optim, track_compressed=True)
     parallel = run.parallel
     if args.topology:
         parallel = dataclasses.replace(parallel, topology=args.topology)

@@ -1,0 +1,83 @@
+"""Synthetic data streams — the non-IID Dirichlet partitioner contract.
+
+The heterogeneity claim (benchmarks/noniid_sweep.py, MT-DSGDm) is only as
+good as the data path under it: the partition must be deterministic,
+``alpha`` must actually control the per-worker label skew, and the IID
+setting must be the exact uniform marginal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (ClassStreamCfg, class_batch,
+                                  worker_class_probs)
+
+K = 8
+
+
+def _empirical_marginals(cfg, steps=40):
+    """(K, n_classes) label frequencies over ``steps`` sampled batches."""
+    counts = np.zeros((cfg.n_workers, cfg.n_classes))
+    for t in range(steps):
+        labels = np.asarray(class_batch(cfg, t)["labels"])
+        for k in range(cfg.n_workers):
+            counts[k] += np.bincount(labels[k], minlength=cfg.n_classes)
+    return counts / counts.sum(axis=1, keepdims=True)
+
+
+def _skew(probs):
+    """Mean total-variation distance of the worker marginals from uniform."""
+    u = 1.0 / probs.shape[1]
+    return float(0.5 * np.abs(np.asarray(probs) - u).sum(axis=1).mean())
+
+
+def test_partition_deterministic_across_calls():
+    """Same cfg → identical partition and identical batches, call after
+    call (the partition keys on the seed alone, batches on (seed, step))."""
+    cfg = ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=0.1, seed=3)
+    p1 = np.asarray(worker_class_probs(cfg))
+    p2 = np.asarray(worker_class_probs(cfg))
+    np.testing.assert_array_equal(p1, p2)
+    for t in (0, 7):
+        a = class_batch(cfg, t)
+        b = class_batch(cfg, t)
+        np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                      np.asarray(b["labels"]))
+        np.testing.assert_array_equal(np.asarray(a["images"]),
+                                      np.asarray(b["images"]))
+    # a different seed is a different partition
+    p3 = np.asarray(worker_class_probs(
+        ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=0.1, seed=4)))
+    assert np.abs(p1 - p3).max() > 1e-3
+
+
+def test_skew_increases_as_alpha_shrinks():
+    """Small α ⇒ strongly non-IID: the per-worker label-marginal distance
+    from uniform is ordered α=0.1 > α=1.0 > α=100 ≈ IID, both for the
+    partition itself and for the labels actually sampled."""
+    skews = {}
+    for alpha in (0.1, 1.0, 100.0):
+        cfg = ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=alpha)
+        skews[alpha] = _skew(worker_class_probs(cfg))
+    assert skews[0.1] > 2 * skews[1.0], skews
+    assert skews[1.0] > 2 * skews[100.0], skews
+    assert skews[0.1] > 0.5          # mass concentrated on few classes
+
+    emp_01 = _skew(_empirical_marginals(
+        ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=0.1)))
+    emp_1 = _skew(_empirical_marginals(
+        ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=1.0)))
+    assert emp_01 > emp_1, (emp_01, emp_1)
+
+
+def test_iid_matches_uniform_marginal():
+    """alpha=None is the exact uniform partition, and the sampled labels'
+    empirical marginal concentrates around it (sampling noise only)."""
+    cfg = ClassStreamCfg(batch=16, n_workers=K, dirichlet_alpha=None)
+    probs = np.asarray(worker_class_probs(cfg))
+    np.testing.assert_array_equal(probs, np.float32(1.0 / cfg.n_classes))
+    emp = _empirical_marginals(cfg, steps=60)
+    # 60 steps × 16 samples = 960 draws/worker: TV from uniform is small
+    assert _skew(emp) < 0.06, _skew(emp)
+    # and per-class frequencies are individually near 1/C
+    np.testing.assert_allclose(emp, 1.0 / cfg.n_classes, atol=0.05)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CPDSGDM, CPDSGDMConfig, PDSGDM, PDSGDMConfig,
+from repro.core import (CPDSGDM, CPDSGDMConfig, MTDSGDm, MTDSGDMConfig,
+                        PDSGDM, PDSGDMConfig, QGDSGDm, QGDSGDMConfig,
                         SignCompressor)
 from repro.core.gossip import DenseComm
 from repro.core.topology import ring
@@ -41,11 +42,24 @@ def _make_opt(name):
     if name == "pd_sgdm":
         return PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=P),
                       DenseComm(ring(K)))
+    if name == "mt_dsgdm":
+        return MTDSGDm(MTDSGDMConfig(eta=0.05, mu=0.9, p=P),
+                       DenseComm(ring(K)))
+    if name == "mt_dsgdm_sign":
+        return MTDSGDm(MTDSGDMConfig(eta=0.05, mu=0.9, p=P),
+                       DenseComm(ring(K)), SignCompressor(block=8))
+    if name == "qg_dsgdm":
+        return QGDSGDm(QGDSGDMConfig(eta=0.05, mu=0.9, p=P),
+                       DenseComm(ring(K)))
     return CPDSGDM(CPDSGDMConfig(eta=0.05, mu=0.9, p=P, gamma=0.4),
                    DenseComm(ring(K)), SignCompressor(block=8))
 
 
-@pytest.mark.parametrize("name", ["pd_sgdm", "cpd_sgdm"])
+_OPTIMIZERS = ["pd_sgdm", "cpd_sgdm", "mt_dsgdm", "mt_dsgdm_sign",
+               "qg_dsgdm"]
+
+
+@pytest.mark.parametrize("name", _OPTIMIZERS)
 def test_round_equals_p_steps_dense(name):
     """opt.round == p × opt.step starting at a round boundary (DenseComm)."""
     opt = _make_opt(name)
@@ -75,14 +89,16 @@ def test_round_equals_p_steps_dense(name):
                                np.asarray(state2["m"]["w"]),
                                rtol=1e-6, atol=1e-6)
     assert int(state2["step"]) == P
-    if name == "cpd_sgdm":
-        np.testing.assert_allclose(np.asarray(state["xhat"]["w"]),
-                                   np.asarray(state2["xhat"]["w"]),
-                                   rtol=1e-6, atol=1e-6)
+    # auxiliary per-element state (CPD's x̂, MT's c/ĝ_prev, QG's xprev)
+    for k in ("xhat", "c", "g_prev", "xprev"):
+        if k in state:
+            np.testing.assert_allclose(np.asarray(state[k]["w"]),
+                                       np.asarray(state2[k]["w"]),
+                                       rtol=1e-6, atol=1e-6)
     assert losses.shape == (P,)
 
 
-@pytest.mark.parametrize("name", ["pd_sgdm", "cpd_sgdm"])
+@pytest.mark.parametrize("name", _OPTIMIZERS)
 def test_sim_trainer_matches_per_step_driver(name):
     """SimTrainer (block-scanned rounds + fused tail) reproduces the
     per-step reference loop exactly, including the logged History."""
@@ -127,7 +143,7 @@ _SCRIPT_SHARDED = textwrap.dedent("""
 
     mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
-    for opt_name in ["pd_sgdm", "cpd_sgdm"]:
+    for opt_name in ["pd_sgdm", "cpd_sgdm", "mt_dsgdm", "qg_dsgdm"]:
         run = RunCfg(model=mcfg,
                      parallel=ParallelCfg(profile="A", remat="none"),
                      optim=OptimCfg(name=opt_name, eta=0.05, mu=0.9, p=3,
@@ -177,3 +193,5 @@ def test_round_equals_p_steps_sharded():
     out = _run(_SCRIPT_SHARDED)
     assert "ROUND_EQ_OK pd_sgdm" in out
     assert "ROUND_EQ_OK cpd_sgdm" in out
+    assert "ROUND_EQ_OK mt_dsgdm" in out
+    assert "ROUND_EQ_OK qg_dsgdm" in out

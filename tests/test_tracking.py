@@ -1,0 +1,313 @@
+"""MT-DSGDm / QG-DSGDm: tracking invariant, heterogeneity robustness,
+2-tensor wire accounting, and kernel-round equivalence.
+
+The fused-round ≡ per-step and SimTrainer equivalences run in
+``tests/test_round_engine.py`` (both optimizers are in its parametrize
+list); mid-schedule checkpoint resume in ``tests/test_checkpoint_resume``.
+Here: the algorithm-specific contracts.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MTDSGDm, MTDSGDMConfig, QGDSGDm, QGDSGDMConfig,
+                        RandKCompressor, SignCompressor, make_optimizer)
+from repro.core.gossip import DenseComm, ShardedComm
+from repro.core.topology import (exponential, one_peer_exponential_schedule,
+                                 ring)
+
+K, D, P = 8, 80, 4
+
+
+def _params():
+    return {"w": jax.random.normal(jax.random.PRNGKey(0), (K, D))}
+
+
+def _hetero_grads_fn(scale=1.0):
+    """Per-worker quadratic F_k(x) = ||x − b_k||²/2 with very different
+    b_k — the textbook heterogeneous problem: the global optimum is
+    mean(b), but every worker's local gradient points at its own b_k."""
+    b = scale * jax.random.normal(jax.random.PRNGKey(3), (K, D))
+
+    def grads_fn(params, batch):
+        g = {"w": params["w"] - b}
+        losses = 0.5 * jnp.sum((params["w"] - b) ** 2, axis=-1)
+        return losses.mean(), g
+
+    return grads_fn, b
+
+
+def _run_rounds(opt, grads_fn, n_rounds, params=None):
+    params = _params() if params is None else params
+    state = opt.init(params)
+    batches = jnp.zeros((P, 1))
+    roundj = jax.jit(lambda s, pp, bs: opt.round(s, pp, grads_fn, bs))
+    for _ in range(n_rounds):
+        params, state, _ = roundj(state, params, batches)
+    return params, state
+
+
+def test_tracking_invariant_mean_c_equals_mean_gradient():
+    """The defining property: after every local step AND every gossip,
+    mean_k c⁽ᵏ⁾ == mean_k ĝ⁽ᵏ⁾ (the worker-mean of the latest folded
+    gradients) — c₀ = ĝ₋₁ = 0 establishes it, the local update and the
+    doubly-stochastic mix both preserve it."""
+    opt = MTDSGDm(MTDSGDMConfig(eta=0.05, mu=0.9, p=P, weight_decay=1e-4),
+                  DenseComm(ring(K)))
+    grads_fn, _ = _hetero_grads_fn()
+    params = _params()
+    state = opt.init(params)
+    for t in range(2 * P + 1):          # crosses two gossip rounds
+        _, g = grads_fn(params, None)
+        g32 = jax.tree_util.tree_map(
+            lambda gg, x: gg + jnp.float32(1e-4) * x, g, params)
+        params, state = opt.step(state, params, g)
+        np.testing.assert_allclose(
+            np.asarray(state["c"]["w"].mean(0)),
+            np.asarray(g32["w"].mean(0)), rtol=1e-5, atol=1e-6), t
+
+
+def _per_worker_dist(params, b_star):
+    """RMS per-worker distance to the global optimum — the heterogeneity
+    metric.  (The worker-*mean* converges for plain momentum too on this
+    symmetric problem: mean dynamics are blind to the drift; what PD-SGDM
+    cannot do is pull the individual workers off their local optima.)"""
+    w = np.asarray(params["w"])
+    return float(np.sqrt(((w - b_star[None]) ** 2).sum(-1).mean()))
+
+
+def test_mt_beats_plain_momentum_on_heterogeneous_quadratic():
+    """On the heterogeneous quadratic, gradient tracking steers every
+    worker toward the *global* optimum mean(b); plain local momentum
+    (PD-SGDM) pins each worker at its own b_k and its per-worker distance
+    never decays.  QG sits in between."""
+    grads_fn, b = _hetero_grads_fn(scale=3.0)
+    b_star = np.asarray(b.mean(0))
+    dist = {}
+    for name in ["pd_sgdm", "mt_dsgdm", "qg_dsgdm"]:
+        opt = make_optimizer(name, DenseComm(exponential(K)), eta=0.05,
+                             mu=0.9, p=P, weight_decay=0.0)
+        params, _ = _run_rounds(opt, grads_fn, n_rounds=100)
+        dist[name] = _per_worker_dist(params, b_star)
+    assert dist["mt_dsgdm"] < 0.05 * dist["pd_sgdm"], dist
+    assert dist["qg_dsgdm"] < 0.5 * dist["pd_sgdm"], dist
+
+
+def test_compressed_tracking_sign_still_tracks():
+    """Sign-compressed correction wire: the mix sees Q(c), so the exact
+    invariant is gone, but workers still move measurably closer to the
+    global optimum than plain momentum ever does."""
+    grads_fn, b = _hetero_grads_fn(scale=3.0)
+    b_star = np.asarray(b.mean(0))
+    dist = {}
+    for name, comp in [("pd_sgdm", None), ("mt_dsgdm", SignCompressor())]:
+        opt = make_optimizer(name, DenseComm(exponential(K)), eta=0.05,
+                             mu=0.9, p=P, weight_decay=0.0, compressor=comp)
+        params, _ = _run_rounds(opt, grads_fn, n_rounds=100)
+        dist[name] = _per_worker_dist(params, b_star)
+    assert dist["mt_dsgdm"] < 0.7 * dist["pd_sgdm"], dist
+
+
+def test_mt_bytes_charges_two_tensor_payload():
+    """bytes_per_comm_round = degree × (full-precision x + correction
+    wire): f32 c doubles the x bytes; a codec charges its exact payload."""
+    per_worker = {"w": jnp.zeros((D,), jnp.float32)}
+    deg = ring(K).degree
+    x_bytes = deg * D * 4
+
+    opt = MTDSGDm(MTDSGDMConfig(p=P), DenseComm(ring(K)))
+    assert opt.bytes_per_comm_round(per_worker) == 2 * x_bytes
+
+    opt_s = MTDSGDm(MTDSGDMConfig(p=P), DenseComm(ring(K)),
+                    SignCompressor())
+    sign_payload = opt_s.codec.wire_bytes(D)
+    assert opt_s.bytes_per_comm_round(per_worker) == \
+        x_bytes + deg * sign_payload
+
+    # QG ships x only — identical to PD-SGDM's wire
+    opt_q = QGDSGDm(QGDSGDMConfig(p=P), DenseComm(ring(K)))
+    assert opt_q.bytes_per_comm_round(per_worker) == x_bytes
+
+
+def test_qg_rejects_nesterov_and_mt_gates_sharded_codec():
+    with pytest.raises(ValueError, match="nesterov"):
+        QGDSGDm(QGDSGDMConfig(p=P, nesterov=True), DenseComm(ring(K)))
+    with pytest.raises(ValueError, match="static"):
+        MTDSGDm(MTDSGDMConfig(p=P),
+                ShardedComm(one_peer_exponential_schedule(K),
+                            axis_names=("w",)), SignCompressor())
+    # full-precision MT composes with schedules on both backends
+    MTDSGDm(MTDSGDMConfig(p=P),
+            ShardedComm(one_peer_exponential_schedule(K),
+                        axis_names=("w",)))
+
+
+def test_mt_scheduled_dense_round_equals_per_step():
+    """Dense scheduled MT: the dual (x, c) mix follows the per-round W of
+    a time-varying schedule, fused round ≡ per-step."""
+    sched = one_peer_exponential_schedule(K)
+    grads_fn, _ = _hetero_grads_fn()
+
+    def grad_only(pp, b):
+        return grads_fn(pp, b)[1]
+
+    for comp in [None, SignCompressor()]:
+        opt = MTDSGDm(MTDSGDMConfig(eta=0.05, mu=0.9, p=P,
+                                    weight_decay=1e-4),
+                      DenseComm(sched), comp)
+        params, state = _params(), opt.init(_params())
+        stepj = jax.jit(
+            lambda s, pp, b: opt.step(s, pp, grad_only(pp, b)))
+        for t in range(2 * P):
+            params, state = stepj(state, params, None)
+        params2, state2 = _run_rounds(opt, grads_fn, n_rounds=2)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(params2["w"]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state["c"]["w"]),
+                                   np.asarray(state2["c"]["w"]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------- kernel-round equivalence
+def _run_kernel_rounds(opt, K=4, P=4):
+    """2 fused rounds over a ragged multi-leaf tree (mirrors
+    tests/test_kernels.py::_run_rounds)."""
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (K, 33, 65)),
+              "w2": jax.random.normal(jax.random.fold_in(key, 1), (K, 7)),
+              "w3": jax.random.normal(jax.random.fold_in(key, 2),
+                                      (K, 2, 5, 11))}
+
+    def loss_fn(pp, b):
+        return 0.5 * sum(jnp.sum((l - b[0, 0]) ** 2)
+                         for l in jax.tree_util.tree_leaves(pp))
+
+    grad = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def grads_fn(params, batch):
+        losses, grads = grad(params, batch)
+        return losses.mean(), grads
+
+    batches = jnp.stack([
+        jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(9), t),
+                          (K, 2, 3)) for t in range(P)])
+    state = opt.init(params)
+    roundj = jax.jit(lambda s, pp, bs: opt.round(s, pp, grads_fn, bs))
+    for _ in range(2):
+        params, state, losses = roundj(state, params, batches)
+    return params, state, losses
+
+
+@pytest.mark.parametrize("name,comp", [
+    ("mt_dsgdm", None),
+    ("mt_dsgdm", SignCompressor()),
+    ("qg_dsgdm", None),
+])
+def test_kernel_round_equals_jnp_round_dense(name, comp):
+    """use_kernel=True fused round == jnp fused round: the tracking
+    matrices (c, ĝ_prev / xprev) ride the flatten-once layout through the
+    momentum scan, the tracking AXPY, and the dual gossip mix."""
+    K_, P_ = 4, 4
+    outs = []
+    for uk in (False, True):
+        opt = make_optimizer(name, DenseComm(ring(K_)), eta=0.05, mu=0.9,
+                             p=P_, weight_decay=1e-4, compressor=comp,
+                             use_kernel=uk, kernel_interpret=True)
+        outs.append(_run_kernel_rounds(opt, K_, P_))
+    (pa, sa, la), (pb, sb, lb) = outs
+    assert int(sb["step"]) == 2 * P_
+    extras = [k for k in ("c", "g_prev", "xprev") if k in sa]
+    for x, y in zip(
+            jax.tree_util.tree_leaves(
+                (pa, sa["m"], la, [sa[k] for k in extras])),
+            jax.tree_util.tree_leaves(
+                (pb, sb["m"], lb, [sb[k] for k in extras]))):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+
+
+def test_kernel_round_randk_tracking_falls_back_to_tree_comm():
+    """rand-k has no rows kernel: kernel_comm_supported is False and the
+    kernel round finishes with the tree comm at the boundary — same
+    trajectory as the jnp round."""
+    K_, P_ = 4, 2
+    outs = []
+    for uk in (False, True):
+        opt = MTDSGDm(MTDSGDMConfig(eta=0.05, mu=0.9, p=P_,
+                                    use_kernel=uk, kernel_interpret=True),
+                      DenseComm(ring(K_)),
+                      RandKCompressor(fraction=0.2))
+        if uk:
+            assert not opt.kernel_comm_supported
+        outs.append(_run_kernel_rounds(opt, K_, P_))
+    for x, y in zip(jax.tree_util.tree_leaves((outs[0][0], outs[0][1]["c"])),
+                    jax.tree_util.tree_leaves((outs[1][0], outs[1][1]["c"]))):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+
+
+_SCRIPT_SHARDED_TRACKING = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    # tp=1 mesh (kernel codec blocks == per-device tree blocks, tight tol)
+    for opt_name, tc in [("mt_dsgdm", False), ("mt_dsgdm", True),
+                         ("qg_dsgdm", False)]:
+        finals = []
+        for uk in (False, True):
+            run = RunCfg(model=mcfg,
+                         parallel=ParallelCfg(profile="A", remat="none"),
+                         optim=OptimCfg(name=opt_name, eta=0.05, mu=0.9, p=3,
+                                        weight_decay=1e-4, use_kernel=uk,
+                                        compressor="sign",
+                                        track_compressed=tc))
+            mesh = make_debug_mesh(8, 1)
+            pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+            K = pack.layout.n_workers
+            assert "c" in pack.state_struct or opt_name != "mt_dsgdm"
+            batches = [train_batch_arrays(mcfg, K, 1, 16,
+                       jax.random.fold_in(jax.random.PRNGKey(1), t))
+                       for t in range(3)]
+            params, state = pack.init_fn(jax.random.PRNGKey(0))
+            rb = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+            for _ in range(2):
+                params, state, losses = pack.train_round(params, state, rb)
+            finals.append(jax.tree_util.tree_map(np.asarray, (params, state)))
+        for a, b in zip(jax.tree_util.tree_leaves(finals[0]),
+                        jax.tree_util.tree_leaves(finals[1])):
+            np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)
+        print("TRACKING_KERNEL_EQ_OK", opt_name, "tc" if tc else "fp")
+""")
+
+
+def _run_sub(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_kernel_round_equals_jnp_round_sharded_tracking():
+    """use_kernel=True TrainPack.train_round == the jnp tree round on the
+    ShardedComm backend for MT (full-precision and sign-compressed
+    tracking) and QG."""
+    out = _run_sub(_SCRIPT_SHARDED_TRACKING)
+    assert "TRACKING_KERNEL_EQ_OK mt_dsgdm fp" in out
+    assert "TRACKING_KERNEL_EQ_OK mt_dsgdm tc" in out
+    assert "TRACKING_KERNEL_EQ_OK qg_dsgdm fp" in out

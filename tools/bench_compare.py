@@ -1,0 +1,154 @@
+"""Benchmark-regression gate: diff a fresh BENCH json against committed
+baselines on *ratio* metrics only.
+
+Absolute timings (``us_per_call``, ``rounds_per_s``) are a property of
+the machine that ran the benchmark — CI runners vary by multiples, so
+gating on them would only measure the weather.  Ratios measured *within*
+one run cancel the machine out: the flatten-once layout win
+(``fused_vs_perstep_parity`` — both drivers pay the same interpret-mode
+emulation cost) and the wire-codec byte reductions (``x_bf16`` — pure
+payload arithmetic, exact on any host).  Those are the rows this tool
+gates, each with its own tolerance:
+
+=============================  =====================  =====================
+row pattern                    derived key            tolerance
+=============================  =====================  =====================
+``kernel_path/speedup_p*``     fused_vs_perstep_      fresh ≥ 0.5 × baseline
+                               parity                 (timing ratio: noisy
+                                                      on shared runners)
+``wire_codecs/*``              x_bf16                 |Δ|/baseline ≤ 2%
+                                                      (deterministic bytes)
+=============================  =====================  =====================
+
+A gated (row, key) present in a baseline but missing from the fresh run
+**fails** — a silently dropped benchmark must not read as green.  Rows
+only in the fresh run are ignored (new benchmarks land before their
+baseline).  Usage::
+
+    python tools/bench_compare.py --fresh benchmarks/BENCH_fresh.json \
+        --baseline benchmarks/BENCH_kernel_path.json \
+        --baseline benchmarks/BENCH_wire_codecs.json
+
+Exit code 0 = gate green, 1 = regression (or missing gated row), 2 = bad
+invocation.  ``--spec name_regex:derived_key:min_frac=F`` /
+``:rel_tol=F`` appends custom gates.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+
+# (row-name glob, derived key, kind, threshold)
+#   min_frac: fresh >= threshold * baseline      (one-sided, ratios-of-times)
+#   rel_tol:  |fresh - baseline| <= threshold * |baseline|   (deterministic)
+DEFAULT_GATES = [
+    ("kernel_path/speedup_p*", "fused_vs_perstep_parity", "min_frac", 0.5),
+    ("wire_codecs/*", "x_bf16", "rel_tol", 0.02),
+]
+
+
+def _load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        derived = row.get("derived", {})
+        for k, v in derived.items():
+            if isinstance(v, (int, float)):
+                out[(row["name"], k)] = float(v)
+    return out
+
+
+class SpecError(ValueError):
+    pass
+
+
+def _parse_spec(spec: str):
+    try:
+        pattern, key, rule = spec.split(":", 2)
+        kind, val = rule.split("=", 1)
+        assert kind in ("min_frac", "rel_tol")
+        return (pattern, key, kind, float(val))
+    except (ValueError, AssertionError):
+        raise SpecError(
+            f"bad --spec {spec!r} (want glob:derived_key:min_frac=F "
+            f"or glob:derived_key:rel_tol=F)")
+
+
+def compare(fresh: dict, baseline: dict, gates) -> list:
+    """Returns a list of (name, key, baseline, fresh, verdict, detail);
+    verdict ∈ {'ok', 'FAIL', 'MISSING'}."""
+    report = []
+    for (name, key), base_v in sorted(baseline.items()):
+        for (pattern, gkey, kind, thr) in gates:
+            if gkey != key or not fnmatch.fnmatch(name, pattern):
+                continue
+            fresh_v = fresh.get((name, key))
+            if fresh_v is None:
+                report.append((name, key, base_v, None, "MISSING",
+                               "gated row absent from fresh run"))
+                continue
+            if kind == "min_frac":
+                ok = fresh_v >= thr * base_v
+                detail = (f"fresh/baseline = {fresh_v / base_v:.2f} "
+                          f"(floor {thr:.2f})")
+            else:
+                rel = (abs(fresh_v - base_v) / abs(base_v)
+                       if base_v else abs(fresh_v))
+                ok = rel <= thr
+                detail = f"|Δ|/baseline = {rel:.4f} (tol {thr:.2f})"
+            report.append((name, key, base_v, fresh_v,
+                           "ok" if ok else "FAIL", detail))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate fresh benchmark ratios against committed "
+                    "baselines (never absolute timings).")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH json produced by this run")
+    ap.add_argument("--baseline", action="append", required=True,
+                    help="committed BENCH json (repeatable)")
+    ap.add_argument("--spec", action="append", default=[],
+                    help="extra gate: glob:derived_key:min_frac=F | "
+                         "glob:derived_key:rel_tol=F")
+    args = ap.parse_args(argv)
+
+    try:
+        gates = DEFAULT_GATES + [_parse_spec(s) for s in args.spec]
+    except SpecError as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+    fresh = _load_rows(args.fresh)
+    baseline = {}
+    for path in args.baseline:
+        baseline.update(_load_rows(path))
+
+    report = compare(fresh, baseline, gates)
+    if not report:
+        print("bench_compare: no gated rows matched — refusing to pass "
+              "an empty gate", file=sys.stderr)
+        return 2
+
+    width = max(len(n) for (n, *_ ) in report) + 2
+    print(f"{'row':<{width}}{'key':<26}{'baseline':>10}{'fresh':>10}"
+          f"  verdict")
+    bad = 0
+    for (name, key, base_v, fresh_v, verdict, detail) in report:
+        fv = "—" if fresh_v is None else f"{fresh_v:.3f}"
+        print(f"{name:<{width}}{key:<26}{base_v:>10.3f}{fv:>10}"
+              f"  {verdict}  ({detail})")
+        bad += verdict != "ok"
+    if bad:
+        print(f"\nbench_compare: {bad} gated metric(s) regressed or "
+              "missing", file=sys.stderr)
+        return 1
+    print(f"\nbench_compare: {len(report)} gated metric(s) green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
