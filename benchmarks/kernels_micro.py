@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row
-from repro.kernels import ops, ref
+from repro.kernels import LANE, ops, ref
 from repro.kernels.momentum import BLOCK_ROWS
 
 
@@ -28,9 +28,9 @@ def _time(fn, *args, iters=3, **kw):
 def main():
     rows = BLOCK_ROWS * 8
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (rows, 1024))
+    x = jax.random.normal(key, (rows, LANE))
     m = jnp.zeros_like(x)
-    g = jax.random.normal(jax.random.fold_in(key, 1), (rows, 1024))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (rows, LANE))
     nbytes = x.size * 4
 
     from repro.kernels.momentum import momentum_update

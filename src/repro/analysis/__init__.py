@@ -1,0 +1,19 @@
+"""Static analysis of the round contract — no training step executed.
+
+The performance story of this reproduction rests on structural invariants
+(one gossip exchange per fused round, no host syncs in the hot path,
+donation honored, schedule switching without retraces, accounted ≡ shipped
+wire bytes).  This package machine-checks them at three levels:
+
+jaxpr_check   — structural invariants on ``jax.make_jaxpr`` traces
+hlo_check     — compiled-HLO invariants (donation aliasing, collective
+                allowlist, wire bytes ≡ ``bytes_per_comm_round``)
+retrace       — compilation-counting guard (schedules must not retrace)
+astlint       — source-level repo rules (``tools/lint_repro.py`` CLI)
+hlo_parse     — the post-SPMD HLO text parser the checks are built on
+                (shared with ``launch.hlo_analysis``'s roofline path)
+run           — the CLI driver CI executes: ``python -m repro.analysis.run``
+
+Import note: this module stays import-light (no jax) so the lint CLI can
+load ``astlint`` without initializing a backend.
+"""

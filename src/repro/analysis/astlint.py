@@ -1,0 +1,192 @@
+"""Repo-specific AST lint (the source-level half of the round contract).
+
+Rules (each a hot-path invariant that grep can't check reliably):
+
+RPR001  host-sync-in-core     ``block_until_ready`` / ``np.asarray`` inside
+                              ``core/`` — a host sync in a round body
+                              serializes the async dispatch pipeline.
+                              ``core/topology.py`` is exempt (its float64
+                              spectral math is host-side *by design* and
+                              never traced).
+RPR002  compressor-dispatch   ``isinstance(…, *Compressor)`` outside
+                              ``core/wire.py`` — codec dispatch has exactly
+                              one home (``make_codec``); scattered
+                              isinstance chains were how pre-PR-4 wire
+                              formats drifted apart.
+RPR003  lane-literal          hardcoded ``1024`` outside ``repro/kernels/``
+                              — the kernel lane width is ``LANE``; a bare
+                              1024 silently decouples from the layout if
+                              the lane ever changes.  Non-lane 1024s
+                              (sequence chunks, patch counts) carry an
+                              explicit ``# lint: allow`` pragma.
+RPR004  config-at-import      module-level ``jax.config.update`` outside
+                              ``repro/__init__.py`` — import-time config
+                              mutation makes behavior depend on import
+                              order.
+
+``# lint: allow`` on the offending line suppresses any rule (use
+sparingly; every pragma is an documented exception, not an escape hatch).
+
+This module deliberately imports no jax so ``tools/lint_repro.py`` stays
+instant.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import List
+
+__all__ = ["LintError", "lint_source", "lint_paths", "iter_py_files"]
+
+PRAGMA = "lint: allow"
+LANE_WIDTH = 1024      # the rule's own reference value  # lint: allow
+
+
+@dataclasses.dataclass(frozen=True)
+class LintError:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _in(path: str, fragment: str) -> bool:
+    return fragment in _norm(path)
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing attribute/name of a call target: ``jax.block_until_ready``
+    -> ``block_until_ready``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression (``jax.config.update``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel_path: str, src_lines: List[str]):
+        self.rel = _norm(rel_path)
+        self.lines = src_lines
+        self.errors: List[LintError] = []
+        self._func_depth = 0
+
+    # ---- helpers
+    def _pragma(self, node) -> bool:
+        ln = getattr(node, "lineno", 0)
+        if 1 <= ln <= len(self.lines) and PRAGMA in self.lines[ln - 1]:
+            return True
+        return False
+
+    def _err(self, node, rule: str, msg: str):
+        if not self._pragma(node):
+            self.errors.append(LintError(self.rel, node.lineno, rule, msg))
+
+    # ---- scope tracking (module level vs inside a function)
+    def visit_FunctionDef(self, node):
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # ---- RPR001 / RPR002 / RPR004
+    def visit_Call(self, node: ast.Call):
+        name = _call_name(node)
+        in_core = (_in(self.rel, "repro/core/")
+                   and not self.rel.endswith("core/topology.py"))
+        if in_core and name == "block_until_ready":
+            self._err(node, "RPR001",
+                      "block_until_ready in core/ — host sync in the round "
+                      "hot path")
+        if in_core and _dotted(node.func) in ("np.asarray", "numpy.asarray"):
+            self._err(node, "RPR001",
+                      "np.asarray in core/ — device→host transfer in traced "
+                      "code (topology.py is the only host-side module)")
+        if (name == "isinstance" and len(node.args) == 2
+                and not self.rel.endswith("core/wire.py")):
+            classes = node.args[1]
+            cands = (classes.elts if isinstance(classes, ast.Tuple)
+                     else [classes])
+            for c in cands:
+                cname = _dotted(c)
+                if cname.split(".")[-1].endswith("Compressor"):
+                    self._err(node, "RPR002",
+                              f"isinstance(…, {cname}) — compressor dispatch "
+                              "belongs to core/wire.py (make_codec)")
+                    break
+        if (_dotted(node.func) in ("jax.config.update", "config.update",
+                                   "_jax.config.update")
+                and self._func_depth == 0
+                and not self.rel.endswith("repro/__init__.py")):
+            self._err(node, "RPR004",
+                      "module-level jax.config.update — import-time config "
+                      "mutation outside repro/__init__")
+        self.generic_visit(node)
+
+    # ---- RPR003
+    def visit_Constant(self, node: ast.Constant):
+        if (node.value == LANE_WIDTH and isinstance(node.value, int)
+                and not isinstance(node.value, bool)
+                and not _in(self.rel, "repro/kernels/")):
+            self._err(node, "RPR003",
+                      "hardcoded 1024 — use the LANE constant "
+                      "(repro.kernels.LANE) or mark a genuine non-lane "
+                      "constant with `# lint: allow`")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, rel_path: str) -> List[LintError]:
+    """Lint one file's source text; ``rel_path`` is repo-relative."""
+    try:
+        tree = ast.parse(src, filename=rel_path)
+    except SyntaxError as e:
+        return [LintError(_norm(rel_path), e.lineno or 0, "RPR000",
+                          f"syntax error: {e.msg}")]
+    linter = _Linter(rel_path, src.splitlines())
+    linter.visit(tree)
+    return sorted(linter.errors, key=lambda e: (e.path, e.line))
+
+
+def iter_py_files(roots):
+    for root in roots:
+        if os.path.isfile(root):
+            if root.endswith(".py"):
+                yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_paths(roots, base: str = ".") -> List[LintError]:
+    """Lint every ``.py`` under the given roots (files or directories)."""
+    out: List[LintError] = []
+    for path in iter_py_files(roots):
+        rel = os.path.relpath(path, base)
+        with open(path, encoding="utf-8") as f:
+            out.extend(lint_source(f.read(), rel))
+    return out

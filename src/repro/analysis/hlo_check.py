@@ -1,0 +1,130 @@
+"""Compiled-HLO round-contract checks (AOT lowering, nothing executed).
+
+Three invariants on the sharded ``TrainPack.train_round`` executable:
+
+* **donation honored** — every ``donate_argnums`` entry must appear in the
+  module's ``input_output_alias`` map (an unhonored donation silently
+  doubles the parameter+state memory footprint);
+* **collective allowlist** — the only substantive collectives are the
+  gossip's ``collective-permute`` set; a stray all-gather / all-reduce is
+  exactly the silent regression that erases the periodic-communication
+  advantage (tiny scalar all-reduces — the loss mean — are exempt);
+* **accounted ≡ shipped** — per-round ``collective-permute`` wire bytes
+  parsed from HLO must equal ``opt.bytes_per_comm_round`` for the codec,
+  a compile-time re-proof of the wire-codec byte accounting.
+
+All checks take HLO text (``lowered.compile().as_text()``) so they run in
+interpret mode on CPU with forced host devices — no accelerator needed.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+import jax
+
+from repro.analysis.hlo_parse import (CollectiveStats, donated_aliases,
+                                      parse_collectives)
+
+__all__ = ["compile_round_text", "check_donation",
+           "check_collectives_allowed", "check_wire_bytes",
+           "check_sharded_round"]
+
+# an all-reduce at or below this payload is bookkeeping (the scalar loss
+# mean over workers), not gossip traffic
+SCALAR_ALLREDUCE_BYTES = 256
+
+
+def compile_round_text(pack) -> str:
+    """AOT-compile the canonical hot path and return the optimized HLO."""
+    lowered = pack.train_round.lower(pack.params_struct, pack.state_struct,
+                                     pack.round_batch_struct)
+    return lowered.compile().as_text()
+
+
+def check_donation(hlo_text: str, n_donated: int) -> List[str]:
+    """``donate_argnums`` must materialize as input/output aliases.
+
+    ``n_donated`` is the number of donated *buffers* (flattened leaves of
+    the donated argnums).  XLA may legitimately skip aliasing a buffer
+    whose shape/dtype cannot match any output, so the check requires the
+    alias map to cover at least 90% of the donated set — an empty or
+    near-empty map means the donation was dropped altogether.
+    """
+    aliases = donated_aliases(hlo_text)
+    if n_donated == 0:
+        return []
+    if len(aliases) == 0:
+        return ["donation dropped: input_output_alias is empty but "
+                f"{n_donated} buffer(s) were donated"]
+    if len(aliases) < 0.9 * n_donated:
+        return [f"donation partially honored: {len(aliases)} aliased "
+                f"buffer(s) out of {n_donated} donated"]
+    return []
+
+
+def check_collectives_allowed(
+        stats: CollectiveStats,
+        allowed: Iterable[str] = ("collective-permute",),
+        scalar_allreduce_ok: bool = True) -> List[str]:
+    """No collectives beyond the expected gossip set.
+
+    ``allowed`` ops pass unconditionally; an ``all-reduce`` whose payload
+    is ≤ ``SCALAR_ALLREDUCE_BYTES`` passes when ``scalar_allreduce_ok``
+    (the per-round loss mean).  Everything else is a contract violation.
+    """
+    allowed = set(allowed)
+    out = []
+    for call in stats.calls:
+        if call.op in allowed:
+            continue
+        if (scalar_allreduce_ok and call.op == "all-reduce"
+                and call.result_bytes <= SCALAR_ALLREDUCE_BYTES):
+            continue
+        out.append(f"unexpected collective in the round: {call.op} "
+                   f"({call.result_bytes} B payload) — {call.line[:120]}")
+    return out
+
+
+def check_wire_bytes(stats: CollectiveStats, expected: int,
+                     label: str = "") -> List[str]:
+    """collective-permute bytes per device ≡ ``bytes_per_comm_round``.
+
+    Only valid on a mesh where one device is one worker (TP=1): with model
+    parallelism each worker's wire bytes are split across its TP shards
+    and the per-device total no longer equals the per-worker accounting.
+    """
+    got = int(stats.wire_bytes.get("collective-permute", 0))
+    if got != int(expected):
+        who = f" [{label}]" if label else ""
+        return [f"wire bytes{who}: HLO ships {got} B/device/round but "
+                f"bytes_per_comm_round accounts {int(expected)} B"]
+    return []
+
+
+def _count_donated_leaves(pack) -> int:
+    return sum(len(jax.tree_util.tree_leaves(t))
+               for t in (pack.params_struct, pack.state_struct))
+
+
+def check_sharded_round(pack, *, check_bytes: bool = True,
+                        expected_wire_bytes: Optional[int] = None,
+                        label: str = "") -> List[str]:
+    """All HLO checks on one built ``TrainPack`` (donation + allowlist +
+    accounted≡shipped).  ``check_bytes=False`` skips the byte equality —
+    required on meshes with model parallelism (see :func:`check_wire_bytes`).
+    """
+    txt = compile_round_text(pack)
+    stats = parse_collectives(txt)
+    out = []
+    out += check_donation(txt, _count_donated_leaves(pack))
+    out += check_collectives_allowed(stats)
+    if check_bytes:
+        if expected_wire_bytes is None:
+            # params_struct is worker-stacked; the wire ships one worker's
+            # leaves per device, so the accounting runs on the unstacked tree
+            per_worker = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                pack.params_struct)
+            expected_wire_bytes = pack.opt.bytes_per_comm_round(per_worker)
+        out += check_wire_bytes(stats, expected_wire_bytes, label=label)
+    return out

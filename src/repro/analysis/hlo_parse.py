@@ -1,0 +1,234 @@
+"""Post-SPMD HLO text parsing: collectives, loop nesting, donation aliases.
+
+``cost_analysis`` gives per-device FLOPs / bytes-accessed but no collective
+traffic, so we parse the compiled (post-partitioning) HLO text and sum the
+operand sizes of every collective op, converted to effective bytes-on-wire
+per device with the standard ring-algorithm factors.
+
+This module is the single home of that parser; ``repro.launch.hlo_analysis``
+re-exports it for the roofline path and ``repro.analysis.hlo_check`` builds
+the round-contract assertions on top of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+__all__ = ["CollectiveCall", "CollectiveStats", "parse_collectives",
+           "computation_loop_depths", "donated_aliases"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCall:
+    """One collective op site (per compiled call, before loop multiplicity)."""
+    op: str
+    result_bytes: int      # operand/result payload of one execution
+    wire_bytes: float      # ring-algorithm effective bytes on the wire
+    group: int             # replica-group size
+    mult: int              # loop-trip multiplier applied by parse_collectives
+    line: str              # the (truncated) HLO line, for reporting
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]     # per device, per call, summed
+    wire_bytes: Dict[str, float]     # effective ring-algorithm bytes/device
+    lines: List[str]
+    calls: List[CollectiveCall] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+# computation definition header; param lists may contain nested parens
+# (tuple-typed while-body params), so only anchor on name + '(' + '... {'
+_COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+    r"%?([\w\.\-]+)")
+
+
+def computation_loop_depths(hlo_text: str) -> Dict[str, int]:
+    """while-nesting depth of every computation (ENTRY = 0).
+
+    A collective inside a scan body executes once *per trip*; the caller
+    supplies the known trip counts per depth (our scans: train-round steps,
+    layer repeats) to recover true per-call traffic.
+    """
+    comp_lines: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_DEF_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comp_lines[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comp_lines[cur].append(line)
+
+    # edges: computation -> (callee, via_while)
+    edges: Dict[str, List] = {}
+    for name, lines in comp_lines.items():
+        edges[name] = []
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            body = wm.group(1) if wm else None
+            for callee in _CALL_RE.findall(line):
+                if callee in comp_lines:
+                    edges[name].append((callee, callee == body))
+
+    depths = {entry: 0} if entry else {}
+    stack = [entry] if entry else []
+    while stack:
+        c = stack.pop()
+        for callee, via_while in edges.get(c, []):
+            d = depths[c] + (1 if via_while else 0)
+            if callee not in depths or d > depths[callee]:
+                depths[callee] = d
+                stack.append(callee)
+    return depths
+
+
+# the deprecated private name, kept so older call sites keep working
+_computation_loop_depths = computation_loop_depths
+
+
+def parse_collectives(hlo_text: str, loop_trips=()) -> CollectiveStats:
+    """Sum collective traffic; ops at while-depth d are multiplied by
+    prod(loop_trips[:d]) (deeper unknown loops contribute ×1)."""
+    counts: Dict[str, int] = {}
+    rbytes: Dict[str, int] = {}
+    wbytes: Dict[str, float] = {}
+    lines: List[str] = []
+    calls: List[CollectiveCall] = []
+    depths = computation_loop_depths(hlo_text) if loop_trips else {}
+
+    def multiplier(depth: int) -> int:
+        m = 1
+        for t in list(loop_trips)[:depth]:
+            m *= int(t)
+        return m
+
+    cur_comp = None
+    for line in hlo_text.splitlines():
+        dm = _COMP_DEF_RE.match(line.strip())
+        if dm and line.rstrip().endswith("{"):
+            cur_comp = dm.group(1)
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # async pairs: count -start only (the -done carries the same tensor)
+        if "-done(" in line:
+            continue
+        size = _type_bytes(m.group("type"))
+        n = _group_size(line)
+        mult = multiplier(depths.get(cur_comp, 0)) if loop_trips else 1
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * size
+        elif op == "all-gather":
+            wire = (n - 1) / n * size          # size = gathered result
+        elif op == "reduce-scatter":
+            wire = (n - 1) * size              # size = scattered result
+        elif op == "all-to-all":
+            wire = (n - 1) / n * size
+        else:                                   # collective-permute
+            wire = float(size)
+        counts[op] = counts.get(op, 0) + mult
+        rbytes[op] = rbytes.get(op, 0) + size * mult
+        wbytes[op] = wbytes.get(op, 0.0) + wire * mult
+        lines.append(f"x{mult} " + line.strip()[:180])
+        calls.append(CollectiveCall(op=op, result_bytes=size, wire_bytes=wire,
+                                    group=n, mult=mult,
+                                    line=line.strip()[:180]))
+    return CollectiveStats(counts, rbytes, wbytes, lines, calls)
+
+
+# donation: the HloModule header carries the honoured aliases, e.g.
+#   input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, may-alias) }
+# one "(argno, {tuple-index...}, kind)" entry per aliased (donated) buffer.
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{(?P<out>[0-9, ]*)\}:\s*\((?P<arg>\d+),\s*\{(?P<idx>[0-9, ]*)\}"
+    r"(?:,\s*(?P<kind>[\w-]+))?\)")
+
+
+def donated_aliases(hlo_text: str) -> List[dict]:
+    """Parse the honoured input→output aliases from the module header.
+
+    Returns one dict per alias entry: ``{"output_index": tuple,
+    "param_number": int, "param_index": tuple, "kind": str}``.  An empty
+    list means XLA honoured **no** donation — the check that catches a
+    dropped ``donate_argnums``.
+    """
+    header = next((l for l in hlo_text.splitlines()
+                   if l.startswith("HloModule")), "")
+    m = re.search(r"input_output_alias=\{", header)
+    if not m:
+        return []
+    # the alias map is brace-nested; scan to the matching close brace
+    depth, i = 0, m.end() - 1
+    while i < len(header):
+        if header[i] == "{":
+            depth += 1
+        elif header[i] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    block = header[m.end():i]
+    out = []
+    for em in _ALIAS_ENTRY_RE.finditer(block):
+        to_tuple = lambda s: tuple(int(x) for x in s.split(",") if x.strip())
+        out.append({"output_index": to_tuple(em.group("out")),
+                    "param_number": int(em.group("arg")),
+                    "param_index": to_tuple(em.group("idx")),
+                    "kind": em.group("kind") or "may-alias"})
+    return out

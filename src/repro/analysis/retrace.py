@@ -1,0 +1,130 @@
+"""Retrace guard: schedules must not recompile the fused round.
+
+PR 2's topology schedules promise that every round of a time-varying
+gossip graph runs from **one** compiled executable (``lax.switch`` over
+precomputed ppermute programs / stacked-W indexing on the traced round
+index).  :class:`CompileCounter` turns that promise into a checked
+property: it counts XLA compilations while a full schedule sweep plus a
+mid-cycle resume executes, and the round function must compile exactly
+once.
+"""
+from __future__ import annotations
+
+import logging
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompileCounter", "check_schedule_no_retrace"]
+
+# jax_log_compiles emits on these loggers ("Compiling <name> ..." /
+# "Finished XLA compilation of <name> ...") — we listen on both so the
+# count survives jax moving the message between them.
+_COMPILE_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class _Capture(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.records: List[str] = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        if "Compiling" in msg or "compilation" in msg:
+            self.records.append(msg)
+
+
+class CompileCounter:
+    """Count XLA compilations inside a ``with`` block.
+
+    >>> with CompileCounter() as cc:
+    ...     run_full_schedule_sweep()
+    >>> assert cc.count("train_round") == 1
+    """
+
+    def __enter__(self):
+        self._handler = _Capture()
+        self._loggers = []
+        for name in _COMPILE_LOGGERS:
+            lg = logging.getLogger(name)
+            self._loggers.append((lg, lg.level, lg.propagate))
+            lg.addHandler(self._handler)
+            lg.setLevel(logging.DEBUG)
+            lg.propagate = False     # capture silently, don't spam stderr
+        self._prev = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        return self
+
+    def __exit__(self, *exc):
+        jax.config.update("jax_log_compiles", self._prev)
+        for lg, lvl, prop in self._loggers:
+            lg.removeHandler(self._handler)
+            lg.setLevel(lvl)
+            lg.propagate = prop
+        return False
+
+    @property
+    def records(self) -> List[str]:
+        return list(self._handler.records)
+
+    def count(self, name_substr: str = "") -> int:
+        """Number of "Compiling ..." events mentioning ``name_substr``.
+
+        Each compilation logs on more than one logger, so events are
+        deduplicated by the compiled-computation name line.
+        """
+        starts = [m for m in self._handler.records
+                  if m.startswith("Compiling") and name_substr in m]
+        return len(starts)
+
+
+def check_schedule_no_retrace(make_round=None, *, n_workers: int = 8,
+                              schedule: str = "one_peer_exp",
+                              p: int = 2) -> List[str]:
+    """Sweep a full schedule cycle + a mid-cycle resume under the counter.
+
+    ``make_round()`` may supply a custom ``(round_fn, params, state,
+    batches, period)``; the default builds PD-SGDM on DenseComm with the
+    named schedule (single device, no mesh needed) — the same stacked-W
+    round-index selection the sharded backend's ``lax.switch`` mirrors.
+    Returns violation strings (empty = one compilation total).
+    """
+    if make_round is None:
+        make_round = lambda: _default_round(n_workers, schedule, p)
+    round_fn, params, state, batches, period = make_round()
+
+    with CompileCounter() as cc:
+        # full cycle sweep: every round index of the schedule
+        for _ in range(period + 1):
+            params, state, _losses = round_fn(params, state, batches)
+        # mid-cycle resume: fresh state with the step counter mid-cycle —
+        # exactly what checkpoint restore does
+        state2 = dict(state)
+        state2["step"] = jnp.asarray((period // 2 + 1) * p, jnp.int32)
+        round_fn(params, state2, batches)
+    n = cc.count()
+    if n != 1:
+        return [f"schedule sweep + mid-cycle resume compiled {n}× "
+                f"(expected exactly 1); events:\n  " +
+                "\n  ".join(cc.records[:10])]
+    return []
+
+
+def _default_round(n_workers: int, schedule: str, p: int):
+    from repro.core import PDSGDM, PDSGDMConfig
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import make_schedule
+    from repro.analysis.jaxpr_check import toy_grads_fn, toy_params
+
+    sched = make_schedule(schedule, (n_workers,))
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=p), DenseComm(sched))
+    params = toy_params(n_workers)
+    state = opt.init(params)
+    batches = jnp.zeros((p, n_workers, 4), jnp.float32)
+
+    @jax.jit
+    def round_fn(params, state, batches):
+        return opt.round(state, params, toy_grads_fn, batches)
+
+    return round_fn, params, state, batches, sched.period

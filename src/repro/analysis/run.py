@@ -1,0 +1,218 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# The lines above MUST run before jax imports: the sharded HLO checks need
+# 8 forced host devices (4 workers × TP2 debug mesh / 8 workers × TP1),
+# and jax locks the device count at first init.  Run this module in its
+# own process (python -m repro.analysis.run), never import it from tests.
+
+import argparse      # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+from jax.experimental import enable_x64  # noqa: E402
+
+"""Static-analysis driver: the round contract, checked across the grid.
+
+    python -m repro.analysis.run               # fast grid (CI push)
+    python -m repro.analysis.run --grid full   # optimizer × codec ×
+                                               # schedule sweep (nightly)
+
+Phases (nothing trains; jaxpr tracing + AOT compiles only):
+
+1. dense jaxpr grid      — optimizer × {tree, kernel} on DenseComm:
+                           one p-scan, zero collectives, zero callbacks,
+                           zero f64 (traced under x64), flatten-once carry
+2. sharded jaxpr + HLO   — build_train on the debug mesh per optimizer ×
+                           codec: gossip at the boundary only, expected
+                           ppermute counts, switch branches ≡ schedule
+                           period, donation aliased, collective allowlist,
+                           collective-permute bytes ≡ bytes_per_comm_round
+3. retrace guard         — full schedule sweep + mid-cycle resume must
+                           compile the fused round exactly once
+
+Exit 0 = contract holds, 1 = violations (printed per combo).
+"""
+
+
+def _dense_grid(full: bool):
+    from repro.core import make_compressor
+    grid = [
+        ("pd_sgdm", None, False),
+        ("pd_sgdm", None, True),
+        ("cpd_sgdm", "sign", True),
+        ("cpd_sgdm", "qsgd", False),
+        ("mt_dsgdm", None, False),
+    ]
+    if full:
+        grid += [
+            ("cpd_sgdm", "sign", False),
+            ("cpd_sgdm", "qsgd", True),
+            ("cpd_sgdm", "topk", False),
+            ("cpd_sgdm", "randk", False),
+            ("cpd_sgdm", "identity", False),
+            ("qg_dsgdm", None, False),
+            ("mt_dsgdm", None, True),
+        ]
+    return grid
+
+
+def phase_dense(full: bool) -> list:
+    from repro.analysis import jaxpr_check as jc
+    from repro.core import make_compressor, make_optimizer
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import make_schedule, ring
+
+    K = 8
+    params = jc.toy_params(K)
+    failures = []
+    for name, comp, kernel in _dense_grid(full):
+        compressor = make_compressor(comp) if comp else None
+        opt = make_optimizer(name, DenseComm(ring(K)), eta=0.05, mu=0.9,
+                             p=3, compressor=compressor, use_kernel=kernel,
+                             kernel_interpret=True)
+        kern = kernel and opt.kernel_comm_supported
+        label = f"dense/{name}/{comp or 'none'}/{'kernel' if kern else 'tree'}"
+        v = jc.check_round_contract(opt, params, kernel=kern)
+        _report(label, v, failures)
+
+    # scheduled dense rounds (stacked-W indexing; still zero collectives)
+    for sched_name in (["one_peer_exp"] if not full else
+                       ["one_peer_exp", "random_matching"]):
+        sched = make_schedule(sched_name, (K,))
+        opt = make_optimizer("pd_sgdm", DenseComm(sched), eta=0.05, mu=0.9,
+                             p=2)
+        v = jc.check_round_contract(opt, params)
+        _report(f"dense/pd_sgdm/{sched_name}", v, failures)
+    return failures
+
+
+def _sharded_grid(full: bool):
+    # (optimizer, codec, use_kernel, topology_schedule)
+    grid = [
+        ("pd_sgdm", "sign", False, "static"),
+        ("pd_sgdm", "sign", True, "static"),
+        ("cpd_sgdm", "sign", False, "static"),
+        ("pd_sgdm", "sign", False, "one_peer_exp"),
+    ]
+    if full:
+        grid += [
+            ("cpd_sgdm", "sign", True, "static"),
+            ("cpd_sgdm", "qsgd", False, "static"),
+            ("cpd_sgdm", "topk", False, "static"),
+            ("cpd_sgdm", "randk", False, "static"),
+            ("mt_dsgdm", "sign", False, "static"),
+            ("pd_sgdm", "sign", False, "random_matching"),
+            ("pd_sgdm", "sign", True, "one_peer_exp"),
+        ]
+    return grid
+
+
+def _build_pack(opt_name, codec, use_kernel, schedule):
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    run = RunCfg(model=mcfg,
+                 parallel=ParallelCfg(profile="A", remat="none",
+                                      topology_schedule=schedule),
+                 optim=OptimCfg(name=opt_name, p=2, compressor=codec,
+                                use_kernel=use_kernel,
+                                kernel_interpret=True))
+    mesh = make_debug_mesh(8, 1)   # 8 workers × TP1: per-device ≡ per-worker
+    return build_train(run, mesh, InputShape("t", 16, 8, "train"))
+
+
+def phase_sharded(full: bool) -> list:
+    from repro.analysis import hlo_check as hc
+    from repro.analysis import jaxpr_check as jc
+
+    failures = []
+    for opt_name, codec, use_kernel, schedule in _sharded_grid(full):
+        label = (f"sharded/{opt_name}/{codec}/"
+                 f"{'kernel' if use_kernel else 'tree'}/{schedule}")
+        try:
+            pack = _build_pack(opt_name, codec, use_kernel, schedule)
+        except ValueError as e:      # unsupported combo (e.g. CPD+schedule)
+            print(f"  skip {label}: {e}")
+            continue
+        args = (pack.params_struct, pack.state_struct,
+                pack.round_batch_struct)
+        jx = jax.make_jaxpr(pack.train_round)(*args)
+        v = []
+        v += jc.check_no_host_callbacks(jx)
+        v += jc.check_round_scan(jx, pack.opt.config.p)
+        expected = None
+        if opt_name == "pd_sgdm" and schedule == "static":
+            deg = pack.opt.comm.topology.degree
+            n_arrays = (1 if (use_kernel and pack.opt.kernel_comm_supported)
+                        else len(jax.tree_util.tree_leaves(
+                            pack.params_struct)))
+            expected = deg * n_arrays
+        v += jc.check_gossip_boundary(jx, expected=expected)
+        if schedule != "static":
+            v += jc.check_schedule_switch(jx, pack.opt.comm.period)
+        with enable_x64():
+            jx64 = jax.make_jaxpr(pack.train_round)(*args)
+        v += jc.check_no_f64(jx64)
+        # schedules vary wire bytes by round; byte equality is round-0 only
+        v += hc.check_sharded_round(pack, check_bytes=(schedule == "static"),
+                                    label=label)
+        _report(label, v, failures)
+    return failures
+
+
+def phase_retrace() -> list:
+    from repro.analysis.retrace import check_schedule_no_retrace
+
+    failures = []
+    v = check_schedule_no_retrace()
+    _report("retrace/one_peer_exp-sweep+resume", v, failures)
+    return failures
+
+
+def _report(label: str, violations: list, failures: list):
+    status = "ok" if not violations else "FAIL"
+    print(f"  {status:4s} {label}")
+    for msg in violations:
+        print(f"       - {msg}")
+    if violations:
+        failures.append((label, violations))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="round-contract static checks")
+    ap.add_argument("--grid", choices=("fast", "full"), default="fast")
+    ap.add_argument("--phase", choices=("all", "dense", "sharded", "retrace"),
+                    default="all")
+    args = ap.parse_args(argv)
+    full = args.grid == "full"
+
+    failures = []
+    t0 = time.time()
+    if args.phase in ("all", "dense"):
+        print("[1/3] dense jaxpr contract grid")
+        failures += phase_dense(full)
+    if args.phase in ("all", "sharded"):
+        print("[2/3] sharded jaxpr + HLO contract grid")
+        failures += phase_sharded(full)
+    if args.phase in ("all", "retrace"):
+        print("[3/3] retrace guard")
+        failures += phase_retrace()
+
+    dt = time.time() - t0
+    if failures:
+        print(f"\nstatic-analysis: {len(failures)} combo(s) violated the "
+              f"round contract ({dt:.0f}s)", file=sys.stderr)
+        return 1
+    print(f"\nstatic-analysis: round contract holds ({dt:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

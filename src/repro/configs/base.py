@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.kernels import LANE    # import-light (no jax)
+
 __all__ = ["LayerSpec", "ModelCfg", "ParallelCfg", "OptimCfg", "RunCfg"]
 
 
@@ -56,7 +58,7 @@ class ModelCfg:
     ssm_bcast_groups: bool = False
     # --- input modality
     input_mode: str = "tokens"      # tokens | embeds | vlm
-    n_patches: int = 1024           # vlm: patch-embedding prefix length
+    n_patches: int = 1024           # vlm patch-prefix length  # lint: allow
     # --- dtypes
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
@@ -161,7 +163,7 @@ class OptimCfg:
     # slots, randk → values only (indices key-derived), qsgd → uintN
     # levels + norms.  Irrelevant knobs are ignored per operator.
     compressor: str = "sign"        # identity | sign | topk | randk | qsgd
-    compressor_block: int = 1024    # sign/topk/qsgd block (1024 = kernel lane)
+    compressor_block: int = LANE    # sign/topk/qsgd block (LANE = kernel path)
     compressor_fraction: float = 0.01   # topk / randk kept fraction
     compressor_levels: int = 7      # qsgd levels (7 -> 4-bit wire)
     # Pallas execution path: run the fused round on the flatten-once

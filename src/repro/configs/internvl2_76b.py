@@ -14,7 +14,7 @@ def config() -> RunCfg:
         name="internvl2-76b", arch_type="vlm",
         n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
         d_ff=28672, vocab=128256,
-        input_mode="vlm", n_patches=1024,
+        input_mode="vlm", n_patches=1024,   # ViT patch count  # lint: allow
         param_dtype="bfloat16", compute_dtype="bfloat16",
         source="arXiv:2404.16821",
     )

@@ -39,7 +39,9 @@ __all__ = [
     "SIGN_BLOCK",
 ]
 
-SIGN_BLOCK = 1024  # elements per scale block (multiple of 8 and of 128 lanes)
+# elements per scale block ≡ the kernel lane width (so the flatten-once
+# rows coincide with the per-leaf blocks); repro.kernels is import-light
+from repro.kernels import LANE as SIGN_BLOCK  # noqa: E402
 
 
 def _pad_to(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:

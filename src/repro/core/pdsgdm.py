@@ -221,19 +221,32 @@ class PDSGDM:
             return self.comm._roll(mat, ax, sh)
         return self.comm._receive_from(mat, ax, sh)
 
-    def _gossip_mat(self, x_mat, r):
+    def _mat_wire_static(self) -> bool:
+        """Whether ``_gossip_mat`` runs the shift-structured AXPY wire:
+        static graph, no perms, not complete — the path whose neighbour
+        exchanges slice to ``plan.used_rows`` (block-exact accounting)."""
+        top = self.comm.topology
+        return ((self.comm.schedule is None or self.comm.period == 1)
+                and not top.perms
+                and top.name not in ("complete", "disconnected"))
+
+    def _gossip_mat(self, x_mat, r, *, plan=None):
         """Gossip mix on the kernel layout.  Static shift-structured graphs
         run the fused Pallas AXPY per topology axis (mirroring
         ``ShardedComm._mix_with``'s Kronecker factorization); everything
         else (schedules, ``complete``, perm graphs) falls back to
-        ``comm.mix`` applied to the matrix — still flatten-once."""
+        ``comm.mix`` applied to the matrix — still flatten-once.
+
+        With a ``plan``, each neighbour exchange ships only the
+        ``plan.used_rows`` wire extent: the block-alignment tail is zero
+        on every worker and row-local mixing keeps it zero, so slicing is
+        exact and the ppermute bytes equal ``bytes_per_comm_round``.
+        """
         from repro.kernels import ops as kops
-        top = self.comm.topology
-        kernel_ok = ((self.comm.schedule is None or self.comm.period == 1)
-                     and not top.perms
-                     and top.name not in ("complete", "disconnected"))
-        if not kernel_ok:
+        if not self._mat_wire_static():
             return self.comm.mix(x_mat, r=r)
+        top = self.comm.topology
+        u = plan.used_rows if plan is not None else None
         per_axis: dict = {}
         for (ax, sh, w) in top.shifts:
             per_axis.setdefault(ax, []).append((sh, w))
@@ -241,17 +254,22 @@ class PDSGDM:
         for ax in sorted(per_axis):
             views, weights = [], []
             for (sh, w) in per_axis[ax]:
-                views.append(y if sh == 0 else self._shift_view_mat(y, ax, sh))
+                if sh == 0:
+                    views.append(y)
+                elif u is not None and u < y.shape[-2]:
+                    views.append(plan.pad_wire(
+                        self._shift_view_mat(y[..., :u, :], ax, sh)))
+                else:
+                    views.append(self._shift_view_mat(y, ax, sh))
                 weights.append(w)
             y = kops.gossip_mix_mat(tuple(views), tuple(weights),
                                     interpret=self.config.kernel_interpret)
         return y
 
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
-        """One gossip round on the kernel layout (``counts``/``plan`` unused
-        here; CPD-SGDM's override feeds them to the sign kernel and the
-        wire-extent slicing)."""
-        return self._gossip_mat(x_mat, r), mats
+        """One gossip round on the kernel layout (``counts`` unused here;
+        CPD-SGDM's override feeds it to the sign kernel)."""
+        return self._gossip_mat(x_mat, r, plan=plan), mats
 
     def kernel_round(self, state, params, grads_fn, batches, *, gossip=True,
                      local_step_mat=None, comm_round_mat=None):
@@ -300,8 +318,25 @@ class PDSGDM:
         return params, state, losses
 
     # -- comm-cost model ----------------------------------------------------------
+    def _mat_wire_bytes(self, params) -> int:
+        """f32 bytes of one neighbour exchange on the kernel layout: the
+        ``used_rows`` wire extent (Σ per-leaf ceil(size/1024) rows × 1024)
+        that actually ships — master copies stay f32 across the round."""
+        import numpy as np
+        from repro.kernels import LANE
+        rows = sum(-(-int(np.prod(l.shape, dtype=np.int64)) // LANE)
+                   for l in jax.tree_util.tree_leaves(params))
+        return rows * LANE * 4
+
+    def _kernel_wire_active(self) -> bool:
+        return (self.config.use_kernel and self.kernel_comm_supported
+                and self._mat_wire_static())
+
     def bytes_per_comm_round(self, params, r: int = 0) -> int:
         from repro.core.gossip import gossip_bytes_per_round
+        if self._kernel_wire_active():
+            deg = self.comm.topology_at(r).degree
+            return deg * self._mat_wire_bytes(params)
         return gossip_bytes_per_round(params, self.comm, r=r)
 
     def bytes_per_round_cycle(self, params) -> tuple:

@@ -278,10 +278,10 @@ class MTDSGDm(PDSGDM):
         compressed tracking packs c with the codec's rows kernels and
         ships the payload sliced to ``plan.used_rows`` (alignment padding
         never crosses the wire), exactly like CPD-SGDM's drift wire."""
-        x_new = self._gossip_mat(x_mat, r)
+        x_new = self._gossip_mat(x_mat, r, plan=plan)
         c = mats["c"]
         if self.codec is None:
-            c_new = self._gossip_mat(c, r)
+            c_new = self._gossip_mat(c, r, plan=plan)
         else:
             interp = self.config.kernel_interpret
             payload = self.codec.rows_pack(c, counts=counts,
@@ -309,16 +309,23 @@ class MTDSGDm(PDSGDM):
         the correction wire — exact codec bytes when compressed, f32
         otherwise — both × the round's topology degree."""
         from repro.core.gossip import gossip_bytes_per_round
-        x_bytes = gossip_bytes_per_round(params, self.comm, r=r)
+        deg = self.comm.topology_at(r).degree
+        if self._kernel_wire_active():
+            x_bytes = deg * self._mat_wire_bytes(params)
+        else:
+            x_bytes = gossip_bytes_per_round(params, self.comm, r=r)
         leaves = jax.tree_util.tree_leaves(params)
         if self.codec is not None:
             c_payload = sum(
                 self.codec.wire_bytes(int(np.prod(l.shape, dtype=np.int64)))
                 for l in leaves)
+        elif self._kernel_wire_active():
+            # uncompressed c ships on the same used_rows kernel wire as x
+            c_payload = self._mat_wire_bytes(params)
         else:
             c_payload = sum(int(np.prod(l.shape, dtype=np.int64)) * 4
                             for l in leaves)
-        return x_bytes + self.comm.topology_at(r).degree * c_payload
+        return x_bytes + deg * c_payload
 
 
 class QGDSGDm(PDSGDM):
@@ -418,7 +425,7 @@ class QGDSGDm(PDSGDM):
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
         cfg = self.config
         mu = jnp.float32(cfg.mu)
-        x_new = self._gossip_mat(x_mat, r)
+        x_new = self._gossip_mat(x_mat, r, plan=plan)
         inv = jnp.float32(1.0) / (self._round_lr(r) * jnp.float32(cfg.p))
         d_hat = (mats["xprev"] - x_new) * inv
         m_new = mu * mats["m"] + (jnp.float32(1.0) - mu) * d_hat

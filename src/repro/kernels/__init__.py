@@ -15,7 +15,17 @@ Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling; ``ops.py``
 holds the ``KernelPlan`` flatten-once layout and the jit'd pytree wrappers
 (interpret-mode on CPU); ``ref.py`` the pure-jnp oracles used by the
 allclose sweeps in tests/test_kernels.py.
+
+This module stays import-light (no jax at module level) so configs and
+the lint CLI can read :data:`LANE` without initializing a backend.
 """
+
+# The kernel lane width: elements per row of the flatten-once (rows, LANE)
+# layout (8 × 128-lane vregs) and the wire codecs' scale-block size.  This
+# is the single definition site — everything else (kernels, configs,
+# compression blocks) imports it; tools/lint_repro.py enforces that no
+# bare 1024 lane literal exists outside this package.
+LANE = 1024
 
 
 def default_interpret() -> bool:

@@ -22,11 +22,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import default_interpret
+from repro.kernels import LANE, default_interpret
 
 __all__ = ["momentum_update", "LANE", "BLOCK_ROWS"]
 
-LANE = 1024
 BLOCK_ROWS = 128
 
 

@@ -42,7 +42,7 @@ __all__ = ["KernelPlan", "PLAN_BLOCK_ROWS", "LANE", "default_interpret",
            "sign_unpack", "topk_pack", "topk_unpack", "qsgd_pack",
            "qsgd_unpack", "momentum_update_tree", "gossip_mix_tree"]
 
-LANE = mom.LANE  # 1024
+from repro.kernels import LANE  # noqa: E402  (the single lane definition)
 
 # one layout serves every kernel: lcm of the kernels' BLOCK_ROWS
 PLAN_BLOCK_ROWS = int(np.lcm.reduce(

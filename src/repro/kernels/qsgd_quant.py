@@ -29,11 +29,10 @@ from jax.experimental import pallas as pl
 # the bit-width rule is owned by the wire codec (one source of truth for
 # the kernel, the jnp oracle, and the byte accounting)
 from repro.core.wire import qsgd_bits as _bits
-from repro.kernels import default_interpret
+from repro.kernels import LANE, default_interpret
 
 __all__ = ["qsgd_quant_pallas", "qsgd_dequant_pallas", "LANE", "BLOCK_ROWS"]
 
-LANE = 1024
 BLOCK_ROWS = 256
 
 
@@ -69,7 +68,7 @@ def _dequant_kernel(packed_ref, norm_ref, out_ref, *, levels, bits):
     norm = norm_ref[...]
     scale = inv_s * norm
     vals = (u.reshape(br, LANE).astype(jnp.float32) - s) * scale
-    out_ref[...] = jnp.where(norm > 0, vals, 0.0)
+    out_ref[...] = jnp.where(norm > 0, vals, jnp.float32(0.0))
 
 
 @functools.partial(jax.jit, static_argnames=("levels", "interpret"))

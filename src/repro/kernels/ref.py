@@ -13,6 +13,7 @@ from repro.core.wire import qsgd_rows as qsgd_rows_ref
 from repro.core.wire import qsgd_rows_unpack as qsgd_rows_unpack_ref
 from repro.core.wire import topk_rows as topk_rows_ref
 from repro.core.wire import topk_rows_unpack as topk_rows_unpack_ref
+from repro.kernels import LANE
 
 __all__ = ["momentum_update_ref", "sign_pack_ref", "sign_pack_rows_ref",
            "sign_unpack_ref", "gossip_mix_ref", "topk_rows_ref",
@@ -28,14 +29,14 @@ def momentum_update_ref(x, m, g, lr, *, mu, wd=0.0, nesterov=False):
     return x - lr * d, m_new
 
 
-def sign_pack_ref(x, block: int = 1024):
+def sign_pack_ref(x, block: int = LANE):
     """(rows, block) → (packed (rows, block//8) u8, scales (rows,) f32)."""
     rows = x.shape[0]
     packed, scales = jax.vmap(lambda r: _sign_pack(r, block))(x)
     return packed.reshape(rows, block // 8), scales.reshape(rows)
 
 
-def sign_pack_rows_ref(x, counts=None, block: int = 1024):
+def sign_pack_rows_ref(x, counts=None, block: int = LANE):
     """Counts-aware matrix oracle for ``sign_pack_pallas``.
 
     Same padding-masked scale the per-leaf oracle computes — ``counts`` is
@@ -54,7 +55,7 @@ def sign_pack_rows_ref(x, counts=None, block: int = 1024):
     return packed, scales.reshape(rows, 1)
 
 
-def sign_unpack_ref(packed, scales, block: int = 1024):
+def sign_unpack_ref(packed, scales, block: int = LANE):
     rows = packed.shape[0]
     return jax.vmap(
         lambda p, s: _sign_unpack(p.reshape(1, block // 8), s.reshape(1),

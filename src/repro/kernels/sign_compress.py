@@ -31,12 +31,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import default_interpret
+from repro.kernels import LANE, default_interpret
 
 __all__ = ["sign_pack_pallas", "sign_unpack_pallas", "LANE", "PACKED",
            "BLOCK_ROWS"]
 
-LANE = 1024          # elements per scale block (== compression.SIGN_BLOCK)
+# LANE elements per scale block (== compression.SIGN_BLOCK)
 PACKED = LANE // 8   # bytes per packed row
 BLOCK_ROWS = 256
 

@@ -32,12 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels import default_interpret
+from repro.kernels import LANE, default_interpret
 
 __all__ = ["topk_select_pallas", "topk_scatter_pallas", "LANE",
            "BLOCK_ROWS", "MAX_WIDTH"]
 
-LANE = 1024
 BLOCK_ROWS = 128
 MAX_WIDTH = 128      # the select kernel unrolls W rounds; cap the unroll
 
@@ -53,11 +52,12 @@ def _select_kernel(x_ref, cnt_ref, idx_ref, val_ref, *, width, fraction):
         m = jnp.max(a, axis=1, keepdims=True)
         sel = jnp.min(jnp.where(a == m, lanes, LANE), axis=1, keepdims=True)
         hit = lanes == sel
-        val = jnp.sum(jnp.where(hit, x, 0.0), axis=1, keepdims=True)
+        val = jnp.sum(jnp.where(hit, x, jnp.float32(0.0)), axis=1,
+                      keepdims=True)
         active = jnp.int32(j) < k_active
         idx_ref[:, j:j + 1] = jnp.where(active, sel, 0)
-        val_ref[:, j:j + 1] = jnp.where(active, val, 0.0)
-        a = jnp.where(hit, -1.0, a)       # |x| ≥ 0: never re-selected
+        val_ref[:, j:j + 1] = jnp.where(active, val, jnp.float32(0.0))
+        a = jnp.where(hit, jnp.float32(-1.0), a)  # |x| ≥ 0: never re-selected
 
 
 def _scatter_kernel(idx_ref, val_ref, out_ref, *, width):
@@ -68,7 +68,7 @@ def _scatter_kernel(idx_ref, val_ref, out_ref, *, width):
     acc = jnp.zeros((br, LANE), jnp.float32)
     for j in range(width):
         acc = acc + jnp.where(lanes == idx[:, j:j + 1],
-                              vals[:, j:j + 1], 0.0)
+                              vals[:, j:j + 1], jnp.float32(0.0))
     out_ref[...] = acc
 
 

@@ -58,7 +58,8 @@ def compute_loop_trips(mcfg, shape, kind: str, p: int):
     inner = 1
     if kind != "decode":
         if has_attn and s >= 8192:           # AttnCfg.blockwise_threshold
-            inner = max(inner, s // 1024)    # AttnCfg.q_chunk
+            from repro.models.attention import AttnCfg
+            inner = max(inner, s // AttnCfg.q_chunk)
         if has_ssm:
             inner = max(inner, s // mcfg.ssm_chunk)
     trips = [mcfg.n_repeats]

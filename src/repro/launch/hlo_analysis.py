@@ -1,173 +1,25 @@
 """Post-SPMD HLO analysis: collective bytes, roofline terms.
 
-``cost_analysis`` gives per-device FLOPs / bytes-accessed but no collective
-traffic, so we parse the compiled (post-partitioning) HLO text and sum the
-operand sizes of every collective op, converted to effective bytes-on-wire
-per device with the standard ring-algorithm factors.
+The HLO text parser itself lives in :mod:`repro.analysis.hlo_parse` — it is
+shared with the static round-contract checks (``repro.analysis.hlo_check``)
+— and is re-exported here for the roofline/dryrun path.  This module keeps
+the hardware-model side: roofline terms and the training-FLOPs rule.
 """
 from __future__ import annotations
 
-import dataclasses
-import re
-from typing import Dict, List
+from typing import Dict
 
+from repro.analysis.hlo_parse import (  # noqa: F401  (re-exported API)
+    CollectiveCall, CollectiveStats, computation_loop_depths,
+    donated_aliases, parse_collectives)
+from repro.analysis.hlo_parse import (  # noqa: F401  (legacy private names)
+    _COLL_RE, _COMP_DEF_RE, _computation_loop_depths, _DTYPE_BYTES,
+    _group_size, _type_bytes)
 from repro.launch.mesh import HW
 
-__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms",
+__all__ = ["CollectiveCall", "CollectiveStats", "parse_collectives",
+           "computation_loop_depths", "donated_aliases", "roofline_terms",
            "model_flops"]
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_COLL_RE = re.compile(
-    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
-    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
-    r"collective-permute)(?:-start|-done)?\(")
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_BRACE_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
-    return 2
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    counts: Dict[str, int]
-    result_bytes: Dict[str, int]     # per device, per call, summed
-    wire_bytes: Dict[str, float]     # effective ring-algorithm bytes/device
-    lines: List[str]
-
-    @property
-    def total_wire_bytes(self) -> float:
-        return sum(self.wire_bytes.values())
-
-
-# computation definition header; param lists may contain nested parens
-# (tuple-typed while-body params), so only anchor on name + '(' + '... {'
-_COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
-_WHILE_RE = re.compile(r"while\(.*body=%?([\w\.\-]+)")
-_CALL_RE = re.compile(
-    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
-    r"%?([\w\.\-]+)")
-
-
-def _computation_loop_depths(hlo_text: str) -> Dict[str, int]:
-    """while-nesting depth of every computation (ENTRY = 0).
-
-    A collective inside a scan body executes once *per trip*; the caller
-    supplies the known trip counts per depth (our scans: train-round steps,
-    layer repeats) to recover true per-call traffic.
-    """
-    comp_lines: Dict[str, List[str]] = {}
-    entry = None
-    cur = None
-    for line in hlo_text.splitlines():
-        m = _COMP_DEF_RE.match(line.strip())
-        if m and line.rstrip().endswith("{"):
-            cur = m.group(1)
-            comp_lines[cur] = []
-            if line.strip().startswith("ENTRY"):
-                entry = cur
-            continue
-        if cur is not None:
-            if line.strip() == "}":
-                cur = None
-            else:
-                comp_lines[cur].append(line)
-
-    # edges: computation -> (callee, via_while)
-    edges: Dict[str, List] = {}
-    for name, lines in comp_lines.items():
-        edges[name] = []
-        for line in lines:
-            wm = _WHILE_RE.search(line)
-            body = wm.group(1) if wm else None
-            for callee in _CALL_RE.findall(line):
-                if callee in comp_lines:
-                    edges[name].append((callee, callee == body))
-
-    depths = {entry: 0} if entry else {}
-    stack = [entry] if entry else []
-    while stack:
-        c = stack.pop()
-        for callee, via_while in edges.get(c, []):
-            d = depths[c] + (1 if via_while else 0)
-            if callee not in depths or d > depths[callee]:
-                depths[callee] = d
-                stack.append(callee)
-    return depths
-
-
-def parse_collectives(hlo_text: str, loop_trips=()) -> CollectiveStats:
-    """Sum collective traffic; ops at while-depth d are multiplied by
-    prod(loop_trips[:d]) (deeper unknown loops contribute ×1)."""
-    counts: Dict[str, int] = {}
-    rbytes: Dict[str, int] = {}
-    wbytes: Dict[str, float] = {}
-    lines: List[str] = []
-    depths = _computation_loop_depths(hlo_text) if loop_trips else {}
-
-    def multiplier(depth: int) -> int:
-        m = 1
-        for t in list(loop_trips)[:depth]:
-            m *= int(t)
-        return m
-
-    cur_comp = None
-    for line in hlo_text.splitlines():
-        dm = _COMP_DEF_RE.match(line.strip())
-        if dm and line.rstrip().endswith("{"):
-            cur_comp = dm.group(1)
-            continue
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        op = m.group("op")
-        # async pairs: count -start only (the -done carries the same tensor)
-        if "-done(" in line:
-            continue
-        size = _type_bytes(m.group("type"))
-        n = _group_size(line)
-        mult = multiplier(depths.get(cur_comp, 0)) if loop_trips else 1
-        if op == "all-reduce":
-            wire = 2.0 * (n - 1) / n * size
-        elif op == "all-gather":
-            wire = (n - 1) / n * size          # size = gathered result
-        elif op == "reduce-scatter":
-            wire = (n - 1) * size              # size = scattered result
-        elif op == "all-to-all":
-            wire = (n - 1) / n * size
-        else:                                   # collective-permute
-            wire = float(size)
-        counts[op] = counts.get(op, 0) + mult
-        rbytes[op] = rbytes.get(op, 0) + size * mult
-        wbytes[op] = wbytes.get(op, 0.0) + wire * mult
-        lines.append(f"x{mult} " + line.strip()[:180])
-    return CollectiveStats(counts, rbytes, wbytes, lines)
 
 
 def roofline_terms(flops_per_device: float, bytes_per_device: float,

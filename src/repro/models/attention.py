@@ -36,7 +36,7 @@ class AttnCfg:
     head_dim: int
     qkv_bias: bool = False          # qwen2
     window: Optional[int] = None    # sliding-window size (None = full causal)
-    q_chunk: int = 1024             # blockwise query-chunk length
+    q_chunk: int = 1024      # blockwise query-chunk length  # lint: allow
     blockwise_threshold: int = 8192  # use blockwise when seq >= this
     rope_theta: float = 10000.0
     # MLA dims (minicpm3 / deepseek-v2 style); used only by the mla_* path
@@ -74,7 +74,11 @@ def _scores_to_out(q, k, v, mask, scale):
     """q: (b,sq,kv,g,hd); k/v: (b,sk,kv,hd); mask: (b|1,1|kv?,sq,sk) bool."""
     logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                         preferred_element_type=jnp.float32) * scale
-    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    # cast the fill explicitly: a bare python float is a weak f64 scalar
+    # under jax_enable_x64 and would promote the whole softmax to f64
+    # (repro.analysis.jaxpr_check's no-f64 contract)
+    logits = jnp.where(mask[:, None, None, :, :], logits,
+                       jnp.float32(NEG_INF))
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

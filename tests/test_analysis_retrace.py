@@ -1,0 +1,60 @@
+"""Retrace guard: one compilation across a schedule sweep + mid-cycle
+resume, and the counter catches a retracing round driver."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.retrace import CompileCounter, check_schedule_no_retrace
+
+
+def test_schedule_sweep_compiles_once():
+    assert check_schedule_no_retrace() == []
+
+
+def test_counter_counts_distinct_compiles():
+    def fn_add_one(x):
+        return x + 1
+
+    def fn_times_two(x):
+        return x * 2
+
+    x = jnp.zeros((4,), jnp.float32)   # pre-built: its own compile
+    with CompileCounter() as cc:
+        jax.jit(fn_add_one)(x)
+        jax.jit(fn_times_two)(x)
+        jax.jit(fn_add_one)(x)         # cache hit: no new compile
+    assert cc.count("fn_add_one") == 1
+    assert cc.count("fn_times_two") == 1
+
+
+def test_catches_retracing_round_driver():
+    """The anti-pattern the guard exists for: baking the python-int round
+    index into the trace compiles once per round."""
+    from repro.core import PDSGDM, PDSGDMConfig
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import make_schedule
+    from repro.analysis.jaxpr_check import toy_grads_fn, toy_params
+
+    K, p = 8, 2
+    sched = make_schedule("one_peer_exp", (K,))
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=p), DenseComm(sched))
+    params = toy_params(K)
+    state = opt.init(params)
+    batches = jnp.zeros((p, K, 4), jnp.float32)
+
+    def make_round():
+        def bad_round(params, state, batches):
+            # static round index → a fresh jit cache entry every round
+            r = int(state["step"]) // p
+
+            @jax.jit
+            def stepped(params, state, batches):
+                st = dict(state)
+                st["step"] = jnp.asarray(r * p, jnp.int32)
+                return opt.round(st, params, toy_grads_fn, batches)
+
+            return stepped(params, state, batches)
+
+        return bad_round, params, state, batches, sched.period
+
+    out = check_schedule_no_retrace(make_round)
+    assert out and "expected exactly 1" in out[0]

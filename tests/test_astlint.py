@@ -1,0 +1,112 @@
+"""AST lint rules: each fires on its seeded snippet, stays quiet on the
+compliant variant, honors the pragma — and the repo itself lints clean."""
+import os
+
+from repro.analysis.astlint import lint_paths, lint_source
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _rules(src, rel):
+    return [e.rule for e in lint_source(src, rel)]
+
+
+# ------------------------------------------------------------------ RPR001
+def test_host_sync_in_core():
+    src = "def f(x):\n    return x.block_until_ready()\n"
+    assert _rules(src, "src/repro/core/pdsgdm.py") == ["RPR001"]
+    # outside core/ it's fine
+    assert _rules(src, "src/repro/launch/train.py") == []
+    # topology.py is host-side by design
+    assert _rules(src, "src/repro/core/topology.py") == []
+
+
+def test_np_asarray_in_core():
+    src = "import numpy as np\ndef f(x):\n    return np.asarray(x)\n"
+    assert _rules(src, "src/repro/core/gossip.py") == ["RPR001"]
+    assert _rules(src, "src/repro/core/topology.py") == []
+
+
+# ------------------------------------------------------------------ RPR002
+def test_compressor_isinstance_dispatch():
+    src = ("def f(c):\n"
+           "    if isinstance(c, SignCompressor):\n"
+           "        return 1\n")
+    assert _rules(src, "src/repro/core/cpdsgdm.py") == ["RPR002"]
+    # the one allowed home
+    assert _rules(src, "src/repro/core/wire.py") == []
+    # tuple form is caught too
+    tup = "ok = isinstance(c, (TopKCompressor, int))\n"
+    assert _rules(tup, "src/repro/train/trainer.py") == ["RPR002"]
+    # non-compressor isinstance is fine
+    assert _rules("ok = isinstance(c, int)\n",
+                  "src/repro/core/cpdsgdm.py") == []
+
+
+# ------------------------------------------------------------------ RPR003
+def test_lane_literal():
+    src = "x = y.reshape(-1, 1024)\n"
+    assert _rules(src, "src/repro/core/compression.py") == ["RPR003"]
+    # kernels/ owns the lane
+    assert _rules(src, "src/repro/kernels/ops.py") == []
+    # a documented non-lane 1024 carries the pragma
+    ok = "n_patches = 1024  # ViT patches  # lint: allow\n"
+    assert _rules(ok, "src/repro/configs/base.py") == []
+    # other ints don't fire
+    assert _rules("x = 1023\n", "src/repro/core/compression.py") == []
+
+
+# ------------------------------------------------------------------ RPR004
+def test_config_at_import():
+    src = "import jax\njax.config.update('jax_enable_x64', True)\n"
+    assert _rules(src, "src/repro/launch/train.py") == ["RPR004"]
+    # repro/__init__.py is the one allowed site
+    assert _rules(src, "src/repro/__init__.py") == []
+    # inside a function it's runtime, not import-time
+    fn = ("import jax\n"
+          "def enable():\n"
+          "    jax.config.update('jax_enable_x64', True)\n")
+    assert _rules(fn, "src/repro/launch/train.py") == []
+    # unrelated .update() calls don't fire
+    assert _rules("self._config.update(d)\n",
+                  "src/repro/launch/train.py") == []
+
+
+def test_pragma_suppresses_any_rule():
+    src = "def f(x):\n    return x.block_until_ready()  # lint: allow\n"
+    assert _rules(src, "src/repro/core/pdsgdm.py") == []
+
+
+def test_syntax_error_reported():
+    out = lint_source("def f(:\n", "src/broken.py")
+    assert out and out[0].rule == "RPR000"
+
+
+# ------------------------------------------------------------------ the repo
+def test_repo_lints_clean():
+    """src/ + tools/ + benchmarks/ carry zero violations at HEAD — the
+    blocking CI gate, asserted here so `pytest` alone also catches it."""
+    roots = [os.path.join(REPO, d) for d in ("src", "tools", "benchmarks")]
+    errors = lint_paths(roots, base=REPO)
+    assert errors == [], "\n".join(str(e) for e in errors)
+
+
+def _load_cli():
+    import importlib.util
+    path = os.path.join(REPO, "tools", "lint_repro.py")
+    spec = importlib.util.spec_from_file_location("lint_repro_cli", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_cli_exit_codes(tmp_path):
+    main = _load_cli().main
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean)]) == 0
+    dirty = tmp_path / "repro" / "core" / "dirty.py"
+    dirty.parent.mkdir(parents=True)
+    dirty.write_text("def f(x):\n    return x.block_until_ready()\n")
+    assert main([str(dirty)]) == 1
+    assert main([str(tmp_path / "missing_dir")]) == 2

@@ -1,0 +1,98 @@
+"""Exit-code contract of tools/bench_compare.py: 0 green, 1 regression or
+missing gated row, 2 bad spec / empty gate; --spec appends custom gates."""
+import importlib.util
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _main():
+    path = os.path.join(REPO, "tools", "bench_compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare_cli", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.main
+
+
+def _doc(rows):
+    return {"rows": [{"name": n, "derived": d} for n, d in rows]}
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(_doc(rows)))
+    return str(p)
+
+
+BASE_ROWS = [
+    ("kernel_path/speedup_p4", {"fused_vs_perstep_parity": 1.0}),
+    ("wire_codecs/sign", {"x_bf16": 16.0}),
+]
+
+
+def test_green(tmp_path):
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", BASE_ROWS)
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 0
+
+
+def test_ratio_below_floor(tmp_path):
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", [
+        ("kernel_path/speedup_p4", {"fused_vs_perstep_parity": 0.3}),
+        ("wire_codecs/sign", {"x_bf16": 16.0}),
+    ])  # 0.3 < 0.5 × baseline
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_byte_ratio_drift(tmp_path):
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", [
+        ("kernel_path/speedup_p4", {"fused_vs_perstep_parity": 1.0}),
+        ("wire_codecs/sign", {"x_bf16": 15.0}),
+    ])  # |Δ|/baseline = 6.25% > 2%
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_missing_gated_row_fails(tmp_path):
+    """A silently dropped benchmark must not read as green."""
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", BASE_ROWS[:1])  # sign row gone
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_fresh_only_rows_ignored(tmp_path):
+    """New benchmarks land before their baseline — extra fresh rows pass."""
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", BASE_ROWS + [
+        ("wire_codecs/newcodec", {"x_bf16": 4.0})])
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 0
+
+
+def test_bad_spec(tmp_path):
+    base = _write(tmp_path, "base.json", BASE_ROWS)
+    fresh = _write(tmp_path, "fresh.json", BASE_ROWS)
+    assert _main()(["--fresh", fresh, "--baseline", base,
+                    "--spec", "not-a-spec"]) == 2
+
+
+def test_empty_gate_refused(tmp_path):
+    """Zero matched rows is a refusal (2), not a pass."""
+    rows = [("other/row", {"some_key": 1.0})]
+    base = _write(tmp_path, "base.json", rows)
+    fresh = _write(tmp_path, "fresh.json", rows)
+    assert _main()(["--fresh", fresh, "--baseline", base]) == 2
+
+
+def test_spec_override_gates_custom_row(tmp_path):
+    rows_ok = BASE_ROWS + [("custom/row", {"ratio": 2.0})]
+    base = _write(tmp_path, "base.json", rows_ok)
+    fresh_bad = _write(tmp_path, "fresh.json", BASE_ROWS + [
+        ("custom/row", {"ratio": 0.5})])
+    spec = "custom/*:ratio:min_frac=0.9"
+    assert _main()(["--fresh", fresh_bad, "--baseline", base,
+                    "--spec", spec]) == 1
+    fresh_ok = _write(tmp_path, "fresh2.json", rows_ok)
+    assert _main()(["--fresh", fresh_ok, "--baseline", base,
+                    "--spec", spec]) == 0

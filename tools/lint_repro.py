@@ -1,0 +1,47 @@
+"""Repo lint CLI — the AST rules of ``repro.analysis.astlint``.
+
+    python tools/lint_repro.py            # lints src/ tools/ benchmarks/
+    python tools/lint_repro.py src tests  # explicit roots
+
+Exit 0 = clean, 1 = violations, 2 = bad invocation.  CI runs this as part
+of the blocking ``static-analysis`` job; the rules themselves (and the
+``# lint: allow`` pragma) are documented in the astlint module and in
+ARCHITECTURE.md §"Static contracts".
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.astlint import lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="repo-specific AST lint")
+    ap.add_argument("roots", nargs="*", default=["src", "tools", "benchmarks"],
+                    help="files or directories to lint (repo-relative)")
+    args = ap.parse_args(argv)
+
+    roots = [r if os.path.isabs(r) else os.path.join(_REPO, r)
+             for r in args.roots]
+    missing = [r for r in roots if not os.path.exists(r)]
+    if missing:
+        print(f"lint_repro: no such path(s): {missing}", file=sys.stderr)
+        return 2
+
+    errors = lint_paths(roots, base=_REPO)
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\nlint_repro: {len(errors)} violation(s)", file=sys.stderr)
+        return 1
+    print("lint_repro: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
