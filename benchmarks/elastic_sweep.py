@@ -1,0 +1,152 @@
+"""Elastic-membership sweep: survivor loss and wire bytes vs. churn rate.
+
+The chaos harness (``repro.testing.chaos``) drives the fused round engine
+through seeded kill / revive / straggle scripts at increasing churn rates
+on the K = 8 ring, for the four dense optimizer families (PD-SGDM,
+CPD-SGDM + sign wire, MT-DSGDm, QG-DSGDm) on the heterogeneous
+per-worker quadratic (deterministic: every row is exactly reproducible,
+so the claim rows gate at tight tolerances).  Rows carry
+
+* ``final_loss`` — loss of the live-worker-averaged model after the run,
+* ``loss_ratio`` — final / initial loss (< 1 ⇔ survivors still train),
+* ``max_consensus`` — peak RMS disagreement among live workers,
+* ``mb_total`` — fleet wire MB actually accounted over the run,
+* ``bytes_saved_frac`` — 1 − accounted/full-fleet bytes (dead edges ship
+  zero, so churn must save exactly the masked edge fraction).
+
+Claim rows, gated by ``tools/bench_compare.py``:
+
+* ``elastic/claim_survivors`` — ``survivors_bounded`` = 1 iff *every*
+  (rate, optimizer) cell keeps its averaged-model loss within 2× and its
+  peak consensus distance within 5× of the same optimizer's churn-free
+  run; the committed baseline pins 1 (``min_frac`` 1.0 — divergence
+  under churn fails the gate).  Strict descent is *not* required at the
+  highest rate: with most edges masked the fleet gossips rarely and
+  workers drift toward their local optima, which raises the averaged
+  model's global loss — bounded, not monotone, is the contract.
+* ``elastic/claim_bytes`` — ``bytes_saved_frac`` of PD-SGDM at the
+  highest churn rate: pure accounting arithmetic, identical on any host
+  (``rel_tol`` 0.02).
+
+Standalone runs write ``benchmarks/BENCH_elastic.json``; under
+``python -m benchmarks.run elastic`` the rows land in the main
+``BENCH_<tag>.json``.  ``ELASTIC_ROUNDS`` trims the horizon for smoke
+runs (default 16 communication rounds per cell).
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import make_compressor, make_optimizer
+from repro.core.gossip import DenseComm
+from repro.core.topology import full_membership, ring
+from repro.testing import chaos_script, membership_for, run_dense_chaos
+
+K, D, P = 8, 64, 2
+ROUNDS = int(os.environ.get("ELASTIC_ROUNDS", "16"))
+SEED = 7
+RATES = [0.0, 0.1, 0.25]
+OPTIMIZERS = [
+    ("pd_sgdm", {}),
+    ("cpd_sgdm", {"gamma": 0.5, "compressor": make_compressor("sign")}),
+    ("mt_dsgdm", {}),
+    ("qg_dsgdm", {}),
+]
+
+
+def _quadratic():
+    b = 2.0 * jax.random.normal(jax.random.PRNGKey(3), (K, D))
+
+    def grads_fn(params, batch):
+        g = {"w": params["w"] - b}
+        return 0.5 * jnp.sum((params["w"] - b) ** 2, axis=-1).mean(), g
+
+    return grads_fn
+
+
+def _params0():
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (1, D))
+    return {"w": jnp.broadcast_to(x0, (K, D))}
+
+
+def _membership(rate):
+    if rate == 0.0:
+        return [], full_membership(K)
+    events = chaos_script(K, ROUNDS, seed=SEED, kill_prob=rate,
+                          straggle_prob=rate)
+    return events, membership_for(K, ROUNDS, events)
+
+
+def main():
+    grads_fn = _quadratic()
+    results = {}
+    for rate in RATES:
+        events, ms = _membership(rate)
+        for name, kw in OPTIMIZERS:
+            opt = make_optimizer(name, DenseComm(ring(K), membership=ms),
+                                 eta=0.05, mu=0.9, p=P, **kw)
+            t0 = time.time()
+            run = run_dense_chaos(opt, events, _params0(), grads_fn,
+                                  ROUNDS)
+            dt = time.time() - t0
+            total = float(run.accounted_bytes.sum())
+            # full-fleet bytes for THIS optimizer at rate 0 (cell order
+            # guarantees the rate-0 row ran first)
+            base = results.get((0.0, name), {}).get("mb_total",
+                                                    total / 1e6) * 1e6
+            saved = 1.0 - total / base if base else 0.0
+            ratio = float(run.avg_loss[-1] / run.avg_loss[0])
+            results[(rate, name)] = {
+                "final_loss": float(run.avg_loss[-1]),
+                "loss_ratio": ratio,
+                "max_consensus": float(run.consensus.max()),
+                "mb_total": total / 1e6,
+                "bytes_saved_frac": saved,
+            }
+            csv_row(
+                f"elastic/{name}_c{rate:g}", dt / ROUNDS * 1e6,
+                f"final_loss={run.avg_loss[-1]:.4f};loss_ratio={ratio:.4f};"
+                f"max_consensus={run.consensus.max():.4f};"
+                f"mb_total={total / 1e6:.4f};bytes_saved_frac={saved:.4f}")
+
+    bounded = int(all(
+        v["final_loss"] <= 2.0 * results[(0.0, name)]["final_loss"]
+        and v["max_consensus"] <= 5.0 * results[(0.0, name)]["max_consensus"]
+        for (rate, name), v in results.items() if rate > 0.0))
+    csv_row("elastic/claim_survivors", 0.0,
+            f"survivors_bounded={bounded};cells={len(results)}")
+    top_rate = max(RATES)
+    csv_row("elastic/claim_bytes", 0.0,
+            f"bytes_saved_frac="
+            f"{results[(top_rate, 'pd_sgdm')]['bytes_saved_frac']:.4f};"
+            f"rate={top_rate:g}")
+    return results
+
+
+def _write_json(results) -> str:
+    from benchmarks.common import collected_rows
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_elastic.json")
+    rows = [r for r in collected_rows() if r["name"].startswith("elastic/")]
+    doc = {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "sections": ["elastic"],
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "rounds": ROUNDS,
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    res = main()
+    print(f"bench_json,0.0,path={os.path.relpath(_write_json(res))}")

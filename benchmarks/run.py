@@ -19,6 +19,9 @@ Sections
   noniid    heterogeneity sweep: Dirichlet-α × p × optimizer, judged on
             the global loss of the averaged model (MT-DSGDm vs PD-SGDM
             vs QG vs D-PSGD; standalone writes BENCH_noniid.json)
+  elastic   churn sweep: survivor loss / consensus / wire bytes vs. the
+            kill+straggle rate under seeded chaos scripts (standalone
+            writes BENCH_elastic.json)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -35,7 +38,9 @@ scraping stdout.  Schema (version 1)::
     {
       "schema": 1,
       "created_unix": <int>,          # stamp of the run
-      "sections": ["fig1", ...],      # what was executed
+      "sections": ["fig1", ...],      # what was executed — any subset of
+                                      # SECTIONS below, kernel_path /
+                                      # noniid / elastic included
       "jax": "0.4.37",                # toolchain provenance
       "backend": "cpu",               # jax.default_backend()
       "wall_s": <float>,              # total wall clock
@@ -46,9 +51,20 @@ scraping stdout.  Schema (version 1)::
         {"name": "kernel_path/speedup_p4",   # flatten-once layout win
          "us_per_call": 0.0,
          "derived": {"fused_vs_perstep_parity": 1.5, "fused_vs_jnp": 1.2}},
+        {"name": "noniid/claim_alpha0.1",    # heterogeneity claim row
+         "us_per_call": 0.0,
+         "derived": {"mt_minus_pd_best": -0.01, "mt_le_pd": 1.0}},
+        {"name": "elastic/claim_survivors",  # chaos-sweep claim row
+         "us_per_call": 0.0,
+         "derived": {"survivors_bounded": 1.0, "cells": 12.0}},
         ...
       ]
     }
+
+Standalone section runs also write their own committed baselines
+(``BENCH_kernel_path.json``, ``BENCH_wire_codecs.json``,
+``BENCH_noniid.json``, ``BENCH_elastic.json``) which
+``tools/bench_compare.py`` gates fresh runs against.
 
 ``derived`` values parse to floats where possible; free-form fragments are
 kept under ``"note"``.  Rows are append-only within a run; compare runs by
@@ -62,7 +78,8 @@ import sys
 import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
-            "kernels", "kernel_path", "wire", "noniid", "roofline"]
+            "kernels", "kernel_path", "wire", "noniid", "elastic",
+            "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -121,6 +138,9 @@ def main() -> None:
     if "noniid" in want:
         from benchmarks import noniid_sweep
         noniid_sweep.main()
+    if "elastic" in want:
+        from benchmarks import elastic_sweep
+        elastic_sweep.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 __all__ = ["ContractViolation", "require", "iter_eqns", "collective_eqns",
            "check_no_host_callbacks", "check_no_f64", "check_round_scan",
            "check_gossip_boundary", "check_schedule_switch",
-           "check_kernel_flatten_once", "trace_round", "check_round_contract"]
+           "check_kernel_flatten_once", "check_membership_mask",
+           "traced_mixing_matrix", "trace_round", "check_round_contract"]
 
 # primitives that move data across workers inside shard_map.  (GSPMD-domain
 # collectives never appear in a jaxpr — XLA inserts them at partitioning —
@@ -181,6 +182,56 @@ def check_gossip_boundary(jaxpr, *, expected: Optional[int] = None,
     return out
 
 
+def traced_mixing_matrix(comm, r: int):
+    """The (K, K) matrix the dense round-``r`` gossip *actually applies*,
+    extracted by pushing identity probe leaves through ``comm.mix`` —
+    reading the executed computation, not the backend's weight tables, so
+    a table/trace mismatch is visible."""
+    import numpy as np
+    K = comm.topology_at(r).n_workers
+    probe = {"e": jnp.eye(K, dtype=jnp.float32)}
+    return np.asarray(jax.jit(lambda t: comm.mix(t, r=r))(probe)["e"])
+
+
+def check_membership_mask(comm, rounds=None) -> List[str]:
+    """Elastic-membership mask semantics on the *traced* dense mixing.
+
+    For every round in the membership cycle (or ``rounds``): the applied
+    matrix must be row-stochastic, a masked-out worker must hold exactly
+    the identity row e_k (its exchange skipped, self-weight 1), and no
+    active worker may read from a masked-out peer (zero dead columns) —
+    a round gossiping with a dead worker is a contract violation.
+    """
+    import numpy as np
+    ms = comm.membership
+    if ms is None:
+        return []
+    out = []
+    for r in (range(comm.round_cycle) if rounds is None else rounds):
+        W = traced_mixing_matrix(comm, r)
+        act = np.asarray(comm.active_at(r), dtype=bool)
+        K = W.shape[0]
+        bad_rows = np.flatnonzero(np.abs(W.sum(axis=1) - 1.0) > 1e-5)
+        for k in bad_rows:
+            out.append(f"round {r}: row {k} of the applied mixing matrix "
+                       f"sums to {W[k].sum():.6f}, not 1 (renormalization "
+                       "over live peers broken)")
+        for k in np.flatnonzero(~act):
+            if np.abs(W[k] - np.eye(K)[k]).max() > 1e-6:
+                out.append(f"round {r}: masked-out worker {k} still "
+                           "gossips (row != e_k)")
+        dead_cols = W[np.ix_(act, ~act)]
+        if dead_cols.size and np.abs(dead_cols).max() > 1e-6:
+            i, j = np.unravel_index(np.abs(dead_cols).argmax(),
+                                    dead_cols.shape)
+            src = np.flatnonzero(~act)[j]
+            dst = np.flatnonzero(act)[i]
+            out.append(f"round {r}: active worker {dst} reads weight "
+                       f"{dead_cols[i, j]:.6f} from masked-out worker "
+                       f"{src} (dead column must be zero)")
+    return out
+
+
 def check_dense_no_collectives(jaxpr) -> List[str]:
     """The DenseComm simulation backend must trace to zero collectives —
     its gossip is a W-matmul over the stacked worker dim."""
@@ -303,6 +354,8 @@ def check_round_contract(opt, params, *, kernel: bool = False,
         from repro.kernels import ops as kops
         plan = kops.KernelPlan.for_tree(params, worker_dim=True)
         out += check_kernel_flatten_once(jx, plan, p)
+    if dense and getattr(opt.comm, "membership", None) is not None:
+        out += check_membership_mask(opt.comm)
     # f64 needs its own trace under the x64 config
     out += check_no_f64(trace_round(opt, params, p, kernel=kernel, x64=True))
     return out

@@ -86,6 +86,20 @@ def phase_dense(full: bool) -> list:
                              p=2)
         v = jc.check_round_contract(opt, params)
         _report(f"dense/pd_sgdm/{sched_name}", v, failures)
+
+    # elastic membership: the masked matrices must honour the liveness
+    # contract every round (check_membership_mask runs inside the
+    # aggregate when the backend carries a membership schedule)
+    from repro.testing import chaos_script, membership_for
+    ms = membership_for(K, 6, chaos_script(K, 6, seed=7))
+    for name, comp in ([("pd_sgdm", None)] if not full else
+                       [("pd_sgdm", None), ("cpd_sgdm", "sign"),
+                        ("mt_dsgdm", None)]):
+        compressor = make_compressor(comp) if comp else None
+        opt = make_optimizer(name, DenseComm(ring(K), membership=ms),
+                             eta=0.05, mu=0.9, p=3, compressor=compressor)
+        v = jc.check_round_contract(opt, params)
+        _report(f"dense/{name}/{comp or 'none'}/membership", v, failures)
     return failures
 
 

@@ -1,0 +1,202 @@
+"""Elastic K→K' checkpoint re-partitioning and revival warm-starts.
+
+The checkpoint contract (``repro.checkpoint.checkpoint``) stores
+worker-stacked trees for a fixed fleet size K.  This module extends it to
+elastic membership:
+
+* ``restore_elastic`` — restore a round-boundary checkpoint written by a
+  K-worker fleet into a K'-worker template.  Survivors (slots < min(K, K'))
+  keep their own shard bit-for-bit; joiners warm-start params *and the
+  full optimizer state* from a live donor's shard (``donor_map``).  With
+  K' == K this is exactly ``checkpoint.restore`` — resume stays
+  bit-identical for surviving workers at the round boundary.
+
+* ``warm_start_worker`` — in-fleet revival: copy one live donor's slot
+  over a rejoining worker's slot in worker-stacked params/state (the
+  chaos harness applies this *before* the revival round runs).
+
+CPD-SGDM's ``xhat_nbrs`` copies need care in both operations: a copy held
+by worker k for its (ax, sh) neighbour must equal that *neighbour's* x̂,
+not the donor's copy of the donor's neighbour.  Because the commit
+protocol keeps every stored copy exactly equal to its owner's x̂ at round
+boundaries, the copies are simply re-derived from the re-partitioned x̂ —
+no neighbour state is ever guessed.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["donor_map", "pick_donor", "repartition", "restore_elastic",
+           "warm_start_worker"]
+
+tmap = jax.tree_util.tree_map
+
+_NBR_KEY_RE = re.compile(r"ax(\d+)_sh([+-]\d+)")
+
+
+def donor_map(old_k: int, new_k: int) -> np.ndarray:
+    """(new_k,) source slot per new slot: identity for survivors, wrapped
+    neighbour shards for joiners (slot K+j warm-starts from worker j)."""
+    return np.arange(new_k) % old_k
+
+
+def pick_donor(live, joiner: int) -> int:
+    """Nearest live worker on the ring order — the donor a rejoining
+    worker warm-starts from."""
+    live = np.asarray(live, dtype=bool)
+    K = live.shape[0]
+    for d in range(1, K):
+        for cand in ((joiner + d) % K, (joiner - d) % K):
+            if live[cand]:
+                return int(cand)
+    raise ValueError("no live donor in the fleet")
+
+
+def _reindex(tree, k_from: int, donors: np.ndarray):
+    """Re-index every worker-stacked leaf (leading dim ``k_from``) by
+    ``donors``; scalars and non-worker leaves pass through untouched."""
+    idx = jnp.asarray(donors)
+
+    def f(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == k_from:
+            return jnp.take(jnp.asarray(leaf), idx, axis=0)
+        return leaf
+
+    return tmap(f, tree)
+
+
+def repartition(tree, old_k: int, new_k: int,
+                donors: Optional[np.ndarray] = None):
+    """Re-partition a worker-stacked tree from ``old_k`` to ``new_k``
+    slots (``donor_map`` by default).  ``xhat_nbrs`` sub-dicts, if present
+    at the top level, must be fixed up by the caller (``restore_elastic``
+    re-derives them from x̂)."""
+    if donors is None:
+        donors = donor_map(old_k, new_k)
+    return _reindex(tree, old_k, donors)
+
+
+def _derive_nbrs(xhat, keys, new_k: int) -> Dict[str, Any]:
+    """Rebuild the per-shift neighbour copies from the canonical x̂:
+    copy[(ax, sh)][w] = x̂[(w + sh) % K'] — exact, because the commit
+    protocol keeps every stored copy equal to its owner's x̂."""
+    nbrs = {}
+    for key in keys:
+        m = _NBR_KEY_RE.fullmatch(key)
+        if m is None:
+            raise ValueError(f"unrecognized xhat_nbrs key {key!r}")
+        sh = int(m.group(2))
+        recv = jnp.asarray((np.arange(new_k) + sh) % new_k)
+        nbrs[key] = tmap(lambda h: jnp.take(h, recv, axis=0), xhat)
+    return nbrs
+
+
+def _resize_worker_dim(tree, k_from: int, k_to: int):
+    """Shape-only template resize of the worker dim (structs, not data)."""
+    def f(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == k_from:
+            return jax.ShapeDtypeStruct((k_to,) + tuple(leaf.shape[1:]),
+                                        leaf.dtype)
+        return jax.ShapeDtypeStruct(tuple(getattr(leaf, "shape", ())),
+                                    leaf.dtype)
+    return tmap(f, tree)
+
+
+def _peek_worker_count(ckpt_dir: str, step: int) -> int:
+    """Leading dim of the checkpoint's first params leaf = the fleet size
+    that wrote it."""
+    import os
+    data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}", "params.npz"))
+    return int(data["leaf_0"].shape[0])
+
+
+def restore_elastic(ckpt_dir: str, step: int, *, params_template,
+                    state_template, comm=None) -> Dict[str, Any]:
+    """Restore ``{"params", "opt_state"}`` from a checkpoint written by an
+    old fleet into (possibly differently sized) new-fleet templates.
+
+    Same size → exact ``checkpoint.restore`` (bit-identical resume).
+    K→K': every worker-stacked leaf is re-indexed through ``donor_map``
+    (grow: joiners clone a live neighbour's params + full optimizer state;
+    shrink: the surviving prefix keeps its own shards), the step counter
+    passes through unchanged (round/schedule/membership phase all derive
+    from it), and CPD's ``xhat_nbrs`` are re-derived from the
+    re-partitioned x̂ under the new fleet's shift set.
+
+    ``comm`` (the new fleet's backend) is required only when the state
+    carries ``xhat_nbrs`` and the size changed: the *old* fleet's copy
+    keys are rebuilt from the same topology family at the old size.
+    """
+    from repro.checkpoint import checkpoint as ckpt
+
+    new_k = jax.tree_util.tree_leaves(params_template)[0].shape[0]
+    old_k = _peek_worker_count(ckpt_dir, step)
+    if old_k == new_k:
+        return ckpt.restore(ckpt_dir, step, {
+            "params": params_template, "opt_state": state_template})
+
+    donors = donor_map(old_k, new_k)
+    old_params_t = _resize_worker_dim(params_template, new_k, old_k)
+    old_state_t = {}
+    for name, sub in state_template.items():
+        if name == "xhat_nbrs":
+            if comm is None:
+                raise ValueError(
+                    "restore_elastic: re-partitioning xhat_nbrs needs the "
+                    "new fleet's comm backend (comm=...)")
+            from repro.core.topology import make_topology
+            top = comm.topology
+            if len(top.axis_sizes) != 1:
+                raise ValueError(
+                    "elastic re-partitioning needs a single worker axis")
+            old_top = make_topology(top.name, (old_k,))
+            proto = next(iter(sub.values()))
+            old_state_t[name] = {
+                f"ax{ax}_sh{sh:+d}": _resize_worker_dim(proto, new_k, old_k)
+                for (ax, sh, _w) in old_top.shifts if sh != 0}
+        else:
+            old_state_t[name] = _resize_worker_dim(sub, new_k, old_k)
+
+    restored = ckpt.restore(ckpt_dir, step, {
+        "params": old_params_t, "opt_state": old_state_t})
+    params = _reindex(restored["params"], old_k, donors)
+    state = {}
+    for name, sub in restored["opt_state"].items():
+        if name == "xhat_nbrs":
+            continue               # re-derived below, from the new x̂
+        state[name] = _reindex(sub, old_k, donors)
+    if "xhat_nbrs" in state_template:
+        state["xhat_nbrs"] = _derive_nbrs(
+            state["xhat"], sorted(state_template["xhat_nbrs"]), new_k)
+    return {"params": params, "opt_state": state}
+
+
+def warm_start_worker(params, state, *, joiner: int, donor: int):
+    """Clone ``donor``'s slot over ``joiner``'s in worker-stacked trees —
+    params and the complete optimizer state (momentum, x̂, tracking
+    correction, QG buffers).  The chaos harness applies this at a revival
+    round *before* the round runs, so the rejoined worker's first exchange
+    already carries a live model.  ``xhat_nbrs``, if present, is re-derived
+    from the patched x̂ (copies ≡ owner x̂ at round boundaries)."""
+    K = jax.tree_util.tree_leaves(params)[0].shape[0]
+
+    def cp(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == K:
+            return leaf.at[joiner].set(leaf[donor])
+        return leaf
+
+    new_params = tmap(cp, params)
+    new_state = {}
+    for name, sub in state.items():
+        if name == "xhat_nbrs":
+            continue
+        new_state[name] = tmap(cp, sub)
+    if "xhat_nbrs" in state:
+        new_state["xhat_nbrs"] = _derive_nbrs(
+            new_state["xhat"], sorted(state["xhat_nbrs"]), K)
+    return new_params, new_state

@@ -15,8 +15,10 @@ from repro.core.compression import (Compressor, IdentityCompressor,
 from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
 from repro.core.gossip import CommBackend, DenseComm, ShardedComm
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
-from repro.core.topology import (Topology, TopologySchedule, make_schedule,
-                                 make_topology, spectral_gap)
+from repro.core.topology import (MembershipSchedule, Topology,
+                                 TopologySchedule, full_membership,
+                                 make_schedule, make_topology,
+                                 membership_from_events, spectral_gap)
 from repro.core.tracking import (MTDSGDMConfig, MTDSGDm, QGDSGDMConfig,
                                  QGDSGDm)
 from repro.core.wire import WireCodec, make_codec
@@ -25,6 +27,7 @@ __all__ = [
     "topology", "schedules", "wire",
     "Topology", "TopologySchedule", "make_topology", "make_schedule",
     "spectral_gap",
+    "MembershipSchedule", "full_membership", "membership_from_events",
     "Compressor", "IdentityCompressor", "SignCompressor", "TopKCompressor",
     "RandKCompressor", "QSGDCompressor", "make_compressor", "contraction_ratio",
     "WireCodec", "make_codec",

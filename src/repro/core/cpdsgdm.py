@@ -44,8 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import partial
+
 from repro.core.compression import Compressor, SignCompressor
-from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.gossip import (CommBackend, DenseComm, ShardedComm,
+                               worker_mask_like)
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.wire import make_codec, wire_key
 
@@ -83,6 +86,65 @@ class CPDSGDM(PDSGDM):
                 "xhat_nbrs error-compensation copies track a fixed neighbour "
                 "set (Alg. 2 line 9).  Time-varying schedules run on the "
                 "dense backend, or use PD-SGDM on the sharded one.")
+        if (isinstance(comm, ShardedComm) and comm.membership is not None
+                and comm.topology.perms):
+            raise ValueError(
+                "CPD-SGDM sharded elastic membership needs a "
+                "shift-structured topology: perm graphs key no per-shift "
+                "xhat_nbrs copies to commit-gate.")
+        # Elastic membership: precompute the per-round commit masks —
+        # worker s updates its x̂ (and ships q) in round l iff s and every
+        # copy-holder of s (its out-neighbours) are active.  Otherwise the
+        # update is skipped *symmetrically*: s's own x̂ stays put and the
+        # pruned ppermute delivers zero payloads, which every codec decodes
+        # to exactly 0, so stored neighbour copies never drift from the
+        # owner's x̂ — the skipped round's drift is simply absorbed by the
+        # next committed q (error feedback).
+        if comm.membership is not None:
+            Lc = comm.round_cycle
+            self._commit_np = np.stack(
+                [self._commit_mask(comm.topology_at(l), comm.active_at(l))
+                 for l in range(Lc)])
+            self._commit_jnp = jnp.asarray(self._commit_np)
+        else:
+            self._commit_np = None
+            self._commit_jnp = None
+
+    # -- elastic membership: commit masks ---------------------------------------
+    @staticmethod
+    def _commit_mask(top, act) -> np.ndarray:
+        """(K,) bool: worker ``s`` commits its error-compensation update in
+        a round where only ``act`` workers exchange."""
+        act = np.asarray(act, dtype=bool)   # host: static mask  # lint: allow
+        K = top.n_workers
+        grid = top.axis_sizes
+        ok = act.copy()
+        for (ax, sh, _w) in top.shifts:
+            if sh == 0:
+                continue
+            n = grid[ax]
+            for s in range(K):
+                # the copy-holder of s along (ax, sh) receives from d+sh=s
+                idx = list(np.unravel_index(s, grid))
+                idx[ax] = (idx[ax] - sh) % n
+                d = int(np.ravel_multi_index(idx, grid))
+                if d != s and not act[d]:
+                    ok[s] = False
+        for (ax, recv, _w) in top.perms:
+            for d in range(K):
+                idx = list(np.unravel_index(d, grid))
+                idx[ax] = recv[idx[ax]]
+                s = int(np.ravel_multi_index(idx, grid))
+                if s != d and not act[d]:
+                    ok[s] = False
+        return ok
+
+    def _commit_at(self, r):
+        """(K,) bool commit mask under a traced round index."""
+        tab = self._commit_jnp
+        if tab.shape[0] == 1:
+            return tab[0]
+        return tab[jnp.mod(jnp.asarray(r), tab.shape[0])]
 
     # -- state -----------------------------------------------------------------
     def init(self, params):
@@ -143,10 +205,16 @@ class CPDSGDM(PDSGDM):
 
     # -- communication round (Alg. 2 lines 6-9) ------------------------------------
     def comm_round(self, state, params):
+        r = self.round_index(state)
+        if (isinstance(self.comm, ShardedComm)
+                and self.comm.membership is not None):
+            return self._comm_round_elastic_sharded(state, params, r)
+        return self._comm_round_at(state, params, r)
+
+    def _comm_round_at(self, state, params, r):
         cfg = self.config
         gamma = jnp.float32(cfg.gamma)
         xhat = state["xhat"]
-        r = self.round_index(state)
 
         # line 6: consensus from *locally stored* copies — zero communication.
         if isinstance(self.comm, ShardedComm):
@@ -180,7 +248,162 @@ class CPDSGDM(PDSGDM):
                                    nbrs[k], q_recv)
                 new_state["xhat_nbrs"] = nbrs
 
+        # Elastic membership, dense backend: commit-gate the x̂ update so
+        # the canonical copies stay in lock-step with what the sharded
+        # backend's stored-copy protocol would hold (a non-committing
+        # worker's x̂ is frozen; its drift rides into the next q).  The
+        # consensus above already used the masked W.
+        if (isinstance(self.comm, DenseComm)
+                and self.comm.membership is not None):
+            cm = self._commit_at(r)
+            new_state["xhat"] = tmap(
+                lambda h_new, h_old: jnp.where(
+                    worker_mask_like(cm, h_new), h_new, h_old),
+                new_state["xhat"], xhat)
+
         return params_new, new_state
+
+    # -- elastic membership round (sharded) -----------------------------------------
+    def _comm_round_elastic_sharded(self, state, params, r):
+        """Select round ``r``'s liveness pattern with ``lax.switch`` — each
+        branch is a statically-masked round, so all patterns live in one
+        compiled executable, exactly like the topology-schedule programs."""
+        Lc = self.comm.round_cycle
+        if Lc == 1:
+            return self._comm_round_masked(0, state, params, r)
+        idx = jnp.mod(jnp.asarray(r, jnp.int32), Lc)
+        branches = [partial(self._comm_round_masked, l) for l in range(Lc)]
+        return jax.lax.switch(idx, branches, state, params, r)
+
+    def _comm_round_masked(self, l, state, params, r):
+        """Alg. 2 lines 6-9 with only round ``l``'s active workers
+        exchanging: consensus over stored copies with dead in-neighbours
+        masked (lost mass to self, rows stay stochastic), commit-gated x̂
+        updates, and payload ppermutes pruned to committing sources."""
+        comm = self.comm
+        act = comm.active_at(l)
+        if act.all():
+            return self._comm_round_at(state, params, r)
+        commit = self._commit_np[l]
+        cfg = self.config
+        gamma = jnp.float32(cfg.gamma)
+        xhat = state["xhat"]
+        top = comm.topology_at(l)
+        n = top.n_workers
+        idx = jax.lax.axis_index(comm.axis_names[0])
+        ks = np.arange(n)
+
+        # line 6: consensus from stored copies, per-edge coefficients from
+        # the shift entries themselves (aliasing-safe — never read off the
+        # masked matrix), dead edges zeroed, lost mass folded into self.
+        off = np.zeros(n)
+        terms = []
+        for (ax, sh, w) in comm.nonself_shifts():
+            if sh % n == 0:   # self-aliased shift: its copy IS own x̂ —
+                continue      # absorbed by the 1 − Σ diagonal below
+            src = (ks + sh) % n
+            coeff = np.where(act & act[src], w, 0.0)
+            off += coeff
+            terms.append((self._key(ax, sh),
+                          jnp.asarray(coeff.astype(np.float32))[idx]))
+        diag = jnp.asarray((1.0 - off).astype(np.float32))[idx]
+        mixhat = tmap(lambda h: h * diag, xhat)
+        for key, cv in terms:
+            mixhat = tmap(lambda a, b: a + cv * b,
+                          mixhat, state["xhat_nbrs"][key])
+        params_new = tmap(
+            lambda x, mh, h: (x.astype(jnp.float32)
+                              + gamma * (mh - h)).astype(x.dtype),
+            params, mixhat, xhat)
+        diff = tmap(lambda x, h: x.astype(jnp.float32) - h, params_new, xhat)
+
+        commit_self = jnp.asarray(commit)[idx]
+        new_state = dict(state)
+        if self._kernel_wire():
+            self._comm_kernel_wire_masked(new_state, xhat, diff,
+                                          commit, commit_self)
+        elif self._payload_wire():
+            self._comm_payload_wire_masked(new_state, xhat, diff, r,
+                                           commit, commit_self)
+        else:
+            q = self._apply_Q(diff, r)
+            new_state["xhat"] = tmap(
+                lambda h, qq: jnp.where(commit_self,
+                                        h + qq.astype(jnp.float32), h),
+                xhat, q)
+            nbrs = dict(state["xhat_nbrs"])
+            for (ax, sh, _w) in comm.nonself_shifts():
+                k = self._key(ax, sh)
+                q_recv = tmap(
+                    lambda leaf: comm._receive_from_committed(
+                        leaf, ax, sh, commit), q)
+                nbrs[k] = tmap(lambda h, qq: h + qq.astype(jnp.float32),
+                               nbrs[k], q_recv)
+            new_state["xhat_nbrs"] = nbrs
+        return params_new, new_state
+
+    def _comm_kernel_wire_masked(self, new_state, xhat, diff,
+                                 commit, commit_self):
+        """Kernel-wire lines 7-9 under membership: identical to
+        :meth:`_comm_kernel_wire` except the x̂ update is commit-gated and
+        each neighbour exchange is pruned to committing sources — whose
+        receivers decode the zero payload to exactly 0."""
+        from repro.kernels import ops as kops
+        plan = kops.KernelPlan.for_tree(diff, worker_dim=False)
+        interp = self.config.kernel_interpret
+        payload = self.codec.rows_pack(plan.flatten(diff),
+                                       counts=plan.row_counts(),
+                                       interpret=interp)
+        q_self = plan.unflatten(self.codec.rows_unpack(payload,
+                                                       interpret=interp),
+                                dtype=jnp.float32)
+        new_state["xhat"] = tmap(
+            lambda h, q: jnp.where(commit_self, h + q, h), xhat, q_self)
+        u = plan.used_rows
+        nbrs = dict(new_state["xhat_nbrs"])
+        for (ax, sh, _w) in self.comm.nonself_shifts():
+            k = self._key(ax, sh)
+            recv = {name: plan.pad_wire(
+                        self.comm._receive_from_committed(
+                            arr[..., :u, :], ax, sh, commit))
+                    for name, arr in payload.items()}
+            q_recv = plan.unflatten(
+                self.codec.rows_unpack(recv, interpret=interp),
+                dtype=jnp.float32)
+            nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
+        new_state["xhat_nbrs"] = nbrs
+
+    def _comm_payload_wire_masked(self, new_state, xhat, diff, r,
+                                  commit, commit_self):
+        """Per-leaf codec wire under membership: commit-gated x̂, pruned
+        payload ppermutes (zero payloads decode to 0 for every codec)."""
+        codec = self.codec
+        leaves, treedef = jax.tree_util.tree_flatten(diff)
+        payloads, keys, q_self = [], [], []
+        for i, leaf in enumerate(leaves):
+            key = self._wire_key(r, i)
+            payload = codec.pack(leaf, key)
+            q = codec.unpack(payload, leaf.size, leaf.shape, jnp.float32,
+                             key=key)
+            payloads.append(payload)
+            keys.append(key)
+            q_self.append(q)
+        new_state["xhat"] = jax.tree_util.tree_unflatten(
+            treedef, [jnp.where(commit_self, h + q, h) for h, q in zip(
+                treedef.flatten_up_to(xhat), q_self)])
+        nbrs = dict(new_state["xhat_nbrs"])
+        for (ax, sh, _w) in self.comm.nonself_shifts():
+            k = self._key(ax, sh)
+            q_recv = []
+            for leaf, payload, key in zip(leaves, payloads, keys):
+                recv = self.comm.receive_payload_committed(
+                    codec.wire(payload), ax, sh, commit)
+                q_recv.append(codec.unpack(recv, leaf.size, leaf.shape,
+                                           jnp.float32, key=key))
+            nbrs[k] = jax.tree_util.tree_unflatten(
+                treedef, [h + q for h, q in zip(
+                    treedef.flatten_up_to(nbrs[k]), q_recv)])
+        new_state["xhat_nbrs"] = nbrs
 
     def _comm_kernel_wire(self, new_state, xhat, diff):
         """Lines 7-9 on the flatten-once kernel layout: one Pallas codec
@@ -258,9 +481,11 @@ class CPDSGDM(PDSGDM):
     # -- kernel round (flatten-once matrix domain) --------------------------------
     @property
     def kernel_comm_supported(self) -> bool:
-        """Matrix-domain comm needs the kernel wire format; other
-        compressors fall back to the tree comm at the round boundary."""
-        return self._kernel_wire()
+        """Matrix-domain comm needs the kernel wire format — and full
+        membership: under churn the round falls back to the tree comm at
+        the boundary, where the commit-gated paths live.  Other
+        compressors fall back likewise."""
+        return self._kernel_wire() and self.comm.membership is None
 
     def mat_state(self, plan, state) -> dict:
         mats = super().mat_state(plan, state)
@@ -331,15 +556,30 @@ class CPDSGDM(PDSGDM):
         ship), × the round's topology degree.  Accounted ≡ shipped by
         construction; asserted against the traced ppermute payloads in
         ``tests/test_wire.py``.  ``packed_wire=False`` ships the
-        full-precision f32 q, and is charged as such."""
+        full-precision f32 q, and is charged as such.
+
+        Elastic membership: CPD's wire is the q payload, shipped only by
+        *committing* sources (each to its full copy-holder set — all
+        active, by the commit rule), so the multiplier is
+        ``degree × committers / K`` instead of the active-edge count."""
         from repro.core.gossip import gossip_bytes_per_round
+        frac = 1.0
+        if self._commit_np is not None:
+            cm = self._commit_np[r % self._commit_np.shape[0]]
+            frac = float(cm.sum()) / cm.shape[0]
         if self.config.packed_wire and self.codec is not None:
             payload = sum(
                 self.codec.wire_bytes(int(np.prod(l.shape, dtype=np.int64)))
                 for l in jax.tree_util.tree_leaves(params))
-            return self.comm.topology_at(r).degree * payload
+            base = self.comm.topology_at(r).degree * payload
+            return base if frac == 1.0 else base * frac
         bits = (32.0 if self.codec is not None
                 else self.compressor.wire_bits_per_element(
                     jax.tree_util.tree_leaves(params)[0].dtype))
+        if self._commit_np is not None:
+            elems = sum(int(np.prod(l.shape, dtype=np.int64))
+                        for l in jax.tree_util.tree_leaves(params))
+            base = self.comm.topology_at(r).degree * elems * bits / 8.0
+            return int(base) if frac == 1.0 else float(base * frac)
         return gossip_bytes_per_round(params, self.comm,
                                       bits_per_element=bits, r=r)

@@ -40,6 +40,7 @@ as the graph changes.  ``backend.topology`` remains the round-0 topology
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -47,28 +48,75 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import Topology, TopologySchedule
+from repro.core.topology import (MembershipSchedule, Topology,
+                                 TopologySchedule, active_edge_count,
+                                 masked_matrix)
 
 __all__ = ["DenseComm", "ShardedComm", "CommBackend",
-           "gossip_bytes_per_round"]
+           "gossip_bytes_per_round", "worker_mask_like"]
 
 ShiftKey = Tuple[int, int]  # (topology axis, shift)
+
+
+def worker_mask_like(mask, leaf):
+    """Reshape a (K,) worker mask so it broadcasts against a worker-stacked
+    leaf of shape (K, ...)."""
+    return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
 class CommBackend:
     topology: Topology
     schedule: Optional[TopologySchedule] = None
+    membership: Optional[MembershipSchedule] = None
 
     @property
     def period(self) -> int:
         """Schedule period T (1 for a static topology)."""
         return self.schedule.period if self.schedule is not None else 1
 
+    @property
+    def round_cycle(self) -> int:
+        """Joint period of the topology schedule and the membership
+        schedule — the number of rounds after which both the graph and the
+        liveness pattern repeat.  Byte accounting and per-round mixing
+        programs cycle over this, not ``period``."""
+        M = self.membership.period if self.membership is not None else 1
+        return math.lcm(self.period, M)
+
     def topology_at(self, r: int) -> Topology:
         """Topology of round ``r`` (python int; wraps modulo the period)."""
         if self.schedule is not None:
             return self.schedule.at(r)
         return self.topology
+
+    def active_at(self, r: int) -> np.ndarray:
+        """(K,) bool — workers exchanging in round ``r`` (all True without
+        a membership schedule)."""
+        if self.membership is None:
+            return np.ones(self.topology.n_workers, dtype=bool)
+        return self.membership.active_at(r)
+
+    def effective_matrix(self, r: int) -> np.ndarray:
+        """The K×K mixing matrix this backend executes in round ``r``,
+        membership mask applied — what chaos tests and the jaxpr contract
+        checker assert row-stochasticity / dead-column-zero against."""
+        top = self.topology_at(r)
+        act = self.active_at(r)
+        if act.all():
+            return np.asarray(top.W)   # host: introspection  # lint: allow
+        return masked_matrix(top, act)
+
+    def edges_per_worker(self, r: int = 0):
+        """Mean directed exchanges per worker in round ``r``: the topology
+        degree without membership (int — exact legacy accounting), else
+        ``active_edge_count / K`` (float; dead edges ship zero bytes)."""
+        top = self.topology_at(r)
+        if self.membership is None:
+            return top.degree
+        act = self.active_at(r)
+        if act.all():
+            return top.degree
+        return active_edge_count(top, act) / top.n_workers
 
     def mix(self, tree, r=None):
         raise NotImplementedError
@@ -106,14 +154,46 @@ class DenseComm(CommBackend):
     """
 
     topology: Topology  # or a TopologySchedule at construction
+    membership: Optional[MembershipSchedule] = None
 
     def __post_init__(self):
         self._resolve(self.topology)
         self._W = jnp.asarray(self.topology.W, dtype=jnp.float32)
         self._Ws = (jnp.asarray(self.schedule.stacked_W(), dtype=jnp.float32)
                     if self.schedule is not None else None)
+        if self.membership is not None:
+            self.membership.validate()
+            if self.membership.n_workers != self.topology.n_workers:
+                raise ValueError(
+                    f"membership K={self.membership.n_workers} != topology "
+                    f"K={self.topology.n_workers}")
+            # Stack the masked matrix of every round in the joint cycle so
+            # a traced round index selects it — one trace serves every
+            # liveness pattern.  All-active rounds reuse the topology's own
+            # W bit-for-bit.
+            Lc = self.round_cycle
+            Wm, act = [], []
+            for l in range(Lc):
+                a = self.membership.active_at(l)
+                top = self.topology_at(l)
+                Wm.append(np.asarray(top.W) if a.all()   # lint: allow
+                          else masked_matrix(top, a))
+                act.append(a)
+            self._Wm = jnp.asarray(np.stack(Wm), dtype=jnp.float32)
+            self._act = jnp.asarray(np.stack(act))
+        else:
+            self._Wm = None
+            self._act = None
 
     def _W_at(self, r):
+        if self.membership is not None:
+            if self._Wm.shape[0] == 1:
+                return self._Wm[0]
+            if r is None:
+                raise ValueError(
+                    "DenseComm with a MembershipSchedule needs the round "
+                    "index: mix(tree, r=...)")
+            return self._Wm[jnp.mod(jnp.asarray(r), self._Wm.shape[0])]
         if self.schedule is None or self.schedule.period == 1:
             return self._W
         if r is None:
@@ -121,6 +201,20 @@ class DenseComm(CommBackend):
                 "DenseComm with a TopologySchedule needs the round index: "
                 "mix(tree, r=...)")
         return self._Ws[jnp.mod(jnp.asarray(r), self.schedule.period)]
+
+    def active_mask(self, r):
+        """(K,) bool under a traced round index; None without membership.
+        Optimizers use it to pin a straggler's auxiliary state (e.g. MT's
+        tracking variable) instead of applying a phantom self-exchange."""
+        if self.membership is None:
+            return None
+        if self._act.shape[0] == 1:
+            return self._act[0]
+        if r is None:
+            raise ValueError(
+                "DenseComm with a MembershipSchedule needs the round "
+                "index: active_mask(r=...)")
+        return self._act[jnp.mod(jnp.asarray(r), self._act.shape[0])]
 
     def mix(self, tree, r=None):
         W = self._W_at(r)
@@ -168,6 +262,7 @@ class ShardedComm(CommBackend):
 
     topology: Topology  # or a TopologySchedule at construction
     axis_names: Tuple[str, ...]
+    membership: Optional[MembershipSchedule] = None
 
     def __post_init__(self):
         self._resolve(self.topology)
@@ -178,6 +273,20 @@ class ShardedComm(CommBackend):
                     len(self.axis_names) != len(top.axis_sizes)):
                 raise ValueError(
                     f"axis_names {self.axis_names} vs grid {top.axis_sizes}")
+        if self.membership is not None:
+            self.membership.validate()
+            if self.membership.n_workers != self.topology.n_workers:
+                raise ValueError(
+                    f"membership K={self.membership.n_workers} != topology "
+                    f"K={self.topology.n_workers}")
+            if len(self.axis_names) != 1:
+                # a multi-axis ppermute applies one perm across every slice
+                # of the other axes — per-worker edge pruning is not
+                # expressible there.  Flatten the grid to one worker axis
+                # to combine elastic membership with the sharded backend.
+                raise ValueError(
+                    "elastic membership on ShardedComm needs a single "
+                    f"worker axis; got axis_names {self.axis_names}")
 
     def _receive_from(self, x, axis: int, shift: int):
         """Each worker receives the value held by worker (k+shift) on `axis`."""
@@ -202,6 +311,28 @@ class ShardedComm(CommBackend):
         one ``ppermute`` per payload array, dtypes preserved (this is
         where compression becomes real bytes on the interconnect)."""
         return {k: self._receive_from(v, axis, shift)
+                for k, v in payload.items()}
+
+    def _receive_from_committed(self, x, axis: int, shift: int, source_ok):
+        """``ppermute`` pruned to sources with ``source_ok[s]`` (a static
+        numpy bool mask).  Destinations whose source did not commit receive
+        zeros — which every wire codec decodes to exactly 0, so a stored
+        neighbour copy updated with the decoded payload stays put."""
+        n = self.topology.axis_sizes[axis]
+        name = self.axis_names[axis]
+        ok = np.asarray(source_ok, dtype=bool)   # host: pair list  # lint: allow
+        pairs = [(s, (s - shift) % n) for s in range(n) if ok[s]]
+        if not pairs:
+            return jnp.zeros_like(x)
+        return jax.lax.ppermute(x, name, pairs)
+
+    def receive_payload_committed(self, payload: Dict[str, object],
+                                  axis: int, shift: int,
+                                  source_ok) -> Dict[str, object]:
+        """Like :meth:`receive_payload`, but edges from non-committing
+        sources are pruned from the collective (dead edges ship zero
+        bytes); their receivers get all-zero payload arrays."""
+        return {k: self._receive_from_committed(v, axis, shift, source_ok)
                 for k, v in payload.items()}
 
     def _mix_with(self, top: Topology, tree):
@@ -235,7 +366,76 @@ class ShardedComm(CommBackend):
 
         return jax.tree_util.tree_map(mix_leaf, tree)
 
+    def _mix_with_masked(self, top: Topology, act, tree):
+        """One gossip round under a specific topology with only ``act``
+        workers exchanging.  Each weighted shift/perm becomes a ppermute
+        pruned to edges with both endpoints active; per-worker receive
+        coefficients and the renormalized self-weight come from
+        :func:`masked_matrix`'s factors, gathered at ``axis_index`` — so
+        the executed matrix equals the dense backend's masked W exactly.
+        """
+        if act.all():
+            return self._mix_with(top, tree)
+        if top.name == "disconnected":
+            return tree
+
+        name = self.axis_names[0]
+        n = top.axis_sizes[0]
+        idx = jax.lax.axis_index(name)
+        act = np.asarray(act, dtype=bool)   # host: program build  # lint: allow
+        ks = np.arange(n)
+
+        # Per-exchange pruned perms + per-receiver coefficient vectors.
+        # Coefficients come from each (shift, w) entry directly — never
+        # from reading the masked matrix, whose aliased entries (e.g. the
+        # ±K/2 shifts of `exponential`) collapse into one cell.
+        entries = []  # (coeff (n,) f32, pairs)
+        off_diag = np.zeros(n)
+        for (_ax, sh, w) in top.shifts:
+            if sh % n == 0:  # self (possibly aliased) — absorbed in diag
+                continue
+            src = (ks + sh) % n
+            coeff = np.where(act & act[src], w, 0.0)
+            pairs = [(int(s), int((s - sh) % n)) for s in range(n)
+                     if act[s] and act[(s - sh) % n]]
+            off_diag += coeff
+            entries.append((coeff.astype(np.float32), pairs))
+        for (_ax, recv, w) in top.perms:
+            src = np.asarray(recv)   # host: program build  # lint: allow
+            coeff = np.where((src != ks) & act & act[src], w, 0.0)
+            pairs = [(int(src[j]), int(j)) for j in range(n)
+                     if src[j] != j and act[j] and act[src[j]]]
+            off_diag += coeff
+            entries.append((coeff.astype(np.float32), pairs))
+        # Lost neighbour mass flows back to self: rows stay stochastic.
+        diag = jnp.asarray((1.0 - off_diag).astype(np.float32))[idx]
+        coeffs = [jnp.asarray(c)[idx] for (c, _p) in entries]
+
+        def mix_leaf(x):
+            acc = x.astype(jnp.float32) * diag
+            for c, (_coeff, pairs) in zip(coeffs, entries):
+                if not pairs:
+                    continue
+                v = jax.lax.ppermute(x, name, pairs)
+                acc = acc + v.astype(jnp.float32) * c
+            return acc.astype(x.dtype)
+
+        return jax.tree_util.tree_map(mix_leaf, tree)
+
     def mix(self, tree, r=None):
+        if self.membership is not None:
+            Lc = self.round_cycle
+            if Lc == 1:
+                return self._mix_with_masked(
+                    self.topology_at(0), self.active_at(0), tree)
+            if r is None:
+                raise ValueError(
+                    "ShardedComm with a MembershipSchedule needs the round "
+                    "index: mix(tree, r=...)")
+            branches = [partial(self._mix_with_masked, self.topology_at(l),
+                                self.active_at(l)) for l in range(Lc)]
+            idx = jnp.mod(jnp.asarray(r, jnp.int32), Lc)
+            return jax.lax.switch(idx, branches, tree)
         if self.schedule is None or self.period == 1:
             return self._mix_with(self.topology_at(0), tree)
         if r is None:
@@ -261,11 +461,21 @@ def gossip_bytes_per_round(tree, backend: CommBackend,
 
     Full precision: round-r degree × Σ leaf bytes.  With compression, pass
     the compressor's ``wire_bits_per_element``.  Under a time-varying
-    schedule the degree — and hence the bytes — varies by round; the
-    optimizer's ``bytes_per_round_cycle`` collects the full cycle.
+    schedule the degree — and hence the bytes — varies by round; under a
+    membership schedule dead edges ship zero bytes, so the multiplier is
+    the round's active-edge count averaged over workers (a float).  The
+    optimizer's ``bytes_per_round_cycle`` collects the full joint cycle.
     """
     total_elems = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
     deg = backend.topology_at(r).degree
+    if backend.membership is not None:
+        epw = backend.edges_per_worker(r)
+        if bits_per_element is None:
+            bytes_ = sum(
+                int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(tree))
+            return epw * bytes_
+        return float(epw * total_elems * bits_per_element / 8.0)
     if bits_per_element is None:
         bytes_ = sum(
             int(np.prod(l.shape)) * l.dtype.itemsize

@@ -223,10 +223,13 @@ class PDSGDM:
 
     def _mat_wire_static(self) -> bool:
         """Whether ``_gossip_mat`` runs the shift-structured AXPY wire:
-        static graph, no perms, not complete — the path whose neighbour
-        exchanges slice to ``plan.used_rows`` (block-exact accounting)."""
+        static graph, full membership, no perms, not complete — the path
+        whose neighbour exchanges slice to ``plan.used_rows`` (block-exact
+        accounting).  Elastic membership routes through ``comm.mix`` on
+        the matrix, which owns the per-round edge pruning."""
         top = self.comm.topology
         return ((self.comm.schedule is None or self.comm.period == 1)
+                and self.comm.membership is None
                 and not top.perms
                 and top.name not in ("complete", "disconnected"))
 
@@ -340,7 +343,9 @@ class PDSGDM:
         return gossip_bytes_per_round(params, self.comm, r=r)
 
     def bytes_per_round_cycle(self, params) -> tuple:
-        """Per-round bytes over one schedule cycle (1-tuple when static);
-        the trainers accumulate these round-robin for comm-MB accounting."""
+        """Per-round bytes over one joint schedule × membership cycle
+        (1-tuple when both static); the trainers accumulate these
+        round-robin for comm-MB accounting.  Rounds where a worker is dead
+        or straggling ship fewer bytes — dead edges count zero."""
         return tuple(self.bytes_per_comm_round(params, r=r)
-                     for r in range(self.comm.period))
+                     for r in range(self.comm.round_cycle))

@@ -31,6 +31,7 @@ import numpy as np
 __all__ = [
     "Topology",
     "TopologySchedule",
+    "MembershipSchedule",
     "ring",
     "torus",
     "complete",
@@ -46,6 +47,10 @@ __all__ = [
     "one_peer_exponential_schedule",
     "alternating_axes_schedule",
     "random_matching_schedule",
+    "full_membership",
+    "membership_from_events",
+    "masked_matrix",
+    "active_edge_count",
 ]
 
 
@@ -470,3 +475,211 @@ def make_schedule(name: str, worker_grid: Sequence[int], *,
         T = rounds or max(2, math.ceil(math.log2(max(K, 2))))
         return random_matching_schedule(K, T, seed=seed)
     raise ValueError(f"unknown topology schedule {name!r}")
+
+
+# --------------------------------------------------------- elastic membership
+@dataclasses.dataclass(frozen=True)
+class MembershipSchedule:
+    """Per-round worker liveness for elastic membership, period ``M``.
+
+    Two (M, K) bool masks, indexed ``[r % M, k]``:
+
+    * ``live`` — worker k still holds state in round r.  A dead worker has
+      left the fleet: its column and row are masked out of the round's
+      mixing matrix and none of its edges ship bytes.
+    * ``active`` — worker k participates in round r's *exchange*.
+      ``active ⊆ live``: a live-but-inactive worker is a **straggler** —
+      it keeps training locally but its exchange is skipped that round
+      (effective self-weight 1, the masked row is ``e_k``).
+
+    Dead and straggling workers are indistinguishable to the mixing matrix
+    (both are excluded via ``active``); ``live`` additionally drives the
+    chaos harness's metrics (loss/consensus over live workers only) and
+    revival warm-starts.  Like :class:`TopologySchedule`, the round index
+    is derived from the optimizer's checkpointed step counter, so resume
+    restores the membership phase with no extra persisted cursor.
+    """
+
+    name: str
+    live: np.ndarray      # (M, K) bool
+    active: np.ndarray    # (M, K) bool, active ⊆ live
+
+    @property
+    def period(self) -> int:
+        return int(self.live.shape[0])
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.live.shape[1])
+
+    def live_at(self, r: int) -> np.ndarray:
+        """(K,) bool — workers holding state in round ``r``."""
+        return np.asarray(self.live[int(r) % self.period], dtype=bool)
+
+    def active_at(self, r: int) -> np.ndarray:
+        """(K,) bool — workers exchanging in round ``r``."""
+        return np.asarray(self.active[int(r) % self.period], dtype=bool)
+
+    def all_active(self) -> bool:
+        return bool(np.all(self.active))
+
+    def validate(self) -> None:
+        live = np.asarray(self.live)
+        active = np.asarray(self.active)
+        if live.shape != active.shape or live.ndim != 2:
+            raise ValueError(
+                f"membership {self.name}: live {live.shape} and active "
+                f"{active.shape} must both be (rounds, K)")
+        if live.dtype != np.bool_ or active.dtype != np.bool_:
+            raise ValueError(f"membership {self.name}: masks must be bool")
+        if np.any(active & ~live):
+            raise ValueError(
+                f"membership {self.name}: active ⊄ live (a dead worker "
+                "cannot exchange)")
+        if not np.all(live.any(axis=1)):
+            raise ValueError(
+                f"membership {self.name}: some round has no live worker "
+                "(nobody left to warm-start from)")
+
+
+def full_membership(K: int, name: str = "full") -> MembershipSchedule:
+    """Everyone live and active every round (period 1) — the degenerate
+    schedule under which every masked quantity equals its unmasked form."""
+    ones = np.ones((1, K), dtype=bool)
+    return MembershipSchedule(name, ones, ones.copy())
+
+
+def membership_from_events(K: int, n_rounds: int,
+                           events: Sequence) -> MembershipSchedule:
+    """Build a period-``n_rounds`` membership from a fault script.
+
+    ``events`` is a sequence of ``(round, kind, worker)`` triples (or any
+    objects with those attributes), applied in round order:
+
+    * ``"kill"``     — worker leaves the fleet at that round (dead from
+      that round on, until revived);
+    * ``"revive"``   — worker rejoins at that round (the harness
+      warm-starts its state from a live donor *before* the round runs);
+    * ``"straggle"`` — worker is slow for that one round only: it stays
+      live (and keeps computing) but skips the exchange.
+
+    Workers start live; masks are deterministic in the event list, so the
+    dense and sharded backends (and checkpoint resume) see identical
+    membership.
+    """
+    def _fields(e):
+        if hasattr(e, "round"):
+            return int(e.round), str(e.kind), int(e.worker)
+        r, kind, w = e
+        return int(r), str(kind), int(w)
+
+    by_round: dict = {}
+    for e in events:
+        r, kind, w = _fields(e)
+        if kind not in ("kill", "revive", "straggle"):
+            raise ValueError(f"unknown membership event kind {kind!r}")
+        if not (0 <= w < K) or not (0 <= r < n_rounds):
+            raise ValueError(f"membership event out of range: {(r, kind, w)}")
+        by_round.setdefault(r, []).append((kind, w))
+
+    live = np.ones((n_rounds, K), dtype=bool)
+    straggle = np.zeros((n_rounds, K), dtype=bool)
+    alive = np.ones(K, dtype=bool)
+    for r in range(n_rounds):
+        for (kind, w) in by_round.get(r, []):
+            if kind == "kill":
+                alive[w] = False
+            elif kind == "revive":
+                alive[w] = True
+            else:
+                straggle[r, w] = True
+        live[r] = alive
+    ms = MembershipSchedule("events", live, live & ~straggle)
+    ms.validate()
+    return ms
+
+
+def masked_matrix(top: Topology, active) -> np.ndarray:
+    """The round's effective mixing matrix with only ``active`` workers
+    exchanging — the elastic-membership renormalization rule.
+
+    Mirrors :meth:`Topology.structure_matrix` (sequential per-axis
+    application — what the ppermute backend executes), with each axis
+    factor ``A`` masked per worker ``k``::
+
+        A'_kj = A_kj          if k ≠ j and both k, j active
+              = 0             if k ≠ j and either endpoint inactive
+        A'_kk = 1 − Σ_{j≠k} A'_kj      (lost neighbour mass → self)
+
+    Every row sums to 1 by construction (row-stochastic over live peers);
+    an inactive worker's row is ``e_k`` (self-weight 1: its exchange is
+    skipped) and its column is zero in every active row (nobody reads a
+    dead worker).  For a symmetric base W the masked factor stays
+    symmetric, so the matrix is doubly stochastic *over the active set* —
+    the worker-mean over active workers is preserved, which is what keeps
+    MT's tracking correction and QG's displacement average bounded under
+    churn.  With all workers active this equals ``structure_matrix()``.
+    """
+    act = np.asarray(active, dtype=bool)
+    K = top.n_workers
+    if act.shape != (K,):
+        raise ValueError(f"active mask shape {act.shape} != ({K},)")
+    grid = top.axis_sizes
+    axes = sorted({ax for (ax, _, _) in top.shifts}
+                  | {ax for (ax, _, _) in top.perms})
+    W = np.eye(K)
+    for ax in axes:
+        A = np.zeros((K, K))
+        n = grid[ax]
+        for (a, sh, w) in top.shifts:
+            if a != ax or sh == 0:
+                continue
+            for k in range(K):
+                idx = list(np.unravel_index(k, grid))
+                idx[ax] = (idx[ax] + sh) % n
+                j = int(np.ravel_multi_index(idx, grid))
+                if j != k and act[k] and act[j]:
+                    A[k, j] += w
+        for (a, recv, w) in top.perms:
+            if a != ax:
+                continue
+            for k in range(K):
+                idx = list(np.unravel_index(k, grid))
+                idx[ax] = recv[idx[ax]]
+                j = int(np.ravel_multi_index(idx, grid))
+                if j != k and act[k] and act[j]:
+                    A[k, j] += w
+        for k in range(K):
+            A[k, k] = 1.0 - A[k].sum()
+        W = A @ W
+    return W
+
+
+def active_edge_count(top: Topology, active) -> int:
+    """Directed exchanges that actually ship in a round where only
+    ``active`` workers participate: one per (receiver, source) pair with
+    both endpoints active, per weighted shift / perm — the wire-byte
+    multiplier (dead edges ship zero bytes).  With everyone active this
+    equals ``K × degree``."""
+    act = np.asarray(active, dtype=bool)
+    K = top.n_workers
+    grid = top.axis_sizes
+    count = 0
+    for (ax, sh, _w) in top.shifts:
+        if sh == 0:
+            continue
+        n = grid[ax]
+        for k in range(K):
+            idx = list(np.unravel_index(k, grid))
+            idx[ax] = (idx[ax] + sh) % n
+            j = int(np.ravel_multi_index(idx, grid))
+            if j != k and act[k] and act[j]:
+                count += 1
+    for (ax, recv, _w) in top.perms:
+        for k in range(K):
+            idx = list(np.unravel_index(k, grid))
+            idx[ax] = recv[idx[ax]]
+            j = int(np.ravel_multi_index(idx, grid))
+            if j != k and act[k] and act[j]:
+                count += 1
+    return count

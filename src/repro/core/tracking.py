@@ -63,6 +63,7 @@ per-round ``lax.switch`` programs as x).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
@@ -70,7 +71,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import Compressor
-from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.gossip import (CommBackend, DenseComm, ShardedComm,
+                               worker_mask_like)
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.wire import make_codec, wire_key
 
@@ -213,6 +215,68 @@ class MTDSGDm(PDSGDM):
                 mixed[j] = mixed[j] + jnp.float32(w) * q_r
         return jax.tree_util.tree_unflatten(treedef, mixed)
 
+    def _mix_c_sharded_elastic(self, c, r):
+        """Compressed-tracking mix under elastic membership: one statically
+        masked branch per round of the joint cycle, selected by
+        ``lax.switch`` — mirroring the masked mixing programs in
+        :meth:`~repro.core.gossip.ShardedComm.mix`."""
+        Lc = self.comm.round_cycle
+        if Lc == 1:
+            return self._mix_c_sharded_masked(0, c, r)
+        idx = jnp.mod(jnp.asarray(r, jnp.int32), Lc)
+        branches = [partial(self._mix_c_sharded_masked, l)
+                    for l in range(Lc)]
+        return jax.lax.switch(idx, branches, c, r)
+
+    def _mix_c_sharded_masked(self, l, c, r):
+        """One compressed correction mix with only round ``l``'s active
+        workers exchanging: payload ppermutes pruned to edges with both
+        endpoints active, per-receiver coefficients from the shift entries
+        (lost neighbour mass to the quantized self term), and an inactive
+        worker's c left *raw* — a straggler skips the exchange entirely,
+        it does not quantize in place."""
+        comm = self.comm
+        act = comm.active_at(l)
+        if act.all():
+            return self._mix_c_sharded(c, r)
+        top = comm.topology_at(l)
+        n = top.n_workers
+        idx = jax.lax.axis_index(comm.axis_names[0])
+        ks = np.arange(n)
+
+        off = np.zeros(n)
+        edges = []   # (ax, sh, coeff (n,), source_ok (n,))
+        for (ax, sh, w) in comm.nonself_shifts():
+            if sh % n == 0:   # self-aliased: weight folds into the diag
+                continue
+            src = (ks + sh) % n
+            coeff = np.where(act & act[src], w, 0.0)
+            off += coeff
+            # an edge ships iff BOTH endpoints are active; for a fixed
+            # shift that is a predicate on the source alone
+            source_ok = act & act[(ks - sh) % n]
+            edges.append((ax, sh, coeff.astype(np.float32), source_ok))
+        diag = jnp.asarray((1.0 - off).astype(np.float32))[idx]
+        active_self = jnp.asarray(act)[idx]
+
+        leaves, treedef = jax.tree_util.tree_flatten(c)
+        mixed = []
+        for i, leaf in enumerate(leaves):
+            key = wire_key(r, i)
+            payload = self.codec.pack(leaf, key)
+            q = self.codec.unpack(payload, leaf.size, leaf.shape,
+                                  jnp.float32, key=key)
+            acc = diag * q
+            for (ax, sh, coeff, source_ok) in edges:
+                recv = {nm: comm._receive_from_committed(v, ax, sh,
+                                                         source_ok)
+                        for nm, v in self.codec.wire(payload).items()}
+                q_r = self.codec.unpack(recv, leaf.size, leaf.shape,
+                                        jnp.float32, key=key)
+                acc = acc + jnp.asarray(coeff)[idx] * q_r
+            mixed.append(jnp.where(active_self, acc, leaf))
+        return jax.tree_util.tree_unflatten(treedef, mixed)
+
     def comm_round(self, state, params):
         r = self.round_index(state)
         params_new = self.comm.mix(params, r=r)
@@ -220,10 +284,21 @@ class MTDSGDm(PDSGDM):
         if self.codec is None:
             new_state["c"] = self.comm.mix(state["c"], r=r)
         elif isinstance(self.comm, ShardedComm):
-            new_state["c"] = self._mix_c_sharded(state["c"], r)
+            if self.comm.membership is not None:
+                new_state["c"] = self._mix_c_sharded_elastic(state["c"], r)
+            else:
+                new_state["c"] = self._mix_c_sharded(state["c"], r)
         else:
-            new_state["c"] = self.comm.mix(
-                self._quantized_c(state["c"], r), r=r)
+            mixed = self.comm.mix(self._quantized_c(state["c"], r), r=r)
+            if self.comm.membership is not None:
+                # a straggler's masked row is e_k, which would quantize its
+                # c in place without any exchange — pin the raw c instead
+                am = self.comm.active_mask(r)
+                mixed = tmap(
+                    lambda mc, cc: jnp.where(worker_mask_like(am, mc),
+                                             mc, cc),
+                    mixed, state["c"])
+            new_state["c"] = mixed
         return params_new, new_state
 
     # -- kernel round (flatten-once matrix domain) ------------------------------
@@ -234,10 +309,13 @@ class MTDSGDm(PDSGDM):
 
     @property
     def kernel_comm_supported(self) -> bool:
-        """Full-precision c mixes like x (always matrix-capable);
-        compressed tracking needs the codec's rows kernels — other codecs
-        fall back to the tree comm at the round boundary."""
-        return self.codec is None or self._kernel_wire()
+        """Full-precision c mixes like x (always matrix-capable — the
+        matrix gossip delegates to the membership-aware ``comm.mix`` when
+        needed); compressed tracking needs the codec's rows kernels *and*
+        full membership (under churn the round falls back to the tree
+        comm at the boundary, where the masked correction wire lives)."""
+        return self.codec is None or (self._kernel_wire()
+                                      and self.comm.membership is None)
 
     def mat_state(self, plan, state) -> dict:
         mats = super().mat_state(plan, state)
@@ -307,9 +385,12 @@ class MTDSGDm(PDSGDM):
     def bytes_per_comm_round(self, params, r: int = 0) -> int:
         """The true 2-tensor payload: full-precision x (leaf dtypes) plus
         the correction wire — exact codec bytes when compressed, f32
-        otherwise — both × the round's topology degree."""
+        otherwise — both × the round's edge multiplier (the topology
+        degree; under elastic membership the active-edge count averaged
+        over workers, dead edges shipping zero bytes)."""
         from repro.core.gossip import gossip_bytes_per_round
         deg = self.comm.topology_at(r).degree
+        epw = self.comm.edges_per_worker(r)
         if self._kernel_wire_active():
             x_bytes = deg * self._mat_wire_bytes(params)
         else:
@@ -325,7 +406,7 @@ class MTDSGDm(PDSGDM):
         else:
             c_payload = sum(int(np.prod(l.shape, dtype=np.int64)) * 4
                             for l in leaves)
-        return x_bytes + deg * c_payload
+        return x_bytes + epw * c_payload
 
 
 class QGDSGDm(PDSGDM):
@@ -385,6 +466,11 @@ class QGDSGDm(PDSGDM):
         return cfg.lr(step_last).astype(jnp.float32)
 
     # -- communication: mix, then fold the global displacement into m ----------
+    # Elastic membership composes without extra gating: a straggler's
+    # masked row is e_k, so `mixed` is its own x and d_hat degrades to the
+    # worker's local round displacement — the buffer keeps moving on local
+    # progress instead of stalling.  Dead workers are warm-started from a
+    # live donor at revival, so a stale (m, xprev) never re-enters.
     def comm_round(self, state, params):
         cfg = self.config
         mu = jnp.float32(cfg.mu)

@@ -110,29 +110,31 @@ def make_shd(layout: Layout, parallel):
 
 
 # --------------------------------------------------------------------------- comm
-def build_comm(run: RunCfg, layout: Layout):
+def build_comm(run: RunCfg, layout: Layout, membership=None):
     """Topology (or topology schedule) + comm backend for the worker layout.
 
     ``parallel.topology_schedule != "static"`` selects a time-varying gossip
     graph: the ShardedComm precomputes every round's ppermute program and
     the fused round engine switches between them on the traced round index.
+    ``membership`` (a ``MembershipSchedule``) masks dead/straggling workers
+    out of each round's mixing matrix (elastic fleets).
     """
     waxes = layout.worker_axes
     sizes = layout.worker_sizes
     if not waxes:
-        return DenseComm(disconnected(1))
+        return DenseComm(disconnected(1), membership=membership)
     sched_name = getattr(run.parallel, "topology_schedule", "static")
     if sched_name != "static":
         sched = make_schedule(
             sched_name, sizes, base_topology=run.parallel.topology,
             rounds=run.parallel.schedule_rounds,
             seed=run.parallel.schedule_seed)
-        return ShardedComm(sched, axis_names=waxes)
+        return ShardedComm(sched, axis_names=waxes, membership=membership)
     if len(waxes) == 1:
         topo = make_topology(run.parallel.topology, sizes)
     else:
         topo = torus(sizes)  # hierarchical pod×ring mixing
-    return ShardedComm(topo, axis_names=waxes)
+    return ShardedComm(topo, axis_names=waxes, membership=membership)
 
 
 def _compressor_kwargs(o) -> dict:
@@ -185,12 +187,13 @@ class TrainPack:
 
 
 def build_train(run: RunCfg, mesh, shape: InputShape,
-                model_cfg: Optional[ModelCfg] = None) -> TrainPack:
+                model_cfg: Optional[ModelCfg] = None,
+                membership=None) -> TrainPack:
     mcfg = model_cfg or run.model
     layout = make_layout(run.parallel, mesh)
     model = make_model(mcfg, shd=make_shd(layout, run.parallel))
     n_w = layout.n_workers
-    comm = build_comm(run, layout)
+    comm = build_comm(run, layout, membership=membership)
     opt = _make_optimizer(run, comm)
     remat = run.parallel.remat
     p_round = run.optim.p

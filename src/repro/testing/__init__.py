@@ -1,0 +1,16 @@
+"""Reusable test substrates.
+
+``repro.testing.chaos`` is the fault-injection layer behind
+``tests/test_chaos.py`` and ``benchmarks/elastic_sweep.py``: seeded
+kill / revive / straggle scripts, a dense chaos driver that runs the
+fused round engine under churn while recording survivor metrics, and an
+independent wire-byte oracle for the accounted ≡ shipped invariant.
+"""
+from repro.testing.chaos import (ChaosEvent, ChaosRun, chaos_script,
+                                 check_round_matrix, membership_for,
+                                 oracle_fleet_bytes, revivals_by_round,
+                                 run_dense_chaos)
+
+__all__ = ["ChaosEvent", "ChaosRun", "chaos_script", "check_round_matrix",
+           "membership_for", "oracle_fleet_bytes", "revivals_by_round",
+           "run_dense_chaos"]

@@ -1,0 +1,274 @@
+"""Fault injection for elastic-membership chaos tests.
+
+Three pieces, shared by ``tests/test_chaos.py`` and
+``benchmarks/elastic_sweep.py``:
+
+* **Scripts** — ``chaos_script`` draws a seeded kill / revive / straggle
+  event sequence that never drops the fleet below ``min_live`` live
+  workers; ``membership_for`` compiles it into the core
+  ``MembershipSchedule`` that masks the mixing matrices.
+
+* **Driver** — ``run_dense_chaos`` runs any fused-round optimizer built
+  on a membership-carrying ``DenseComm`` through ``n_rounds`` rounds of
+  churn, applying ``warm_start_worker`` at each revival *before* the
+  revival round (the rejoined worker's first exchange carries a live
+  model, not its stale pre-kill shard), and records per-round survivor
+  metrics: consensus distance over live workers, loss of the
+  live-worker-averaged model, live counts and accounted wire bytes.
+
+* **Oracle** — ``oracle_fleet_bytes`` re-derives the fleet's shipped
+  bytes per round from the *structure* mixing matrix's support and the
+  round's active mask (plus an independently derived commit set for
+  CPD), never from ``edges_per_worker`` / ``_commit_mask``: the
+  accounted ≡ shipped invariant is checked through a different code
+  path.  The support enumeration assumes every off-diagonal exchange is
+  a distinct graph edge (true for ring / exponential / complete at the
+  K ≥ 3 sizes the chaos tests use; aliased shifts would collapse matrix
+  entries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.elastic import pick_donor, warm_start_worker
+from repro.core.topology import MembershipSchedule, membership_from_events
+
+__all__ = ["ChaosEvent", "ChaosRun", "chaos_script", "check_round_matrix",
+           "membership_for", "oracle_fleet_bytes", "revivals_by_round",
+           "run_dense_chaos"]
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One membership fault: ``kind`` ∈ {kill, revive, straggle}, applied
+    at communication round ``round`` to worker ``worker``.  A kill holds
+    until the matching revive; a straggle masks one round only."""
+    round: int
+    kind: str
+    worker: int
+
+
+def chaos_script(n_workers: int, n_rounds: int, *, seed: int,
+                 kill_prob: float = 0.15, straggle_prob: float = 0.15,
+                 down_rounds: int = 2, min_live: int = 2
+                 ) -> List[ChaosEvent]:
+    """Seeded churn: each round, each live worker dies with ``kill_prob``
+    (reviving ``down_rounds`` rounds later) or straggles one round with
+    ``straggle_prob``.  Kills that would leave fewer than ``min_live``
+    live workers are skipped, so the masked matrix always has a live
+    quorum to renormalize over.  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    live = np.ones(n_workers, dtype=bool)
+    pending: Dict[int, List[int]] = {}          # revive round -> workers
+    events: List[ChaosEvent] = []
+    for r in range(n_rounds):
+        for w in pending.pop(r, []):
+            events.append(ChaosEvent(r, "revive", w))
+            live[w] = True
+        for w in range(n_workers):
+            if not live[w]:
+                continue
+            u = rng.random()
+            if u < kill_prob and live.sum() > min_live:
+                events.append(ChaosEvent(r, "kill", w))
+                live[w] = False
+                back = r + down_rounds
+                if back < n_rounds:
+                    pending.setdefault(back, []).append(w)
+            elif u < kill_prob + straggle_prob:
+                events.append(ChaosEvent(r, "straggle", w))
+    return events
+
+
+def membership_for(n_workers: int, n_rounds: int,
+                   events: Sequence[ChaosEvent]) -> MembershipSchedule:
+    """Compile a chaos script into the core membership schedule."""
+    return membership_from_events(n_workers, n_rounds, events)
+
+
+def revivals_by_round(events: Sequence[ChaosEvent]) -> Dict[int, List[int]]:
+    """round -> workers rejoining at that round (warm-start points)."""
+    out: Dict[int, List[int]] = {}
+    for ev in events:
+        if ev.kind == "revive":
+            out.setdefault(ev.round, []).append(ev.worker)
+    return out
+
+
+# ------------------------------------------------------------------ invariants
+def check_round_matrix(comm, r: int, atol: float = 1e-12) -> np.ndarray:
+    """Assert round ``r``'s effective mixing matrix honours the liveness
+    mask: every row sums to 1, masked-out workers hold the identity row
+    e_k, and no active row reads from a masked-out column.  Returns the
+    matrix for further checks."""
+    W = np.asarray(comm.effective_matrix(r), dtype=np.float64)
+    act = np.asarray(comm.active_at(r), dtype=bool)
+    K = W.shape[0]
+    np.testing.assert_allclose(W.sum(axis=1), np.ones(K), atol=atol,
+                               err_msg=f"round {r}: rows not stochastic")
+    for k in np.flatnonzero(~act):
+        np.testing.assert_allclose(
+            W[k], np.eye(K)[k], atol=atol,
+            err_msg=f"round {r}: masked worker {k} row is not e_k")
+    dead_cols = W[np.ix_(act, ~act)]
+    if dead_cols.size:
+        np.testing.assert_allclose(
+            dead_cols, 0.0, atol=atol,
+            err_msg=f"round {r}: active rows read masked-out columns")
+    return W
+
+
+# ----------------------------------------------------------------- byte oracle
+def _support_edges(comm, r: int):
+    """Directed (receiver, source) exchanges of round ``r``'s *structure*
+    graph — off-diagonal support of the unmasked mixing matrix."""
+    Wt = np.asarray(comm.topology_at(r).W)
+    K = Wt.shape[0]
+    return [(k, j) for k in range(K) for j in range(K)
+            if k != j and Wt[k, j] != 0.0]
+
+
+def _leaf_bytes(params) -> int:
+    return sum(int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def _codec_bytes(codec, params) -> int:
+    return sum(codec.wire_bytes(int(np.prod(l.shape, dtype=np.int64)))
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def oracle_fleet_bytes(opt, params, r: int) -> float:
+    """Fleet-total wire bytes the round-``r`` exchange actually ships,
+    enumerated from the structure graph + active mask (and, for CPD, a
+    commit set re-derived from the matrix support).  Compare against
+    ``n_workers × opt.bytes_per_comm_round(params, r)`` — the accounted
+    side, which goes through ``edges_per_worker`` / ``_commit_np``
+    instead.  ``params`` is one worker's (unstacked) tree."""
+    from repro.core.cpdsgdm import CPDSGDM
+    from repro.core.tracking import MTDSGDm
+
+    comm = opt.comm
+    act = np.asarray(comm.active_at(r), dtype=bool)
+    edges = _support_edges(comm, r)
+    live_edges = sum(1 for (k, j) in edges if act[k] and act[j])
+
+    if isinstance(opt, CPDSGDM):
+        # commit set, independently: source j ships iff j is active and
+        # every receiver of j (its copy-holders) is active too
+        K = act.shape[0]
+        receivers: Dict[int, List[int]] = {j: [] for j in range(K)}
+        for (k, j) in edges:
+            receivers[j].append(k)
+        commit = np.array([act[j] and all(act[k] for k in receivers[j])
+                           for j in range(K)])
+        shipped_edges = sum(len(receivers[j])
+                            for j in range(K) if commit[j])
+        if opt.config.packed_wire and opt.codec is not None:
+            per_edge = _codec_bytes(opt.codec, params)
+        else:
+            per_edge = 4 * sum(int(np.prod(l.shape, dtype=np.int64))
+                               for l in jax.tree_util.tree_leaves(params))
+        return float(shipped_edges * per_edge)
+
+    x_edge = _leaf_bytes(params)
+    if isinstance(opt, MTDSGDm):
+        if opt.codec is not None:
+            c_edge = _codec_bytes(opt.codec, params)
+        else:
+            c_edge = 4 * sum(int(np.prod(l.shape, dtype=np.int64))
+                             for l in jax.tree_util.tree_leaves(params))
+        return float(live_edges * (x_edge + c_edge))
+    return float(live_edges * x_edge)          # PD / QG: x only
+
+
+# --------------------------------------------------------------------- driver
+@dataclasses.dataclass
+class ChaosRun:
+    """Per-round survivor metrics from a chaos drive.
+
+    ``consensus[r]`` — RMS distance of live workers' params to their
+    live-worker mean after round ``r``; ``avg_loss[r]`` — loss of the
+    live-averaged model; ``live[r]`` — live count;
+    ``accounted_bytes[r]`` — fleet bytes the optimizer *charged* for the
+    round (oracle comparisons happen in the tests)."""
+    params: Any
+    state: Any
+    consensus: np.ndarray
+    avg_loss: np.ndarray
+    live: np.ndarray
+    accounted_bytes: np.ndarray
+
+
+def _consensus_rms(params, live_mask) -> float:
+    idx = np.flatnonzero(live_mask)
+    total, count = 0.0, 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        sub = np.asarray(leaf)[idx]
+        mean = sub.mean(axis=0, keepdims=True)
+        total += float(((sub - mean) ** 2).sum())
+        count += sub.size
+    return float(np.sqrt(total / max(count, 1)))
+
+
+def run_dense_chaos(opt, events: Sequence[ChaosEvent], params,
+                    grads_fn: Callable, n_rounds: int, *,
+                    loss_fn: Optional[Callable] = None,
+                    warm_start: bool = True) -> ChaosRun:
+    """Drive ``n_rounds`` fused rounds of ``opt`` (a DenseComm optimizer
+    whose backend carries the script's membership) under churn.
+
+    At each revival round the rejoining worker's params *and full
+    optimizer state* are cloned from the nearest live donor on the ring
+    order (``warm_start_worker``) before the round runs.  ``grads_fn``
+    is the fused-round loss/grad callback (``(params, batch) -> (loss,
+    grads)``); ``loss_fn`` (optional) maps stacked params to per-worker
+    losses for the averaged-model metric — defaults to the loss part of
+    ``grads_fn``."""
+    ms = opt.comm.membership
+    if ms is None:
+        raise ValueError("run_dense_chaos: opt.comm carries no membership")
+    revive_at = revivals_by_round(events)
+    p = opt.config.p
+    batches = jnp.zeros((p, 1))
+    roundj = jax.jit(lambda s, pp: opt.round(s, pp, grads_fn, batches))
+    per_worker = tmap(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                      params)
+    if loss_fn is None:
+        loss_fn = lambda pp: grads_fn(pp, None)[0]
+
+    state = opt.init(params)
+    consensus, avg_loss, live_n, acc_bytes = [], [], [], []
+    for r in range(n_rounds):
+        if warm_start:
+            for w in revive_at.get(r, []):
+                live_now = ms.live_at(r).copy()
+                live_now[w] = False            # donor must be someone else
+                donor = pick_donor(live_now, w)
+                params, state = warm_start_worker(params, state,
+                                                  joiner=w, donor=donor)
+        params, state, _ = roundj(state, params)
+        live = np.asarray(ms.live_at(r), dtype=bool)
+        consensus.append(_consensus_rms(params, live))
+        idx = np.flatnonzero(live)
+        mean_p = tmap(
+            lambda x: jnp.broadcast_to(
+                jnp.asarray(np.asarray(x)[idx]).mean(0, keepdims=True),
+                x.shape),
+            params)
+        avg_loss.append(float(np.asarray(loss_fn(mean_p)).mean()))
+        live_n.append(int(live.sum()))
+        acc_bytes.append(
+            float(ms.n_workers * opt.bytes_per_comm_round(per_worker, r=r)))
+    return ChaosRun(params=params, state=state,
+                    consensus=np.asarray(consensus),
+                    avg_loss=np.asarray(avg_loss),
+                    live=np.asarray(live_n, dtype=np.int64),
+                    accounted_bytes=np.asarray(acc_bytes))

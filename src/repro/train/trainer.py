@@ -264,9 +264,16 @@ class ShardedTrainer:
         if resume and self.ckpt_dir:
             last = ckpt.latest_step(self.ckpt_dir)
             if last is not None:
-                restored = ckpt.restore(self.ckpt_dir, last, {
-                    "params": pack.params_struct,
-                    "opt_state": pack.state_struct})
+                # elastic restore: same fleet size → exact checkpoint.restore
+                # (bit-identical for every worker at the round boundary);
+                # K→K' → survivors keep their shards, joiners warm-start
+                # params + full optimizer state from a live donor's shard
+                from repro.checkpoint import elastic
+                restored = elastic.restore_elastic(
+                    self.ckpt_dir, last,
+                    params_template=pack.params_struct,
+                    state_template=pack.state_struct,
+                    comm=pack.opt.comm)
                 params = jax.device_put(restored["params"],
                                         pack.params_sharding)
                 state = jax.device_put(restored["opt_state"],

@@ -41,6 +41,51 @@ def test_scheduled_dense_contract_clean():
     assert jc.check_round_contract(opt, jc.toy_params(K)) == []
 
 
+def _membership():
+    from repro.core.topology import membership_from_events
+    return membership_from_events(K, 4, [(1, "kill", 2), (3, "revive", 2),
+                                         (2, "straggle", 5)])
+
+
+def test_membership_contract_clean():
+    """Elastic membership on the dense backend: the full round contract
+    plus the traced mask semantics (row-stochastic over live peers, e_k
+    rows for masked workers, zero dead columns) hold every round."""
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=3),
+                 DenseComm(ring(K), membership=_membership()))
+    assert jc.check_round_contract(opt, jc.toy_params(K)) == []
+
+
+def test_catches_gossip_with_masked_out_peer():
+    """Negative: a backend whose round-r matrix still carries the full
+    topology weights (mask never applied) must be flagged — the dense
+    trace shows a nonzero column for the dead worker and a non-identity
+    row for the masked one."""
+    comm = DenseComm(ring(K), membership=_membership())
+    # sabotage the precomputed masked tables back to the raw topology W:
+    # every round now gossips as if the whole fleet were alive
+    comm._Wm = jnp.broadcast_to(jnp.asarray(ring(K).W, jnp.float32),
+                                comm._Wm.shape)
+    out = jc.check_membership_mask(comm)
+    assert out, "unmasked gossip with a dead worker went undetected"
+    joined = "\n".join(out)
+    assert "masked-out worker" in joined
+    # both failure modes surface: the dead worker still mixing, and an
+    # active worker reading its column
+    assert any("reads weight" in v for v in out)
+    assert any("row != e_k" in v for v in out)
+
+
+def test_membership_mask_check_skips_full_rounds():
+    """All-active rounds reuse the topology matrix bitwise — the check
+    passes and the traced matrix equals W exactly."""
+    from repro.core.topology import full_membership
+    comm = DenseComm(ring(K), membership=full_membership(K))
+    assert jc.check_membership_mask(comm) == []
+    np.testing.assert_array_equal(jc.traced_mixing_matrix(comm, 0),
+                                  np.asarray(ring(K).W, np.float32))
+
+
 def test_qsgd_tree_no_f64():
     """Regression: the qsgd dequant fill literal was a weak f64 scalar
     under x64 (kernels/qsgd_quant.py) — the whole dense round must now

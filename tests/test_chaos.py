@@ -1,0 +1,451 @@
+"""Elastic membership + straggler tolerance under a chaos harness.
+
+Fast tier — dense backend, seeded kill / revive / straggle scripts from
+``repro.testing.chaos``:
+
+* mixing-matrix invariants every round (row-stochastic over live peers,
+  e_k rows for masked workers, zero dead columns, doubly stochastic over
+  the active set for symmetric bases);
+* pruned-ppermute zero payloads decode to exactly 0 for every wire codec
+  (the property that keeps CPD's neighbour copies from drifting when a
+  source skips a round);
+* all five fused-round optimizers survive churn with bounded survivor
+  consensus and worker-averaged loss, accounted bytes ≡ an independent
+  structure-graph oracle (dead edges ship zero bytes);
+* CPD freezes a dead worker's x̂ exactly while it is down;
+* K→K' checkpoint re-partitioning and in-fleet warm starts
+  (``repro.checkpoint.elastic``).
+
+Slow tier — a subprocess forces 8 host devices and asserts the sharded
+(ppermute) backend tracks the dense reference parameter-for-parameter
+through the same churn script, for CPD (packed sign wire) and MT.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.checkpoint import elastic
+from repro.core import make_compressor, make_optimizer
+from repro.core.gossip import DenseComm, gossip_bytes_per_round
+from repro.core.topology import (complete, exponential, full_membership,
+                                 make_topology, membership_from_events, ring)
+from repro.core.wire import make_codec
+from repro.testing import (ChaosEvent, chaos_script, check_round_matrix,
+                           membership_for, oracle_fleet_bytes,
+                           revivals_by_round, run_dense_chaos)
+
+K, D, P = 8, 24, 2
+R = 12          # chaos horizon (rounds)
+SEED = 7
+
+tmap = jax.tree_util.tree_map
+
+
+def _script():
+    return chaos_script(K, R, seed=SEED)
+
+
+def _membership():
+    return membership_for(K, R, _script())
+
+
+def _quadratic():
+    """Heterogeneous per-worker quadratic: F_k(x) = ||x − b_k||²/2 with
+    well-separated optima — consensus pressure and churn stress at once."""
+    b = 2.0 * jax.random.normal(jax.random.PRNGKey(3), (K, D))
+
+    def grads_fn(params, batch):
+        g = {"w": params["w"] - b}
+        return 0.5 * jnp.sum((params["w"] - b) ** 2, axis=-1).mean(), g
+
+    return grads_fn
+
+
+def _params0():
+    # identical (consensus) init across workers — the trainers broadcast
+    # x₀, and CPD's neighbour x̂ copies assume it
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (1, D))
+    return {"w": jnp.broadcast_to(x0, (K, D))}
+
+
+CONFIGS = [
+    ("pd_sgdm", {}),
+    ("cpd_sgdm", {"gamma": 0.5, "compressor": make_compressor("sign")}),
+    ("cpd_sgdm", {"gamma": 0.5,
+                  "compressor": make_compressor("topk", fraction=0.25)}),
+    ("mt_dsgdm", {}),
+    ("mt_dsgdm", {"compressor": make_compressor("sign")}),
+    ("qg_dsgdm", {}),
+]
+CONFIG_IDS = ["pd", "cpd_sign", "cpd_topk", "mt", "mt_sign", "qg"]
+
+
+def _make_opt(name, kw, membership):
+    return make_optimizer(name, DenseComm(ring(K), membership=membership),
+                          eta=0.05, mu=0.9, p=P, **kw)
+
+
+# ----------------------------------------------------------------- the script
+def test_chaos_script_deterministic_and_min_live():
+    a, b_ = _script(), _script()
+    assert a == b_
+    ms = _membership()
+    assert ms.live.min(axis=1).sum() >= 0            # shape sanity
+    for r in range(R):
+        assert ms.live_at(r).sum() >= 2              # min_live floor
+        assert ms.active_at(r).sum() >= 1
+    kinds = {e.kind for e in a}
+    assert kinds == {"kill", "revive", "straggle"}   # seed exercises all
+
+
+def test_membership_event_semantics():
+    events = [ChaosEvent(1, "kill", 2), ChaosEvent(3, "revive", 2),
+              ChaosEvent(2, "straggle", 5)]
+    ms = membership_from_events(K, 6, events)
+    assert ms.live_at(0).all() and ms.active_at(0).all()
+    for r in (1, 2):                                 # kill persists
+        assert not ms.live_at(r)[2] and not ms.active_at(r)[2]
+    assert ms.live_at(3)[2] and ms.active_at(3)[2]   # revive restores
+    assert ms.live_at(2)[5] and not ms.active_at(2)[5]   # straggle: 1 round
+    assert ms.active_at(3)[5]
+    assert revivals_by_round(events) == {3: [2]}
+
+
+# ------------------------------------------------------------ matrix contract
+@pytest.mark.parametrize("topo", [ring(K), exponential(K), complete(K)],
+                         ids=["ring", "exp", "complete"])
+def test_masked_matrix_invariants_every_round(topo):
+    comm = DenseComm(topo, membership=_membership())
+    for r in range(R):
+        W = check_round_matrix(comm, r)
+        act = np.asarray(comm.active_at(r), dtype=bool)
+        if topo.symmetric:
+            # doubly stochastic over the active set: columns of active
+            # workers sum to 1 too, so the live-average is preserved
+            np.testing.assert_allclose(W[:, act].sum(axis=0),
+                                       np.ones(int(act.sum())), atol=1e-12)
+
+
+def test_full_membership_matrix_is_topology_bitwise():
+    topo = ring(K)
+    comm = DenseComm(topo, membership=full_membership(K))
+    np.testing.assert_array_equal(np.asarray(comm.effective_matrix(0)),
+                                  topo.W)
+
+
+# ------------------------------------------------------------ zero-wire decode
+@pytest.mark.parametrize("comp_name,kw", [
+    ("identity", {}), ("sign", {}), ("topk", {"fraction": 0.25}),
+    ("randk", {"fraction": 0.25}), ("qsgd", {"levels": 16})])
+def test_zero_wire_payload_decodes_to_exact_zero(comp_name, kw):
+    """A receiver whose source skipped the round gets all-zero wire
+    arrays from the pruned ppermute — every codec must decode that to
+    exactly 0, so neighbour x̂ copies stay put (no drift)."""
+    codec = make_codec(make_compressor(comp_name, **kw))
+    n = 96
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    key = jax.random.PRNGKey(2)
+    payload = codec.pack(x, key)
+    wired = codec.wire(payload)
+    zeroed = {k: (jnp.zeros_like(v) if k in wired else v)
+              for k, v in payload.items()}
+    out = codec.unpack(zeroed, n, x.shape, x.dtype, key)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(n))
+
+
+# ----------------------------------------------------------- chaos drive (fast)
+@pytest.mark.parametrize("name,kw", CONFIGS, ids=CONFIG_IDS)
+def test_dense_chaos_survivors_bounded(name, kw):
+    """Under the seeded churn script: training still converges for the
+    survivors, consensus stays within a small factor of the churn-free
+    run, and the accounted wire bytes equal the structure-graph oracle's
+    every round (dead edges ship zero)."""
+    grads_fn = _quadratic()
+    events = _script()
+    opt = _make_opt(name, kw, _membership())
+    run = run_dense_chaos(opt, events, _params0(), grads_fn, R)
+    base = run_dense_chaos(_make_opt(name, kw, full_membership(K)),
+                           [], _params0(), grads_fn, R)
+
+    assert np.isfinite(run.consensus).all()
+    assert np.isfinite(run.avg_loss).all()
+    # survivors' averaged model still trains ...
+    assert run.avg_loss[-1] < run.avg_loss[0]
+    # ... never blows past the initial loss ...
+    assert run.avg_loss.max() <= 1.3 * run.avg_loss[0]
+    # ... and churn costs at most a modest factor over the clean run
+    assert run.avg_loss[-1] <= 1.5 * base.avg_loss[-1]
+    assert run.consensus.max() <= 3.0 * base.consensus.max()
+
+    per_worker = {"w": jax.ShapeDtypeStruct((D,), jnp.float32)}
+    for r in range(R):
+        check_round_matrix(opt.comm, r)
+        np.testing.assert_allclose(
+            run.accounted_bytes[r],
+            oracle_fleet_bytes(opt, per_worker, r),
+            rtol=1e-12, err_msg=f"round {r}: accounted != shipped")
+
+
+def test_bytes_cycle_covers_membership_period():
+    """``bytes_per_round_cycle`` spans lcm(schedule, membership) rounds
+    and matches the per-round accounting; churn rounds really charge
+    less than full rounds."""
+    opt = _make_opt("pd_sgdm", {}, _membership())
+    per_worker = {"w": jax.ShapeDtypeStruct((D,), jnp.float32)}
+    cycle = opt.bytes_per_round_cycle(per_worker)
+    assert len(cycle) == opt.comm.round_cycle == R
+    full = gossip_bytes_per_round(per_worker, DenseComm(ring(K)))
+    for r, v in enumerate(cycle):
+        assert v == opt.bytes_per_comm_round(per_worker, r=r)
+        assert v <= full
+    assert min(cycle) < full          # the script really kills edges
+
+
+def test_cpd_dead_worker_xhat_frozen_exactly():
+    """While a worker is down, its x̂ (and every copy implication) must
+    not move at all — frozen bit-for-bit, not merely damped."""
+    events = [ChaosEvent(1, "kill", 3), ChaosEvent(4, "revive", 3)]
+    ms = membership_from_events(K, 6, events)
+    opt = _make_opt("cpd_sgdm",
+                    {"gamma": 0.5, "compressor": make_compressor("sign")},
+                    ms)
+    grads_fn = _quadratic()
+    params, state = _params0(), None
+    state = opt.init(params)
+    batches = jnp.zeros((P, 1))
+    roundj = jax.jit(lambda s, pp: opt.round(s, pp, grads_fn, batches))
+    xhat_frozen = None
+    for r in range(6):
+        params, state, _ = roundj(state, params)
+        xh3 = np.asarray(state["xhat"]["w"])[3]
+        if r == 0:
+            xhat_frozen = xh3                     # last commit before kill
+        elif 1 <= r < 4:
+            np.testing.assert_array_equal(xh3, xhat_frozen)
+        elif r >= 4:
+            assert not np.array_equal(xh3, xhat_frozen)   # resumed
+
+
+# -------------------------------------------------------- elastic checkpoints
+def _cpd_pair(k):
+    comm = DenseComm(make_topology("ring", (k,)))
+    return make_optimizer("cpd_sgdm", comm, eta=0.05, mu=0.9, p=P,
+                          gamma=0.5, compressor=make_compressor("sign"))
+
+
+def _trained_cpd_ckpt(tmp_path):
+    opt = _cpd_pair(K)
+    grads_fn = _quadratic()
+    params = _params0()
+    state = opt.init(params)
+    batches = jnp.zeros((P, 1))
+    roundj = jax.jit(lambda s, pp: opt.round(s, pp, grads_fn, batches))
+    for _ in range(3):
+        params, state, _ = roundj(state, params)
+    step = int(np.asarray(state["step"]))
+    ckpt.save(str(tmp_path), step, params=params, opt_state=state)
+    return opt, params, state, step
+
+
+def test_restore_elastic_same_k_bit_identical(tmp_path):
+    opt, params, state, step = _trained_cpd_ckpt(tmp_path)
+    out = elastic.restore_elastic(
+        str(tmp_path), step,
+        params_template=jax.eval_shape(lambda: params),
+        state_template=jax.eval_shape(lambda: state), comm=opt.comm)
+    for a, b_ in zip(jax.tree_util.tree_leaves(out["params"]),
+                     jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    for a, b_ in zip(jax.tree_util.tree_leaves(out["opt_state"]),
+                     jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("new_k", [12, 5], ids=["grow", "shrink"])
+def test_restore_elastic_repartitions(tmp_path, new_k):
+    """K→K': survivors keep their shards bit-for-bit, joiners clone a
+    live neighbour (params AND full optimizer state), and the step
+    counter rides through so round/schedule/membership phase survive."""
+    opt, params, state, step = _trained_cpd_ckpt(tmp_path)
+    opt2 = _cpd_pair(new_k)
+    p2 = {"w": jnp.zeros((new_k, D))}
+    out = elastic.restore_elastic(
+        str(tmp_path), step,
+        params_template=jax.eval_shape(lambda: p2),
+        state_template=jax.eval_shape(opt2.init, p2), comm=opt2.comm)
+    dm = elastic.donor_map(K, new_k)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(params["w"])[dm])
+    for key_ in ("m", "xhat"):
+        np.testing.assert_array_equal(np.asarray(out["opt_state"][key_]["w"]),
+                                      np.asarray(state[key_]["w"])[dm])
+    assert int(np.asarray(out["opt_state"]["step"])) == step
+    # the restored fleet must run: one full round, finite everywhere
+    b2 = 2.0 * jax.random.normal(jax.random.PRNGKey(3), (new_k, D))
+
+    def gfn(pp, batch):
+        return (0.5 * jnp.sum((pp["w"] - b2) ** 2, axis=-1).mean(),
+                {"w": pp["w"] - b2})
+
+    np_, ns, _ = jax.jit(
+        lambda s, pp: opt2.round(s, pp, gfn, jnp.zeros((P, 1))))(
+            out["opt_state"], out["params"])
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves((np_, ns)))
+
+
+def test_restore_elastic_rederives_nbr_copies(tmp_path):
+    """Sharded-style states carry per-shift neighbour x̂ copies; after a
+    K→K' re-partition every copy must equal its *new* owner's x̂ (the
+    commit protocol's round-boundary invariant), not a stale donor's."""
+    opt, params, state, step = _trained_cpd_ckpt(tmp_path)
+    state_sh = dict(state)
+    state_sh["xhat_nbrs"] = {
+        f"ax0_sh{sh:+d}": tmap(
+            lambda h: jnp.take(h, jnp.asarray((np.arange(K) + sh) % K),
+                               axis=0), state["xhat"])
+        for sh in (-1, 1)}
+    ckpt.save(str(tmp_path / "shstate"), step, params=params,
+              opt_state=state_sh)
+    new_k = 12
+    opt2 = _cpd_pair(new_k)
+    p2 = {"w": jnp.zeros((new_k, D))}
+    st2 = dict(jax.eval_shape(opt2.init, p2))
+    st2["xhat_nbrs"] = {
+        f"ax0_sh{sh:+d}": {"w": jax.ShapeDtypeStruct((new_k, D),
+                                                     jnp.float32)}
+        for sh in (-1, 1)}
+    out = elastic.restore_elastic(
+        str(tmp_path / "shstate"), step,
+        params_template=jax.eval_shape(lambda: p2),
+        state_template=st2, comm=opt2.comm)
+    xh = np.asarray(out["opt_state"]["xhat"]["w"])
+    for keyname, sub in out["opt_state"]["xhat_nbrs"].items():
+        sh = int(keyname.split("_sh")[1])
+        np.testing.assert_allclose(np.asarray(sub["w"]),
+                                   xh[(np.arange(new_k) + sh) % new_k],
+                                   err_msg=keyname)
+
+
+def test_warm_start_worker_clones_full_state():
+    opt = _cpd_pair(K)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (K, D))}
+    state = opt.init(params)
+    state["m"] = {"w": jax.random.normal(jax.random.PRNGKey(5), (K, D))}
+    wp, ws = elastic.warm_start_worker(params, state, joiner=3, donor=6)
+    np.testing.assert_array_equal(np.asarray(wp["w"])[3],
+                                  np.asarray(params["w"])[6])
+    np.testing.assert_array_equal(np.asarray(ws["m"]["w"])[3],
+                                  np.asarray(state["m"]["w"])[6])
+    np.testing.assert_array_equal(np.asarray(ws["xhat"]["w"])[3],
+                                  np.asarray(state["xhat"]["w"])[6])
+    # untouched slots stay bit-identical
+    keep = [i for i in range(K) if i != 3]
+    np.testing.assert_array_equal(np.asarray(wp["w"])[keep],
+                                  np.asarray(params["w"])[keep])
+
+
+def test_pick_donor_nearest_live():
+    live = np.array([1, 0, 0, 1, 1, 1, 1, 1], dtype=bool)
+    assert elastic.pick_donor(live, 1) == 0
+    assert elastic.pick_donor(live, 2) == 3
+    with pytest.raises(ValueError):
+        elastic.pick_donor(np.zeros(4, dtype=bool), 0)
+
+
+# ------------------------------------------------------------- sharded (slow)
+_SCRIPT_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import make_compressor, make_optimizer
+    from repro.core.gossip import DenseComm, ShardedComm
+    from repro.core.topology import ring
+    from repro.launch.runtime import _smap
+    from repro.testing import chaos_script, check_round_matrix, membership_for
+
+    K, D, PP, R = 8, 16, 2, 6
+    events = chaos_script(K, R, seed=11)
+    ms = membership_for(K, R, events)
+    b = 2.0 * jax.random.normal(jax.random.PRNGKey(3), (K, D))
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (1, D))
+    params0 = {"w": jnp.broadcast_to(x0, (K, D))}
+    batches = jnp.zeros((PP, 1))
+    mesh = Mesh(np.array(jax.devices()[:K]).reshape(K), ("w",))
+    pspec = {"w": P("w", None)}
+
+    def gfn(pp, batch, bb):
+        return (0.5 * jnp.sum((pp["w"] - bb) ** 2, axis=-1).mean(),
+                {"w": pp["w"] - bb})
+
+    for name, kw in [
+            ("cpd_sgdm", dict(gamma=0.5,
+                              compressor=make_compressor("sign"))),
+            ("cpd_sgdm", dict(gamma=0.5,
+                              compressor=make_compressor("topk",
+                                                         fraction=0.25))),
+            ("mt_dsgdm", {})]:
+        opt_d = make_optimizer(name, DenseComm(ring(K), membership=ms),
+                               eta=0.05, mu=0.9, p=PP, **kw)
+        opt_s = make_optimizer(
+            name, ShardedComm(ring(K), axis_names=("w",), membership=ms),
+            eta=0.05, mu=0.9, p=PP, **kw)
+
+        # dense reference
+        pd_, sd = params0, opt_d.init(params0)
+        rd = jax.jit(lambda s, pp: opt_d.round(
+            s, pp, lambda p_, bt: gfn(p_, bt, b), batches))
+        for _ in range(R):
+            pd_, sd, _ = rd(sd, pd_)
+
+        # sharded run through the same script
+        with mesh:
+            sshape = jax.eval_shape(
+                opt_s.init, {"w": jax.ShapeDtypeStruct((1, D),
+                                                       jnp.float32)})
+            sspec = jax.tree_util.tree_map(
+                lambda l: P() if l.ndim == 0
+                else P("w", *([None] * (l.ndim - 1))), sshape)
+            ps_ = params0
+            ss = jax.jit(_smap(mesh)(opt_s.init, in_specs=(pspec,),
+                                     out_specs=sspec))(ps_)
+
+            def rnd(s, pp, bb):
+                return opt_s.round(
+                    s, pp, lambda p_, bt: gfn(p_, bt, bb), batches)
+
+            rs = jax.jit(_smap(mesh)(rnd,
+                                     in_specs=(sspec, pspec, P("w", None)),
+                                     out_specs=(pspec, sspec, P())))
+            for _ in range(R):
+                ps_, ss, _ = rs(ss, ps_, b)
+
+        for r in range(R):
+            check_round_matrix(opt_s.comm, r)
+        np.testing.assert_allclose(np.asarray(ps_["w"]),
+                                   np.asarray(pd_["w"]),
+                                   rtol=5e-6, atol=5e-6)
+        print(f"SHARDED_CHAOS_OK {name} {list(kw)}")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_chaos_matches_dense():
+    """The sharded (pruned-ppermute) elastic path tracks the dense masked
+    matrix reference parameter-for-parameter through a churn script with
+    kills, revivals and stragglers — CPD (sign + topk wires) and MT."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT_SHARDED], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert r.stdout.count("SHARDED_CHAOS_OK") == 3

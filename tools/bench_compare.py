@@ -18,6 +18,12 @@ row pattern                    derived key            tolerance
                                                       on shared runners)
 ``wire_codecs/*``              x_bf16                 |Δ|/baseline ≤ 2%
                                                       (deterministic bytes)
+``elastic/claim_survivors``    survivors_bounded      fresh ≥ baseline
+                                                      (0/1 flag: chaos run
+                                                      stays bounded)
+``elastic/claim_bytes``        bytes_saved_frac       |Δ|/baseline ≤ 2%
+                                                      (dead-edge accounting
+                                                      arithmetic)
 =============================  =====================  =====================
 
 A gated (row, key) present in a baseline but missing from the fresh run
@@ -46,6 +52,8 @@ import sys
 DEFAULT_GATES = [
     ("kernel_path/speedup_p*", "fused_vs_perstep_parity", "min_frac", 0.5),
     ("wire_codecs/*", "x_bf16", "rel_tol", 0.02),
+    ("elastic/claim_survivors", "survivors_bounded", "min_frac", 1.0),
+    ("elastic/claim_bytes", "bytes_saved_frac", "rel_tol", 0.02),
 ]
 
 
