@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 __all__ = ["ContractViolation", "require", "iter_eqns", "collective_eqns",
            "check_no_host_callbacks", "check_no_f64", "check_round_scan",
-           "check_gossip_boundary", "check_schedule_switch",
+           "check_gossip_boundary", "check_overlap_boundary",
+           "check_schedule_switch",
            "check_kernel_flatten_once", "check_membership_mask",
            "traced_mixing_matrix", "trace_round", "check_round_contract"]
 
@@ -182,6 +183,45 @@ def check_gossip_boundary(jaxpr, *, expected: Optional[int] = None,
     return out
 
 
+def check_overlap_boundary(jaxpr, *, p: int,
+                           expected: Optional[int] = None,
+                           allowed=("ppermute", "pmean", "psum")) -> List[str]:
+    """Overlapped-round contract: every collective is *issued before* the
+    p-step local scan — in program order the exchange precedes the first
+    scan of length p, proving the stale payload has no data dependence on
+    the round's local steps (the transfer can hide behind compute).  As
+    in the sync contract, collectives must sit at scan depth 0, only
+    expected kinds appear, and ``expected`` pins the ppermute count (the
+    wire is byte-identical to a sync round — only its timing moves)."""
+    out = []
+    seen_scan = False
+    n_perm = 0
+    for eqn, depth in iter_eqns(_closed(jaxpr)):
+        name = eqn.primitive.name
+        if name == "scan" and int(eqn.params.get("length", -1)) == p:
+            seen_scan = True
+        if name not in COLLECTIVE_PRIMS:
+            continue
+        if depth > 0:
+            out.append(f"collective `{name}` inside the round scan (depth "
+                       f"{depth}) at {_where(eqn)} — overlap gossip must be "
+                       "issued once at the round start")
+        elif seen_scan:
+            out.append(f"collective `{name}` after the local scan at "
+                       f"{_where(eqn)} — overlap requires every exchange "
+                       "issued before the p-step scan (scan-independent "
+                       "payload)")
+        if name not in allowed:
+            out.append(f"unexpected collective `{name}` at {_where(eqn)} "
+                       f"(allowed: {sorted(allowed)})")
+        if name == "ppermute":
+            n_perm += 1
+    if expected is not None and n_perm != expected:
+        out.append(f"expected {expected} ppermute(s) per overlap round, "
+                   f"found {n_perm}")
+    return out
+
+
 def traced_mixing_matrix(comm, r: int):
     """The (K, K) matrix the dense round-``r`` gossip *actually applies*,
     extracted by pushing identity probe leaves through ``comm.mix`` —
@@ -332,12 +372,16 @@ class _null_ctx:
 def check_round_contract(opt, params, *, kernel: bool = False,
                          schedule_period: Optional[int] = None,
                          expected_ppermutes: Optional[int] = None,
-                         dense: bool = True) -> List[str]:
+                         dense: bool = True,
+                         overlap: bool = False) -> List[str]:
     """Run every applicable jaxpr check on one optimizer round trace.
 
     ``dense=True`` (the DenseComm simulation) additionally requires zero
     collectives; sharded traces (built elsewhere, inside shard_map) pass
     ``dense=False`` with an ``expected_ppermutes`` count instead.
+    ``overlap=True`` swaps the boundary check for the overlapped-round
+    variant: collectives precede the p-step scan instead of following it
+    (dense overlap still requires zero collectives — stricter).
     """
     p = opt.config.p
     jx = trace_round(opt, params, p, kernel=kernel)
@@ -346,6 +390,8 @@ def check_round_contract(opt, params, *, kernel: bool = False,
     out += check_round_scan(jx, p)
     if dense:
         out += check_dense_no_collectives(jx)
+    elif overlap:
+        out += check_overlap_boundary(jx, p=p, expected=expected_ppermutes)
     else:
         out += check_gossip_boundary(jx, expected=expected_ppermutes)
     if schedule_period is not None:

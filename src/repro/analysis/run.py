@@ -39,22 +39,29 @@ Exit 0 = contract holds, 1 = violations (printed per combo).
 
 def _dense_grid(full: bool):
     from repro.core import make_compressor
+    # (optimizer, codec, use_kernel, overlap)
     grid = [
-        ("pd_sgdm", None, False),
-        ("pd_sgdm", None, True),
-        ("cpd_sgdm", "sign", True),
-        ("cpd_sgdm", "qsgd", False),
-        ("mt_dsgdm", None, False),
+        ("pd_sgdm", None, False, False),
+        ("pd_sgdm", None, True, False),
+        ("cpd_sgdm", "sign", True, False),
+        ("cpd_sgdm", "qsgd", False, False),
+        ("mt_dsgdm", None, False, False),
+        ("pd_sgdm", None, False, True),
+        ("mt_dsgdm", None, True, True),
     ]
     if full:
         grid += [
-            ("cpd_sgdm", "sign", False),
-            ("cpd_sgdm", "qsgd", True),
-            ("cpd_sgdm", "topk", False),
-            ("cpd_sgdm", "randk", False),
-            ("cpd_sgdm", "identity", False),
-            ("qg_dsgdm", None, False),
-            ("mt_dsgdm", None, True),
+            ("cpd_sgdm", "sign", False, False),
+            ("cpd_sgdm", "qsgd", True, False),
+            ("cpd_sgdm", "topk", False, False),
+            ("cpd_sgdm", "randk", False, False),
+            ("cpd_sgdm", "identity", False, False),
+            ("qg_dsgdm", None, False, False),
+            ("mt_dsgdm", None, True, False),
+            ("pd_sgdm", None, True, True),
+            ("mt_dsgdm", None, False, True),
+            ("qg_dsgdm", None, True, True),
+            ("cpd_sgdm", "sign", False, True),
         ]
     return grid
 
@@ -68,14 +75,16 @@ def phase_dense(full: bool) -> list:
     K = 8
     params = jc.toy_params(K)
     failures = []
-    for name, comp, kernel in _dense_grid(full):
+    for name, comp, kernel, overlap in _dense_grid(full):
         compressor = make_compressor(comp) if comp else None
         opt = make_optimizer(name, DenseComm(ring(K)), eta=0.05, mu=0.9,
                              p=3, compressor=compressor, use_kernel=kernel,
-                             kernel_interpret=True)
+                             kernel_interpret=True, overlap=overlap)
         kern = kernel and opt.kernel_comm_supported
-        label = f"dense/{name}/{comp or 'none'}/{'kernel' if kern else 'tree'}"
-        v = jc.check_round_contract(opt, params, kernel=kern)
+        label = (f"dense/{name}/{comp or 'none'}/"
+                 f"{'kernel' if kern else 'tree'}"
+                 + ("/overlap" if overlap else ""))
+        v = jc.check_round_contract(opt, params, kernel=kern, overlap=overlap)
         _report(label, v, failures)
 
     # scheduled dense rounds (stacked-W indexing; still zero collectives)
@@ -92,39 +101,50 @@ def phase_dense(full: bool) -> list:
     # aggregate when the backend carries a membership schedule)
     from repro.testing import chaos_script, membership_for
     ms = membership_for(K, 6, chaos_script(K, 6, seed=7))
-    for name, comp in ([("pd_sgdm", None)] if not full else
-                       [("pd_sgdm", None), ("cpd_sgdm", "sign"),
-                        ("mt_dsgdm", None)]):
+    for name, comp, overlap in (
+            [("pd_sgdm", None, False), ("pd_sgdm", None, True)] if not full
+            else [("pd_sgdm", None, False), ("cpd_sgdm", "sign", False),
+                  ("mt_dsgdm", None, False), ("pd_sgdm", None, True),
+                  ("mt_dsgdm", None, True)]):
         compressor = make_compressor(comp) if comp else None
         opt = make_optimizer(name, DenseComm(ring(K), membership=ms),
-                             eta=0.05, mu=0.9, p=3, compressor=compressor)
-        v = jc.check_round_contract(opt, params)
-        _report(f"dense/{name}/{comp or 'none'}/membership", v, failures)
+                             eta=0.05, mu=0.9, p=3, compressor=compressor,
+                             overlap=overlap)
+        v = jc.check_round_contract(opt, params, overlap=overlap)
+        _report(f"dense/{name}/{comp or 'none'}/membership"
+                + ("/overlap" if overlap else ""), v, failures)
     return failures
 
 
 def _sharded_grid(full: bool):
-    # (optimizer, codec, use_kernel, topology_schedule)
+    # (optimizer, codec, use_kernel, topology_schedule, overlap)
     grid = [
-        ("pd_sgdm", "sign", False, "static"),
-        ("pd_sgdm", "sign", True, "static"),
-        ("cpd_sgdm", "sign", False, "static"),
-        ("pd_sgdm", "sign", False, "one_peer_exp"),
+        ("pd_sgdm", "sign", False, "static", False),
+        ("pd_sgdm", "sign", True, "static", False),
+        ("cpd_sgdm", "sign", False, "static", False),
+        ("pd_sgdm", "sign", False, "one_peer_exp", False),
+        ("pd_sgdm", "sign", False, "static", True),
+        ("pd_sgdm", "sign", True, "static", True),
     ]
     if full:
         grid += [
-            ("cpd_sgdm", "sign", True, "static"),
-            ("cpd_sgdm", "qsgd", False, "static"),
-            ("cpd_sgdm", "topk", False, "static"),
-            ("cpd_sgdm", "randk", False, "static"),
-            ("mt_dsgdm", "sign", False, "static"),
-            ("pd_sgdm", "sign", False, "random_matching"),
-            ("pd_sgdm", "sign", True, "one_peer_exp"),
+            ("cpd_sgdm", "sign", True, "static", False),
+            ("cpd_sgdm", "qsgd", False, "static", False),
+            ("cpd_sgdm", "topk", False, "static", False),
+            ("cpd_sgdm", "randk", False, "static", False),
+            ("mt_dsgdm", "sign", False, "static", False),
+            ("pd_sgdm", "sign", False, "random_matching", False),
+            ("pd_sgdm", "sign", True, "one_peer_exp", False),
+            ("mt_dsgdm", "sign", False, "static", True),
+            ("mt_dsgdm", "sign", True, "static", True),
+            ("qg_dsgdm", "sign", False, "static", True),
+            ("pd_sgdm", "sign", False, "one_peer_exp", True),
+            ("cpd_sgdm", "sign", False, "static", True),   # must skip
         ]
     return grid
 
 
-def _build_pack(opt_name, codec, use_kernel, schedule):
+def _build_pack(opt_name, codec, use_kernel, schedule, overlap=False):
     from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
     from repro.configs.shapes import InputShape
     from repro.launch.mesh import make_debug_mesh
@@ -137,7 +157,7 @@ def _build_pack(opt_name, codec, use_kernel, schedule):
                                       topology_schedule=schedule),
                  optim=OptimCfg(name=opt_name, p=2, compressor=codec,
                                 use_kernel=use_kernel,
-                                kernel_interpret=True))
+                                kernel_interpret=True, overlap=overlap))
     mesh = make_debug_mesh(8, 1)   # 8 workers × TP1: per-device ≡ per-worker
     return build_train(run, mesh, InputShape("t", 16, 8, "train"))
 
@@ -147,11 +167,12 @@ def phase_sharded(full: bool) -> list:
     from repro.analysis import jaxpr_check as jc
 
     failures = []
-    for opt_name, codec, use_kernel, schedule in _sharded_grid(full):
+    for opt_name, codec, use_kernel, schedule, overlap in _sharded_grid(full):
         label = (f"sharded/{opt_name}/{codec}/"
-                 f"{'kernel' if use_kernel else 'tree'}/{schedule}")
+                 f"{'kernel' if use_kernel else 'tree'}/{schedule}"
+                 + ("/overlap" if overlap else ""))
         try:
-            pack = _build_pack(opt_name, codec, use_kernel, schedule)
+            pack = _build_pack(opt_name, codec, use_kernel, schedule, overlap)
         except ValueError as e:      # unsupported combo (e.g. CPD+schedule)
             print(f"  skip {label}: {e}")
             continue
@@ -168,7 +189,14 @@ def phase_sharded(full: bool) -> list:
                         else len(jax.tree_util.tree_leaves(
                             pack.params_struct)))
             expected = deg * n_arrays
-        v += jc.check_gossip_boundary(jx, expected=expected)
+        if overlap:
+            # same wire, moved to the round start: the exchange must
+            # precede the p-step scan (scan-independent payload), with
+            # the ppermute count unchanged from the sync contract
+            v += jc.check_overlap_boundary(jx, p=pack.opt.config.p,
+                                           expected=expected)
+        else:
+            v += jc.check_gossip_boundary(jx, expected=expected)
         if schedule != "static":
             v += jc.check_schedule_switch(jx, pack.opt.comm.period)
         with enable_x64():

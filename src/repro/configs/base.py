@@ -175,6 +175,15 @@ class OptimCfg:
     use_kernel: bool = False
     # force Pallas interpret mode on/off; None = auto (interpret off-TPU)
     kernel_interpret: Optional[bool] = None
+    # Communication-hiding overlapped rounds (`--overlap` in launch.train):
+    # the gossip payload of round r is exchanged during round r+1's local
+    # scan and mixed one round late (one-round-stale delayed mixing), so
+    # the interconnect transfer hides behind compute.  The in-flight
+    # payload rides the optimizer state (DelayedMixState) and is
+    # checkpointed — resume mid-overlap is bit-identical.  Unsupported
+    # combos (CPD-SGDM on the sharded backend / with use_kernel, MT-DSGDm
+    # compressed tracking, every-step baselines) raise at construction.
+    overlap: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -78,35 +78,46 @@ def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
                    mu: float = 0.9, p: int = 4, gamma: float = 0.4,
                    weight_decay: float = 0.0, compressor=None,
                    lr_schedule=None, use_kernel: bool = False,
-                   kernel_interpret: bool | None = None):
+                   kernel_interpret: bool | None = None,
+                   overlap: bool = False):
     """Factory used by configs / launchers / benchmarks."""
     name = name.lower().replace("-", "_")
+    if overlap and name in ("c_sgdm", "csgdm", "d_sgd", "dsgd",
+                            "choco_sgd", "chocosgd", "choco"):
+        raise ValueError(
+            f"{name}: overlap=True needs a periodic round to hide the "
+            "exchange behind (p > 1 local steps); every-step methods "
+            "(C-SGDM / D-SGD / CHOCO-SGD) have no local scan to overlap.")
     if name in ("pd_sgdm", "pdsgdm"):
         return PDSGDM(PDSGDMConfig(eta=eta, mu=mu, p=p,
                                    weight_decay=weight_decay,
                                    lr_schedule=lr_schedule,
                                    use_kernel=use_kernel,
-                                   kernel_interpret=kernel_interpret), comm)
+                                   kernel_interpret=kernel_interpret,
+                                   overlap=overlap), comm)
     if name in ("mt_dsgdm", "mtdsgdm", "mt"):
         return MTDSGDm(MTDSGDMConfig(eta=eta, mu=mu, p=p,
                                      weight_decay=weight_decay,
                                      lr_schedule=lr_schedule,
                                      use_kernel=use_kernel,
-                                     kernel_interpret=kernel_interpret),
+                                     kernel_interpret=kernel_interpret,
+                                     overlap=overlap),
                        comm, compressor)
     if name in ("qg_dsgdm", "qgdsgdm", "qg"):
         return QGDSGDm(QGDSGDMConfig(eta=eta, mu=mu, p=p,
                                      weight_decay=weight_decay,
                                      lr_schedule=lr_schedule,
                                      use_kernel=use_kernel,
-                                     kernel_interpret=kernel_interpret),
+                                     kernel_interpret=kernel_interpret,
+                                     overlap=overlap),
                        comm)
     if name in ("cpd_sgdm", "cpdsgdm"):
         return CPDSGDM(CPDSGDMConfig(eta=eta, mu=mu, p=p, gamma=gamma,
                                      weight_decay=weight_decay,
                                      lr_schedule=lr_schedule,
                                      use_kernel=use_kernel,
-                                     kernel_interpret=kernel_interpret),
+                                     kernel_interpret=kernel_interpret,
+                                     overlap=overlap),
                        comm, compressor)
     if name in ("c_sgdm", "csgdm"):
         K = comm.topology.n_workers
@@ -121,6 +132,10 @@ def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
     if name in ("d_sgd", "dsgd"):
         return d_sgd(eta, comm, weight_decay)
     if name in ("pd_sgd", "pdsgd"):
+        if overlap:
+            return PDSGDM(PDSGDMConfig(eta=eta, mu=0.0, p=p,
+                                       weight_decay=weight_decay,
+                                       overlap=True), comm)
         return pd_sgd(eta, p, comm, weight_decay)
     if name in ("choco_sgd", "chocosgd", "choco"):
         return choco_sgd(eta, gamma, comm, compressor, weight_decay)

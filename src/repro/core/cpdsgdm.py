@@ -76,6 +76,20 @@ class CPDSGDM(PDSGDM):
             self.codec = make_codec(self.compressor)
         except TypeError:                # custom operator without a codec
             self.codec = None
+        if config.overlap and isinstance(comm, ShardedComm):
+            raise ValueError(
+                "CPD-SGDM overlap=True is dense-only: the xhat_nbrs "
+                "error-compensation copies must stay bitwise consistent "
+                "with each owner's x̂ (Alg. 2 line 9), and a one-round-"
+                "stale consensus breaks that replica contract — a copy-"
+                "holder would mix a snapshot its owner has already moved "
+                "past.  Run overlap with PD/MT/QG on the sharded backend, "
+                "or CPD synchronously.")
+        if config.overlap and config.use_kernel:
+            raise ValueError(
+                "CPD-SGDM overlap=True does not compose with use_kernel: "
+                "the delayed consensus + codec wire run on the tree path "
+                "(dense simulation only).")
         if isinstance(comm, ShardedComm) and comm.topology.name == "complete":
             raise ValueError(
                 "CPD-SGDM sharded backend needs a shift-structured topology "
@@ -262,6 +276,56 @@ class CPDSGDM(PDSGDM):
                 new_state["xhat"], xhat)
 
         return params_new, new_state
+
+    # -- overlapped rounds (dense backend) --------------------------------------
+    # The in-flight payload is the x̂ snapshot cut after the previous
+    # round's error-compensation update (line 9): x̂ only moves at round
+    # boundaries, so the stale consensus γ(W̃·x̂_buf − x̂_buf) lands the
+    # same consensus mass as the synchronous line 6 — but the mix is
+    # issued at round start with no dependence on the round's compute, and
+    # under elastic membership the mask is the *delivery* round's
+    # (payload from a worker that died in flight is dropped with
+    # renormalization).  The q wire (lines 7-9) stays at the boundary: q
+    # encodes the round's own drift and cannot be issued early.
+    def overlap_begin(self, state):
+        mix = state["mix"]
+        r = self.round_index(state)
+        gate = (mix["phase"] > 0).astype(jnp.float32)
+        gamma = jnp.float32(self.config.gamma)
+        mixed = self.comm.stale_mix(mix["buf"], r=r)
+        dx = tmap(lambda mh, h: gamma * (mh - h) * gate, mixed, mix["buf"])
+        return {"dx": dx}
+
+    def overlap_apply(self, state, params, delta):
+        r = self.round_index(state)
+        xhat = state["xhat"]
+        params_new = tmap(
+            lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype),
+            params, delta["dx"])
+        diff = tmap(lambda x, h: x.astype(jnp.float32) - h,
+                    params_new, xhat)
+        new_state = dict(state)
+        if self._kernel_wire():
+            self._comm_kernel_wire(new_state, xhat, diff)
+        elif self._payload_wire():
+            self._comm_payload_wire(new_state, xhat, diff, r)
+        else:
+            q = self._apply_Q(diff, r)
+            new_state["xhat"] = tmap(
+                lambda h, qq: h + qq.astype(jnp.float32), xhat, q)
+        if self.comm.membership is not None:
+            cm = self._commit_at(r)
+            new_state["xhat"] = tmap(
+                lambda h_new, h_old: jnp.where(
+                    worker_mask_like(cm, h_new), h_new, h_old),
+                new_state["xhat"], xhat)
+        new_state["mix"] = self._snapshot_mix(new_state, params_new)
+        return params_new, new_state
+
+    def _snapshot_mix(self, state, params):
+        # the payload is x̂ (post line-9), not the params: line 6's
+        # consensus mixes x̂ copies
+        return {"buf": state["xhat"], "phase": jnp.ones((), jnp.int32)}
 
     # -- elastic membership round (sharded) -----------------------------------------
     def _comm_round_elastic_sharded(self, state, params, r):

@@ -106,6 +106,19 @@ class CommBackend:
             return np.asarray(top.W)   # host: introspection  # lint: allow
         return masked_matrix(top, act)
 
+    def effective_stale_matrix(self, r: int) -> np.ndarray:
+        """The K×K matrix the *overlapped* delivery of round ``r``'s payload
+        executes: round ``r``'s topology masked by the liveness of the
+        delivery round ``r+1`` — a payload from a worker that died while in
+        flight is dropped and its mass renormalized back to the receivers'
+        self-weight (dead receivers keep the identity row).  Equal to
+        :meth:`effective_matrix` without a membership schedule."""
+        top = self.topology_at(r)
+        act = self.active_at(r + 1)
+        if act.all():
+            return np.asarray(top.W)   # host: introspection  # lint: allow
+        return masked_matrix(top, act)
+
     def edges_per_worker(self, r: int = 0):
         """Mean directed exchanges per worker in round ``r``: the topology
         degree without membership (int — exact legacy accounting), else
@@ -119,6 +132,13 @@ class CommBackend:
         return active_edge_count(top, act) / top.n_workers
 
     def mix(self, tree, r=None):
+        raise NotImplementedError
+
+    def stale_mix(self, tree, r=None):
+        """Mix of a one-round-stale snapshot under round ``r``'s topology
+        and the *delivery* round's (``r+1``) liveness — the overlapped-round
+        counterpart of :meth:`mix` (see :meth:`effective_stale_matrix`).
+        Identical to ``mix`` without a membership schedule."""
         raise NotImplementedError
 
     def shift_views(self, tree) -> Dict[ShiftKey, object]:
@@ -181,9 +201,16 @@ class DenseComm(CommBackend):
                 act.append(a)
             self._Wm = jnp.asarray(np.stack(Wm), dtype=jnp.float32)
             self._act = jnp.asarray(np.stack(act))
+            # Overlapped delivery: round l's payload exchanged under the
+            # *next* round's liveness (a worker that died with a payload in
+            # flight drops out of the mix, renormalized) — same joint cycle.
+            self._Wov = jnp.asarray(
+                np.stack([self.effective_stale_matrix(l)
+                          for l in range(Lc)]), dtype=jnp.float32)
         else:
             self._Wm = None
             self._act = None
+            self._Wov = None
 
     def _W_at(self, r):
         if self.membership is not None:
@@ -217,8 +244,21 @@ class DenseComm(CommBackend):
         return self._act[jnp.mod(jnp.asarray(r), self._act.shape[0])]
 
     def mix(self, tree, r=None):
-        W = self._W_at(r)
+        return self._apply_W(self._W_at(r), tree)
 
+    def stale_mix(self, tree, r=None):
+        if self.membership is None:
+            return self.mix(tree, r=r)
+        if self._Wov.shape[0] == 1:
+            return self._apply_W(self._Wov[0], tree)
+        if r is None:
+            raise ValueError(
+                "DenseComm with a MembershipSchedule needs the round "
+                "index: stale_mix(tree, r=...)")
+        W = self._Wov[jnp.mod(jnp.asarray(r), self._Wov.shape[0])]
+        return self._apply_W(W, tree)
+
+    def _apply_W(self, W, tree):
         def _mix(leaf):
             K = leaf.shape[0]
             assert K == self.topology.n_workers, (
@@ -445,6 +485,22 @@ class ShardedComm(CommBackend):
         branches = [partial(self._mix_with, top)
                     for top in self.schedule.topologies]
         idx = jnp.mod(jnp.asarray(r, jnp.int32), self.period)
+        return jax.lax.switch(idx, branches, tree)
+
+    def stale_mix(self, tree, r=None):
+        if self.membership is None:
+            return self.mix(tree, r=r)
+        Lc = self.round_cycle
+        if Lc == 1:
+            return self._mix_with_masked(
+                self.topology_at(0), self.active_at(1), tree)
+        if r is None:
+            raise ValueError(
+                "ShardedComm with a MembershipSchedule needs the round "
+                "index: stale_mix(tree, r=...)")
+        branches = [partial(self._mix_with_masked, self.topology_at(l),
+                            self.active_at(l + 1)) for l in range(Lc)]
+        idx = jnp.mod(jnp.asarray(r, jnp.int32), Lc)
         return jax.lax.switch(idx, branches, tree)
 
     def shift_views(self, tree) -> Dict[ShiftKey, object]:

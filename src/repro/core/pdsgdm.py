@@ -48,6 +48,17 @@ class PDSGDMConfig:
     # None → repro.kernels.default_interpret() (interpret off-TPU); tests
     # and benchmarks may force it either way.
     kernel_interpret: Optional[bool] = None
+    # Communication-hiding overlapped rounds: the gossip payload of round r
+    # is snapshotted at the end of round r's local scan, its exchange is
+    # issued at the *start* of round r+1 (the collective has no data
+    # dependence on round r+1's compute, so the interconnect transfer hides
+    # behind the local scan), and the mixing correction lands one round
+    # late — x ← x + (W·x̃ − x̃) applied to the drifted params at the end
+    # of round r+1.  The in-flight snapshot + staleness phase ride the
+    # optimizer state as ``DelayedMixState`` (state["mix"]), so checkpoint
+    # resume mid-overlap is bit-identical.  Bytes per round are unchanged:
+    # still exactly one payload exchange per round.
+    overlap: bool = False
 
     def lr(self, step):
         if self.lr_schedule is None:
@@ -73,10 +84,33 @@ class PDSGDM:
 
     # -- state ---------------------------------------------------------------
     def init(self, params):
-        return {
+        state = {
             "m": _tree_map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.config.overlap:
+            state["mix"] = self._delayed_mix_init(params)
+        return state
+
+    # -- DelayedMixState (overlap=True) ---------------------------------------
+    # The in-flight gossip payload: ``buf`` is the f32 snapshot taken at the
+    # end of the previous round's local scan (what the neighbours are
+    # receiving *now*), ``phase`` is the staleness phase — 0 before any
+    # payload has been cut (round 0 executes the exchange but gates the
+    # correction to an exact no-op), 1 once a payload is in flight.
+    def _delayed_mix_init(self, params):
+        return {
+            "buf": _tree_map(lambda x: x.astype(jnp.float32), params),
+            "phase": jnp.zeros((), jnp.int32),
+        }
+
+    # delta-tree keys produced by overlap_begin (MT adds the tracking
+    # correction "dc"); the runtime builds shard_map specs from these
+    overlap_delta_keys: tuple = ("dx",)
+    # whether overlap_step_refresh does anything (MT drips the stale
+    # tracking correction into every local step; everyone else skips the
+    # per-step hook entirely)
+    overlap_refreshes: bool = False
 
     # -- local computation (Alg. 1 lines 2-4) ---------------------------------
     def local_step(self, state, params, grads):
@@ -140,15 +174,72 @@ class PDSGDM:
             state, params)
         return params, state
 
+    # -- overlapped rounds: one-round-stale delayed mixing ----------------------
+    def overlap_begin(self, state):
+        """Issue the in-flight payload's exchange and form the delayed-mix
+        correction — the only collectives in an overlapped round, with no
+        data dependence on the round's local scan (communication hiding).
+
+        Evaluated at round start, ``round_index(state)`` *is* the payload's
+        round r (step = (r+1)·p), so time-varying topologies key on the
+        payload round while the membership mask keys on the delivery round
+        r+1 inside ``stale_mix``.  ``phase == 0`` (nothing in flight yet)
+        gates the correction to exact zero; the exchange still runs so one
+        trace and one byte pattern serve every round.
+        """
+        mix = state["mix"]
+        r = self.round_index(state)
+        gate = (mix["phase"] > 0).astype(jnp.float32)
+        mixed = self.comm.stale_mix(mix["buf"], r=r)
+        dx = _tree_map(lambda mb, b: (mb - b) * gate, mixed, mix["buf"])
+        return {"dx": dx}
+
+    def overlap_step_refresh(self, state, delta):
+        """Per-local-step refresh from the in-flight payload (no-op here;
+        MT-DSGDm drips its stale tracking correction through this hook)."""
+        return state
+
+    def overlap_apply(self, state, params, delta):
+        """Land the one-round-stale correction on the drifted params at the
+        round's end, then cut the next payload (snapshot + phase=1)."""
+        params_new = _tree_map(
+            lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype),
+            params, delta["dx"])
+        new_state = dict(state)
+        new_state["mix"] = self._snapshot_mix(new_state, params_new)
+        return params_new, new_state
+
+    def _snapshot_mix(self, state, params):
+        return {
+            "buf": _tree_map(lambda x: x.astype(jnp.float32), params),
+            "phase": jnp.ones((), jnp.int32),
+        }
+
     # -- full iteration ---------------------------------------------------------
     def step(self, state, params, grads):
+        if self.config.overlap:
+            # Per-step form of the overlapped round (debugging / off-round
+            # resume).  The correction depends only on the in-flight buf,
+            # so recomputing it each step is value-identical to the fused
+            # round's single round-start computation — the per-step path
+            # continues a mid-overlap checkpoint bit-identically.
+            delta = self.overlap_begin(state)
+            params, state = self.local_step(state, params, grads)
+            state = self.overlap_step_refresh(state, delta)
+            params, state = jax.lax.cond(
+                self.is_comm_step(state),
+                lambda s, p: self.overlap_apply(s, p, delta),
+                lambda s, p: (p, s),
+                state, params)
+            return params, state
         params, state = self.local_step(state, params, grads)
         params, state = self.maybe_communicate(state, params)
         return params, state
 
     # -- fused round (the canonical hot path) -----------------------------------
     def round(self, state, params, grads_fn, batches, *,
-              local_step=None, comm_round=None, gossip=True):
+              local_step=None, comm_round=None, gossip=True,
+              overlap_begin=None, overlap_apply=None, overlap_refresh=None):
         """One whole round, fused: ``lax.scan`` of p local steps then exactly
         one unconditional gossip round — no per-step ``lax.cond``, no per-step
         Python dispatch.
@@ -163,17 +254,51 @@ class PDSGDM:
         With ``use_kernel`` and no injected overrides the round executes on
         the flatten-once Pallas layout instead (:meth:`kernel_round`).
 
+        With ``overlap`` the round takes the delayed-mixing form instead:
+        the in-flight payload's exchange is issued at round *start*
+        (``overlap_begin``), the p-step scan runs with no data dependence
+        on it (MT's per-step refresh excepted), and the stale correction
+        lands after the scan (``overlap_apply``), which also cuts the next
+        round's payload.  ``overlap_begin``/``overlap_refresh``/
+        ``overlap_apply`` are injectable exactly like ``local_step``/
+        ``comm_round`` (the sharded runtime passes shard_mapped versions).
+
         Returns ``(params, state, losses)`` with ``losses`` stacked over the
         p local steps.
         """
         if (self.config.use_kernel and local_step is None
-                and comm_round is None):
+                and comm_round is None and overlap_begin is None
+                and overlap_apply is None):
             return self.kernel_round(state, params, grads_fn, batches,
                                      gossip=gossip)
         if local_step is None:
             local_step = self.local_step
         if comm_round is None:
             comm_round = self.comm_round
+
+        if self.config.overlap:
+            if overlap_begin is None:
+                overlap_begin = self.overlap_begin
+            if overlap_apply is None:
+                overlap_apply = self.overlap_apply
+            if overlap_refresh is None and self.overlap_refreshes:
+                overlap_refresh = self.overlap_step_refresh
+            delta = overlap_begin(state) if (gossip or overlap_refresh) \
+                else None
+
+            def body(carry, batch):
+                params, state = carry
+                loss, grads = grads_fn(params, batch)
+                params, state = local_step(state, params, grads)
+                if overlap_refresh is not None:
+                    state = overlap_refresh(state, delta)
+                return (params, state), loss
+
+            (params, state), losses = jax.lax.scan(body, (params, state),
+                                                   batches)
+            if gossip:
+                params, state = overlap_apply(state, params, delta)
+            return params, state, losses
 
         def body(carry, batch):
             params, state = carry
@@ -196,12 +321,20 @@ class PDSGDM:
 
     def mat_state(self, plan, state) -> dict:
         """Flatten the per-element optimizer state trees into kernel mats."""
-        return {"m": plan.flatten(state["m"])}
+        mats = {"m": plan.flatten(state["m"])}
+        if self.config.overlap:
+            mats["mix_buf"] = plan.flatten(state["mix"]["buf"])
+        return mats
 
     def unmat_state(self, plan, mats, state, step) -> dict:
         new_state = dict(state)
         new_state["m"] = plan.unflatten(mats["m"], dtype=jnp.float32)
         new_state["step"] = step
+        if self.config.overlap:
+            new_state["mix"] = {
+                **state["mix"],
+                "buf": plan.unflatten(mats["mix_buf"], dtype=jnp.float32),
+            }
         return new_state
 
     def local_step_mat(self, x_mat, mats, g_mat, step):
@@ -261,7 +394,7 @@ class PDSGDM:
                     views.append(y)
                 elif u is not None and u < y.shape[-2]:
                     views.append(plan.pad_wire(
-                        self._shift_view_mat(y[..., :u, :], ax, sh)))
+                        self._shift_view_mat(plan.wire(y), ax, sh)))
                 else:
                     views.append(self._shift_view_mat(y, ax, sh))
                 weights.append(w)
@@ -274,8 +407,44 @@ class PDSGDM:
         CPD-SGDM's override feeds it to the sign kernel)."""
         return self._gossip_mat(x_mat, r, plan=plan), mats
 
+    # -- overlapped rounds on the kernel layout ---------------------------------
+    def _stale_gossip_mat(self, x_mat, r, *, plan=None):
+        """Stale mix on the kernel matrix.  Static full-membership graphs
+        reuse the shift-structured AXPY wire (stale ≡ regular there: no
+        membership mask to shift by one round); elastic/scheduled comms
+        route through ``comm.stale_mix`` on the matrix, which keys the
+        membership mask on the delivery round r+1."""
+        if self._mat_wire_static():
+            return self._gossip_mat(x_mat, r, plan=plan)
+        return self.comm.stale_mix(x_mat, r=r)
+
+    def overlap_begin_mat(self, mats, r, gate, *, plan=None):
+        """Matrix-domain ``overlap_begin``: issue the in-flight payload's
+        exchange and form the stale correction, gated by the staleness
+        phase (``gate`` is a traced f32 scalar, folded by multiply because
+        the fused AXPY kernel takes static weights)."""
+        buf = mats["mix_buf"]
+        mixed = self._stale_gossip_mat(buf, r, plan=plan)
+        return {"dx": (mixed - buf) * gate}
+
+    def overlap_refresh_mat(self, mats, delta):
+        """Per-local-step refresh on the kernel layout (no-op here; MT's
+        override drips the stale tracking correction)."""
+        return mats
+
+    def overlap_apply_mat(self, x_mat, mats, delta, r):
+        """Land the stale correction matrix-to-matrix (fused AXPY), then
+        cut the next payload by snapshotting the mixed matrix.  ``r`` is
+        the landing round (QG's override keys its LR normalizer on it)."""
+        from repro.kernels import ops as kops
+        x_new = kops.delayed_mix_mat(x_mat, delta["dx"],
+                                     interpret=self.config.kernel_interpret)
+        return x_new, {**mats, "mix_buf": x_new}
+
     def kernel_round(self, state, params, grads_fn, batches, *, gossip=True,
-                     local_step_mat=None, comm_round_mat=None):
+                     local_step_mat=None, comm_round_mat=None,
+                     overlap_begin_mat=None, overlap_apply_mat=None,
+                     overlap_refresh_mat=None):
         """The fused round on the flatten-once kernel layout.
 
         Params and the per-element state trees are flattened into the
@@ -299,6 +468,45 @@ class PDSGDM:
                                                plan=plan)
         x_mat = plan.flatten(params)
         mats = self.mat_state(plan, state)
+
+        if self.config.overlap:
+            if not self.kernel_comm_supported:
+                raise ValueError(
+                    "overlap=True on the kernel path requires matrix-domain "
+                    "gossip (kernel_comm_supported)")
+            if overlap_begin_mat is None:
+                overlap_begin_mat = functools.partial(self.overlap_begin_mat,
+                                                      plan=plan)
+            if overlap_apply_mat is None:
+                overlap_apply_mat = self.overlap_apply_mat
+            if overlap_refresh_mat is None and self.overlap_refreshes:
+                overlap_refresh_mat = self.overlap_refresh_mat
+            # round start: step = (r+1)·p, so r below is the payload round
+            r = state["step"] // self.config.p - 1
+            gate = (state["mix"]["phase"] > 0).astype(jnp.float32)
+            delta = overlap_begin_mat(mats, r, gate)
+
+            def body(carry, batch):
+                x_mat, mats, step = carry
+                loss, grads = grads_fn(plan.unflatten(x_mat), batch)
+                x_mat, mats = local_step_mat(x_mat, mats,
+                                             plan.flatten(grads), step)
+                if overlap_refresh_mat is not None:
+                    mats = overlap_refresh_mat(mats, delta)
+                return (x_mat, mats, step + 1), loss
+
+            (x_mat, mats, step), losses = jax.lax.scan(
+                body, (x_mat, mats, state["step"]), batches)
+            if gossip:
+                x_mat, mats = overlap_apply_mat(x_mat, mats, delta,
+                                                step // self.config.p - 1)
+            params = plan.unflatten(x_mat)
+            state = self.unmat_state(plan, mats, state, step)
+            if gossip:
+                state = dict(state)
+                state["mix"] = {**state["mix"],
+                                "phase": jnp.ones((), jnp.int32)}
+            return params, state, losses
 
         def body(carry, batch):
             x_mat, mats, step = carry

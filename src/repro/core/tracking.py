@@ -102,6 +102,13 @@ class MTDSGDm(PDSGDM):
         super().__init__(config, comm)
         self.compressor = compressor
         self.codec = make_codec(compressor) if compressor is not None else None
+        if self.codec is not None and config.overlap:
+            raise ValueError(
+                "MT-DSGDm compressed tracking does not compose with "
+                "overlap=True: the in-flight correction payload would need "
+                "a second codec wire per round.  Drop the compressor "
+                "(full-precision c overlaps on both backends) or run "
+                "synchronous rounds.")
         if self.codec is not None and isinstance(comm, ShardedComm):
             if comm.topology.name == "complete":
                 raise ValueError(
@@ -168,6 +175,51 @@ class MTDSGDm(PDSGDM):
         new_state["g_prev"] = g32
         new_state["step"] = state["step"] + 1
         return new_params, new_state
+
+    # -- overlapped rounds: staleness-refreshed tracking ------------------------
+    # The divergence mechanism at large p is correction aging: c is only
+    # re-synchronized at round boundaries, so late in a long round every
+    # worker descends along a correction that is up to p steps stale.
+    # Overlap turns the one-round-stale mix into a cure instead: the stale
+    # tracking delta dc = W̃·c̃ − c̃ (formed at round start from the
+    # in-flight payload, no data dependence on this round's compute) is
+    # dripped into c as dc/p after *every* local step, so the correction is
+    # refreshed mid-round instead of frozen — restoring stability at p ≥ 4.
+    # Each drip preserves the tracking invariant: under doubly-stochastic
+    # W̃, mean_k(dc⁽ᵏ⁾) = 0, so mean(c) = mean(ĝ) holds at every step.
+    overlap_delta_keys: tuple = ("dx", "dc")
+    overlap_refreshes: bool = True
+
+    def _delayed_mix_init(self, params):
+        mix = super()._delayed_mix_init(params)
+        # c₀ = 0 → the first in-flight correction payload is zero too
+        mix["buf_c"] = tmap(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), params)
+        return mix
+
+    def overlap_begin(self, state):
+        mix = state["mix"]
+        r = self.round_index(state)
+        gate = (mix["phase"] > 0).astype(jnp.float32)
+        mixed_x = self.comm.stale_mix(mix["buf"], r=r)
+        mixed_c = self.comm.stale_mix(mix["buf_c"], r=r)
+        return {
+            "dx": tmap(lambda mb, b: (mb - b) * gate, mixed_x, mix["buf"]),
+            "dc": tmap(lambda mc, c: (mc - c) * gate, mixed_c,
+                       mix["buf_c"]),
+        }
+
+    def overlap_step_refresh(self, state, delta):
+        inv_p = jnp.float32(1.0 / self.config.p)
+        new_state = dict(state)
+        new_state["c"] = tmap(lambda c, d: c + inv_p * d,
+                              state["c"], delta["dc"])
+        return new_state
+
+    def _snapshot_mix(self, state, params):
+        mix = super()._snapshot_mix(state, params)
+        mix["buf_c"] = state["c"]
+        return mix
 
     # -- communication: gossip (x, c) ------------------------------------------
     def _quantized_c(self, c, r):
@@ -321,6 +373,8 @@ class MTDSGDm(PDSGDM):
         mats = super().mat_state(plan, state)
         mats["c"] = plan.flatten(state["c"])
         mats["g_prev"] = plan.flatten(state["g_prev"])
+        if self.config.overlap:
+            mats["mix_buf_c"] = plan.flatten(state["mix"]["buf_c"])
         return mats
 
     def unmat_state(self, plan, mats, state, step) -> dict:
@@ -328,7 +382,33 @@ class MTDSGDm(PDSGDM):
         new_state["c"] = plan.unflatten(mats["c"], dtype=jnp.float32)
         new_state["g_prev"] = plan.unflatten(mats["g_prev"],
                                              dtype=jnp.float32)
+        if self.config.overlap:
+            new_state["mix"] = {
+                **new_state["mix"],
+                "buf_c": plan.unflatten(mats["mix_buf_c"],
+                                        dtype=jnp.float32),
+            }
         return new_state
+
+    def overlap_begin_mat(self, mats, r, gate, *, plan=None):
+        delta = super().overlap_begin_mat(mats, r, gate, plan=plan)
+        buf_c = mats["mix_buf_c"]
+        mixed_c = self._stale_gossip_mat(buf_c, r, plan=plan)
+        delta["dc"] = (mixed_c - buf_c) * gate
+        return delta
+
+    def overlap_refresh_mat(self, mats, delta):
+        """Drip the stale tracking delta (fused AXPY with the static 1/p
+        weight — the drip count per round is the static period)."""
+        from repro.kernels import ops as kops
+        c_new = kops.gossip_mix_mat((mats["c"], delta["dc"]),
+                                    (1.0, 1.0 / self.config.p),
+                                    interpret=self.config.kernel_interpret)
+        return {**mats, "c": c_new}
+
+    def overlap_apply_mat(self, x_mat, mats, delta, r):
+        x_new, mats = super().overlap_apply_mat(x_mat, mats, delta, r)
+        return x_new, {**mats, "mix_buf_c": mats["c"]}
 
     def local_step_mat(self, x_mat, mats, g_mat, step):
         """Tracking update as a fused Pallas AXPY, then the momentum
@@ -486,6 +566,29 @@ class QGDSGDm(PDSGDM):
         new_state["xprev"] = tmap(lambda x: x.astype(jnp.float32), mixed)
         return mixed, new_state
 
+    # -- overlapped rounds ------------------------------------------------------
+    # The stale correction lands on the drifted params at round end; the
+    # quasi-global buffer then folds the realized round displacement
+    # (xprev − x_new)/(ηp) exactly as in the synchronous form — on round 0
+    # (gate 0, nothing in flight) d_hat degrades to the local round
+    # displacement, mirroring the elastic-straggler semantics above.
+    def overlap_apply(self, state, params, delta):
+        cfg = self.config
+        mu = jnp.float32(cfg.mu)
+        r = self.round_index(state)
+        x32 = tmap(lambda x, d: x.astype(jnp.float32) + d,
+                   params, delta["dx"])
+        inv = jnp.float32(1.0) / (self._round_lr(r) * jnp.float32(cfg.p))
+        new_state = dict(state)
+        new_state["m"] = tmap(
+            lambda m, xp, xn: mu * m + (jnp.float32(1.0) - mu)
+            * (xp - xn) * inv,
+            state["m"], state["xprev"], x32)
+        new_state["xprev"] = x32
+        params_new = tmap(lambda x32_, x: x32_.astype(x.dtype), x32, params)
+        new_state["mix"] = self._snapshot_mix(new_state, params_new)
+        return params_new, new_state
+
     # -- kernel round ----------------------------------------------------------
     def mat_state(self, plan, state) -> dict:
         mats = super().mat_state(plan, state)
@@ -516,3 +619,15 @@ class QGDSGDm(PDSGDM):
         d_hat = (mats["xprev"] - x_new) * inv
         m_new = mu * mats["m"] + (jnp.float32(1.0) - mu) * d_hat
         return x_new, {**mats, "m": m_new, "xprev": x_new}
+
+    def overlap_apply_mat(self, x_mat, mats, delta, r):
+        from repro.kernels import ops as kops
+        cfg = self.config
+        mu = jnp.float32(cfg.mu)
+        x_new = kops.delayed_mix_mat(x_mat, delta["dx"],
+                                     interpret=cfg.kernel_interpret)
+        inv = jnp.float32(1.0) / (self._round_lr(r) * jnp.float32(cfg.p))
+        d_hat = (mats["xprev"] - x_new) * inv
+        m_new = mu * mats["m"] + (jnp.float32(1.0) - mu) * d_hat
+        return x_new, {**mats, "m": m_new, "xprev": x_new,
+                       "mix_buf": x_new}

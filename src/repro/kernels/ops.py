@@ -117,6 +117,17 @@ class KernelPlan:
         width[-2] = (0, self.rows - mat.shape[-2])
         return jnp.pad(mat, width)
 
+    def wire(self, mat) -> jnp.ndarray:
+        """Slice a kernel matrix to the ``used_rows`` wire extent before a
+        neighbour exchange (inverse of :meth:`pad_wire`).  Identity when
+        the block-alignment tail is empty.  The tail is zero on every
+        worker and row-local mixing keeps it zero, so the slice is exact —
+        overlapped rounds ship their in-flight payload through the same
+        extent, keeping stale and synchronous bytes identical."""
+        if self.used_rows >= self.rows:
+            return mat
+        return mat[..., :self.used_rows, :]
+
     def row_counts(self) -> jnp.ndarray:
         """(rows, 1) f32: valid elements per row (the sign-scale divisor)."""
         c = np.zeros((self.rows,), np.float32)
@@ -194,6 +205,16 @@ def gossip_mix_mat(mats, weights, *, interpret: bool | None = None):
                         weights=tuple(float(w) for w in weights),
                         interpret=interpret)
     return out.reshape(shape)
+
+
+def delayed_mix_mat(x_mat, dx_mat, *, interpret: bool | None = None):
+    """Land an overlapped round's one-round-stale gossip correction
+    matrix-to-matrix on the flatten-once layout: ``x + dx`` as the fused
+    W-row AXPY, where ``dx = gate·(W̃·buf − buf)`` was formed at round
+    start from the in-flight payload.  The staleness gate is folded into
+    ``dx`` by an elementwise multiply because the AXPY kernel's weights
+    must stay static floats."""
+    return gossip_mix_mat((x_mat, dx_mat), (1.0, 1.0), interpret=interpret)
 
 
 def sign_pack(x_mat, counts=None, *, interpret: bool | None = None):

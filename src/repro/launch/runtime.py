@@ -164,7 +164,8 @@ def _make_optimizer(run: RunCfg, comm):
     return make_optimizer(
         o.name, comm, eta=o.eta, mu=o.mu, p=o.p, gamma=o.gamma,
         weight_decay=o.weight_decay, compressor=comp,
-        use_kernel=o.use_kernel, kernel_interpret=o.kernel_interpret)
+        use_kernel=o.use_kernel, kernel_interpret=o.kernel_interpret,
+        overlap=o.overlap)
 
 
 # --------------------------------------------------------------------------- train
@@ -268,12 +269,59 @@ def build_train(run: RunCfg, mesh, shape: InputShape,
                                in_specs=(mspec, mspec, P(), P()),
                                out_specs=(mspec, mspec))
 
+        if run.optim.overlap:
+            # overlapped rounds: the in-flight payload's exchange (the only
+            # collective) is shard_mapped at round *start*; the stale
+            # correction lands matrix-to-matrix after the scan.
+            ob_mat_sh = smap(functools.partial(opt.overlap_begin_mat,
+                                               plan=plan),
+                             in_specs=(mspec, P(), P()), out_specs=mspec)
+            oa_mat_sh = smap(opt.overlap_apply_mat,
+                             in_specs=(mspec, mspec, mspec, P()),
+                             out_specs=(mspec, mspec))
+            orf_mat_sh = (smap(opt.overlap_refresh_mat,
+                               in_specs=(mspec, mspec), out_specs=mspec)
+                          if opt.overlap_refreshes else None)
+
+            def train_round(params, state, batches):
+                """Overlapped round on the kernel layout: exchange issued
+                at round start, p momentum steps, stale mix landed."""
+                return opt.kernel_round(
+                    state, params, gfn, batches,
+                    local_step_mat=opt_local_mat_sh,
+                    comm_round_mat=opt_comm_mat_sh,
+                    overlap_begin_mat=ob_mat_sh,
+                    overlap_apply_mat=oa_mat_sh,
+                    overlap_refresh_mat=orf_mat_sh)
+        else:
+            def train_round(params, state, batches):
+                """p momentum steps + one gossip, all on the kernel
+                layout."""
+                return opt.kernel_round(
+                    state, params, gfn, batches,
+                    local_step_mat=opt_local_mat_sh,
+                    comm_round_mat=opt_comm_mat_sh)
+    elif run.optim.overlap:
+        dspec = {k: pspec for k in opt.overlap_delta_keys}
+        ob_sh = smap(opt.overlap_begin, in_specs=(sspec,), out_specs=dspec)
+        oa_sh = smap(opt.overlap_apply,
+                     in_specs=(sspec, pspec, dspec),
+                     out_specs=(pspec, sspec))
+        orf_sh = (smap(opt.overlap_step_refresh, in_specs=(sspec, dspec),
+                       out_specs=sspec)
+                  if opt.overlap_refreshes else None)
+
         def train_round(params, state, batches):
-            """p momentum steps + one gossip, all on the kernel layout."""
-            return opt.kernel_round(
+            """Overlapped round: the in-flight payload's gossip (the only
+            ppermutes) issues at round start with no data dependence on
+            the p-step scan; the one-round-stale correction lands at the
+            round's end (``opt.round`` owns the structure, the optimizer
+            calls are shard_mapped exactly like the synchronous path)."""
+            return opt.round(
                 state, params, gfn, batches,
-                local_step_mat=opt_local_mat_sh,
-                comm_round_mat=opt_comm_mat_sh)
+                local_step=lambda s, p_, g: opt_local_sh(p_, s, g),
+                overlap_begin=ob_sh, overlap_apply=oa_sh,
+                overlap_refresh=orf_sh)
     else:
         def train_round(params, state, batches):
             """p local momentum steps then exactly one gossip round.
@@ -330,6 +378,12 @@ def _state_spec(state_struct, pspec):
                 out[k] = like
             elif k == "xhat_nbrs":
                 out[k] = {kk: like for kk in v}
+            elif k == "mix":
+                # DelayedMixState (overlap=True): in-flight payload trees
+                # (buf, MT's buf_c) mirror params; the staleness phase is a
+                # replicated scalar
+                out[k] = {kk: (P() if kk == "phase" else like)
+                          for kk in v}
             else:
                 raise KeyError(k)
         return out

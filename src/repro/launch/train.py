@@ -29,6 +29,12 @@ def main():
                     help="run the fused round on the flatten-once Pallas "
                          "kernel layout (recommended on TPU; interpret "
                          "mode — the correctness harness — on CPU)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="communication-hiding overlapped rounds: exchange "
+                         "round r's gossip payload during round r+1's "
+                         "local scan and mix it one round late (stale "
+                         "delayed mixing; unsupported optimizer combos "
+                         "raise at construction)")
     ap.add_argument("--compressor", default=None,
                     help="cpd_sgdm/choco wire codec: "
                          "identity|sign|topk|randk|qsgd")
@@ -81,6 +87,8 @@ def main():
         optim = dataclasses.replace(optim, eta=args.eta)
     if args.use_kernel:
         optim = dataclasses.replace(optim, use_kernel=True)
+    if args.overlap:
+        optim = dataclasses.replace(optim, overlap=True)
     if args.compressor:
         optim = dataclasses.replace(optim, compressor=args.compressor)
     if args.compressor_fraction is not None:
@@ -114,6 +122,7 @@ def main():
     n_w = pack.layout.n_workers
     print(f"arch={args.arch} optimizer={optim.name} p={optim.p} "
           f"workers={n_w} kernel={optim.use_kernel} "
+          f"overlap={optim.overlap} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     def batch_fn(t):

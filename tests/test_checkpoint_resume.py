@@ -36,8 +36,16 @@ _OPTIMIZERS = [
     ("mt_dsgdm", {"compressor": make_compressor("sign")},
      {"m", "step", "c", "g_prev"}),
     ("qg_dsgdm", {}, {"m", "step", "xprev"}),
+    # overlap=True grows the DelayedMixState tree (in-flight payload +
+    # staleness phase) — it must checkpoint like any other state entry
+    ("pd_sgdm", {"overlap": True}, {"m", "step", "mix"}),
+    ("mt_dsgdm", {"overlap": True}, {"m", "step", "c", "g_prev", "mix"}),
+    ("qg_dsgdm", {"overlap": True}, {"m", "step", "xprev", "mix"}),
+    ("cpd_sgdm", {"gamma": 0.5, "compressor": make_compressor("identity"),
+                  "overlap": True}, {"m", "step", "xhat", "mix"}),
 ]
-_OPT_IDS = ["pd", "cpd", "mt", "mt_compressed", "qg"]
+_OPT_IDS = ["pd", "cpd", "mt", "mt_compressed", "qg",
+            "pd_overlap", "mt_overlap", "qg_overlap", "cpd_overlap"]
 
 
 def _dense_opt(name, kw):
@@ -55,9 +63,17 @@ def test_checkpoint_roundtrip_all_optimizers(tmp_path, name, kw, keys):
     assert set(state) == keys, f"{name}: state keys drifted: {set(state)}"
     # make every leaf non-trivial so equality is meaningful
     g = {"w": jnp.ones((8, 12)) * 0.1}
-    for _ in range(3):
-        params, state = opt.step(state, params, g)
-    params, state = opt.comm_round(state, params)
+    if kw.get("overlap"):
+        # the per-step overlap path embeds the exchange at comm steps:
+        # 4 steps = 2 rounds, leaving a non-trivial in-flight payload
+        # (phase armed) in state["mix"]
+        for _ in range(4):
+            params, state = opt.step(state, params, g)
+        assert int(state["mix"]["phase"]) == 1
+    else:
+        for _ in range(3):
+            params, state = opt.step(state, params, g)
+        params, state = opt.comm_round(state, params)
     ckpt.save(str(tmp_path), 3, params=params, opt_state=state)
     out = ckpt.restore(str(tmp_path), 3, {
         "params": jax.eval_shape(lambda: params),
@@ -75,6 +91,13 @@ def test_state_spec_covers_every_state_key(name, kw, keys):
     """``runtime._state_spec`` raises KeyError on any state entry it has
     no sharding rule for — run it over every family's sharded state tree
     (the sharded CPD state includes ``xhat_nbrs``)."""
+    if name == "cpd_sgdm" and kw.get("overlap"):
+        # the config-validation contract: CPD overlap is dense-only (the
+        # x̂_nbrs replica copies break under a stale consensus)
+        with pytest.raises(ValueError, match="dense-only"):
+            make_optimizer(name, ShardedComm(ring(8), axis_names=("w",)),
+                           eta=0.05, mu=0.9, p=2, **kw)
+        return
     opt = make_optimizer(name, ShardedComm(ring(8), axis_names=("w",)),
                          eta=0.05, mu=0.9, p=2, **kw)
     params = {"w": jax.ShapeDtypeStruct((1, 12), jnp.float32)}
@@ -85,6 +108,13 @@ def test_state_spec_covers_every_state_key(name, kw, keys):
         if k == "step":
             continue
         sub = spec[k]
+        if k == "mix":
+            # payload trees shard like params; the phase scalar replicates
+            assert set(sub) == set(state_struct[k])
+            for kk, leaf in sub.items():
+                if kk != "phase":
+                    assert leaf == {"w": "PSPEC"}
+            continue
         leaves = (sub.values() if k == "xhat_nbrs" else [sub])
         for leaf in leaves:
             assert leaf == {"w": "PSPEC"} or leaf["w"] == "PSPEC"
@@ -272,6 +302,60 @@ _SCRIPT_RESUME_MT = textwrap.dedent("""
 """)
 
 
+_SCRIPT_RESUME_OVERLAP = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+    from repro.train.trainer import ShardedTrainer
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    # overlap=True: the checkpoint at step 4 (a round boundary) carries a
+    # LIVE in-flight payload — state["mix"]["buf"] is the round-2 snapshot
+    # whose exchange lands in round 3.  Kill/restore there must continue
+    # bit-identically: a resume that dropped or re-snapshotted the payload
+    # would mix the wrong matrix one round later.
+    run = RunCfg(model=mcfg,
+                 parallel=ParallelCfg(profile="A", remat="none"),
+                 optim=OptimCfg(name="{name}", eta=0.05, mu=0.9, p=2,
+                                weight_decay=1e-4, overlap=True))
+    mesh = make_debug_mesh(4, 2)
+    pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+    K = pack.layout.n_workers
+    assert "mix" in pack.state_struct
+
+    def batch_fn(t):
+        return train_batch_arrays(mcfg, K, 2, 16,
+                                  jax.random.fold_in(jax.random.PRNGKey(1), t))
+
+    STEPS = 8
+    with mesh:
+        outA = ShardedTrainer(pack).train(jax.random.PRNGKey(0), batch_fn,
+                                          STEPS, log_every=4, verbose=False)
+        with tempfile.TemporaryDirectory() as d:
+            ShardedTrainer(pack, ckpt_dir=d, ckpt_every=4).train(
+                jax.random.PRNGKey(0), batch_fn, STEPS // 2,
+                log_every=4, verbose=False)
+            outB = ShardedTrainer(pack, ckpt_dir=d).train(
+                jax.random.PRNGKey(0), batch_fn, STEPS,
+                log_every=4, verbose=False, resume=True)
+            assert outB["steps_run"] == STEPS // 2, outB["steps_run"]
+
+    # the restored in-flight payload was non-trivial (phase armed) ...
+    assert int(np.asarray(outB["state"]["mix"]["phase"])) == 1
+    # ... and the continued trajectory is bitwise the uninterrupted one
+    for a, b in zip(
+            jax.tree_util.tree_leaves((outA["params"], outA["state"])),
+            jax.tree_util.tree_leaves((outB["params"], outB["state"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("RESUME_OVERLAP_OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -286,6 +370,16 @@ def test_cpdsgdm_resume_bit_identical():
     out = _run(_SCRIPT_RESUME)
     assert "RESUME_OK" in out
     assert "RESUME_TAIL_OK" in out
+
+
+@pytest.mark.parametrize("name", ["pd_sgdm", "mt_dsgdm", "qg_dsgdm"])
+def test_overlap_resume_bit_identical_with_inflight_payload(name):
+    """Mid-overlap kill/restore: the checkpoint carries a live in-flight
+    payload (DelayedMixState), and the resumed run mixes it one round
+    later exactly as the uninterrupted run — bit-identical, for every
+    overlap-capable optimizer family on the sharded backend."""
+    out = _run(_SCRIPT_RESUME_OVERLAP.replace("{name}", name))
+    assert "RESUME_OVERLAP_OK" in out
 
 
 def test_mt_dsgdm_resume_bit_identical_mid_schedule():

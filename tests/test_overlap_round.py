@@ -1,0 +1,387 @@
+"""Overlapped-round contract: one-round-stale delayed mixing.
+
+Under ``overlap=True`` the gossip payload of round r is a snapshot of the
+end-of-round-r params, exchanged at the *start* of round r+1's local scan
+and mixed in at its end — the transfer has no data dependence on the
+round's local steps, so it can hide behind compute.  Every test here pins
+the executed semantics against an explicit two-phase numpy oracle built
+from ``comm.effective_stale_matrix`` (payload round's topology, delivery
+round's liveness):
+
+    round 0:  local scan; snapshot buf;            (gate 0 — no-op mix)
+    round r:  dx = gate · (W̃_stale · buf − buf)   issued at round start
+              p local steps (MT drips dc/p after each)
+              x ← x + dx; snapshot buf             at round end
+
+Covered per optimizer family: fused round ≡ oracle, kernel path ≡ tree
+path, fused ≈ per-step dispatch (tolerance — XLA fuses the cond'd apply
+differently, same convention as test_kernels), membership composition
+(a payload from a worker that died in flight is dropped with
+renormalization), and the unsupported-combo construction errors.  The
+slow tier runs the sharded backend end-to-end on 8 forced host devices.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_compressor
+from repro.core.baselines import make_optimizer
+from repro.core.gossip import DenseComm, ShardedComm
+from repro.core.topology import ring
+
+K, P, ETA, MU = 4, 4, 0.05, 0.9
+
+
+def _params():
+    key = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(key, (K, 5)), "b": jnp.ones((K, 2))}
+
+
+def _grads_fn(params, batch):
+    g = jax.tree_util.tree_map(lambda x: 0.1 * x + batch, params)
+    return sum(jnp.sum(v) for v in jax.tree_util.tree_leaves(g)), g
+
+
+def _np_params(params):
+    return {k: np.asarray(v, np.float32) for k, v in params.items()}
+
+
+def _mixW(W, tree):
+    return {k: (W @ v.reshape(K, -1)).reshape(v.shape)
+            for k, v in tree.items()}
+
+
+def _batches(p=P):
+    return jnp.arange(p, dtype=jnp.float32) * 0.01
+
+
+def _run_rounds(opt, params, rounds, p=P):
+    state = opt.init(params)
+    for _ in range(rounds):
+        params, state, _ = opt.round(state, params, _grads_fn, _batches(p))
+    return params, state
+
+
+# ------------------------------------------------------------------ oracles
+def _pd_oracle(W_at, params, rounds, p=P, gamma=1.0):
+    """Two-phase delayed-mixing reference for the PD local dynamics
+    (plain momentum; CPD with the identity codec is the same walk with a
+    γ-scaled correction and buf ≡ x̂ ≡ x)."""
+    x = _np_params(params)
+    m = {k: np.zeros_like(v) for k, v in x.items()}
+    b = np.asarray(_batches(p))
+    buf, have = None, False
+    for rnd in range(rounds):
+        if have:
+            mx = _mixW(W_at(rnd - 1), buf)
+            dx = {k: gamma * (mx[k] - buf[k]) for k in x}
+        for i in range(p):
+            for k in x:
+                g = 0.1 * x[k] + float(b[i])
+                m[k] = MU * m[k] + g
+                x[k] = x[k] - ETA * m[k]
+        if have:
+            for k in x:
+                x[k] = x[k] + dx[k]
+        buf, have = {k: v.copy() for k, v in x.items()}, True
+    return x, m
+
+
+def test_pd_overlap_matches_delayed_mixing_oracle():
+    comm = DenseComm(ring(K))
+    opt = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    pr, sr = _run_rounds(opt, _params(), 3)
+    W = np.asarray(comm.effective_stale_matrix(0), np.float32)
+    x, _ = _pd_oracle(lambda r: W, _params(), 3)
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pr[k]), x[k], atol=2e-5)
+    # round-end snapshot is the next in-flight payload, phase armed
+    assert int(sr["mix"]["phase"]) == 1
+    for k in x:
+        np.testing.assert_allclose(np.asarray(sr["mix"]["buf"][k]), x[k],
+                                   atol=2e-5)
+
+
+def test_pd_overlap_kernel_matches_tree():
+    comm = DenseComm(ring(K))
+    opt = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    optk = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P, overlap=True,
+                          use_kernel=True, kernel_interpret=True)
+    pr, sr = _run_rounds(opt, _params(), 3)
+    pk, sk = _run_rounds(optk, _params(), 3)
+    for k in pr:
+        np.testing.assert_allclose(np.asarray(pk[k]), np.asarray(pr[k]),
+                                   atol=2e-5)
+    assert int(sk["mix"]["phase"]) == 1
+    np.testing.assert_allclose(np.asarray(sk["mix"]["buf"]["w"]),
+                               np.asarray(sr["mix"]["buf"]["w"]), atol=2e-5)
+
+
+@pytest.mark.parametrize("name", ["pd_sgdm", "mt_dsgdm"])
+def test_overlap_fused_matches_per_step(name):
+    """The per-step dispatch path (``opt.step`` with the exchange embedded
+    at comm steps) walks the same trajectory as the fused round — up to
+    XLA's cond-fusion ulp, the repo's round-equivalence convention."""
+    comm = DenseComm(ring(K))
+    opt = make_optimizer(name, comm, eta=ETA, mu=MU, p=P, overlap=True)
+    params = _params()
+    pr, sr = params, opt.init(params)
+    ps, ss = params, opt.init(params)
+    for _ in range(2):
+        pr, sr, _ = opt.round(sr, pr, _grads_fn, _batches())
+        for i in range(P):
+            _, g = _grads_fn(ps, _batches()[i])
+            ps, ss = opt.step(ss, ps, g)
+    for a, b in zip(jax.tree_util.tree_leaves(pr),
+                    jax.tree_util.tree_leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert int(ss["mix"]["phase"]) == 1
+
+
+def test_pd_overlap_membership_stale_mask():
+    """Membership composition: the stale matrix is the payload round's
+    topology masked by the *delivery* round's liveness — a payload from a
+    worker that died in flight is dropped, with the row renormalized."""
+    from repro.testing import chaos_script, membership_for
+    ms = membership_for(K, 6, chaos_script(K, 6, seed=7))
+    comm = DenseComm(ring(K), membership=ms)
+    opt = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    pr, _ = _run_rounds(opt, _params(), 4)
+    x, _ = _pd_oracle(
+        lambda r: np.asarray(comm.effective_stale_matrix(r), np.float32),
+        _params(), 4)
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pr[k]), x[k], atol=2e-5)
+
+
+def test_mt_overlap_matches_drip_oracle():
+    """MT under overlap refreshes the tracking correction mid-round: the
+    stale dc lands in p equal drips after each local step (the aging fix
+    that restores stability at p ≥ 4), and dx lands at round end."""
+    comm = DenseComm(ring(K))
+    W = np.asarray(comm.effective_stale_matrix(0), np.float32)
+    opt = make_optimizer("mt_dsgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    pr, sr = _run_rounds(opt, _params(), 4)
+
+    x = _np_params(_params())
+    m = {k: np.zeros_like(v) for k, v in x.items()}
+    c = {k: np.zeros_like(v) for k, v in x.items()}
+    gp = {k: np.zeros_like(v) for k, v in x.items()}
+    b = np.asarray(_batches())
+    buf, buf_c, have = None, None, False
+    for rnd in range(4):
+        if have:
+            mx, mc = _mixW(W, buf), _mixW(W, buf_c)
+            dx = {k: mx[k] - buf[k] for k in x}
+            dc = {k: mc[k] - buf_c[k] for k in x}
+        for i in range(P):
+            for k in x:
+                g = 0.1 * x[k] + float(b[i])
+                c[k] = c[k] + g - gp[k]
+                m[k] = MU * m[k] + c[k]
+                x[k] = x[k] - ETA * m[k]
+                gp[k] = g
+            if have:
+                for k in x:
+                    c[k] = c[k] + dc[k] / P
+        if have:
+            for k in x:
+                x[k] = x[k] + dx[k]
+        buf = {k: v.copy() for k, v in x.items()}
+        buf_c = {k: v.copy() for k, v in c.items()}
+        have = True
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pr[k]), x[k], atol=3e-5)
+    np.testing.assert_allclose(np.asarray(sr["c"]["w"]), c["w"], atol=3e-5)
+    # under doubly-stochastic W̃ the drip is mean-preserving: the tracking
+    # invariant mean_k(c) = mean_k(ĝ) survives the mid-round refresh
+    np.testing.assert_allclose(np.asarray(sr["c"]["w"]).mean(axis=0),
+                               gp["w"].mean(axis=0), atol=3e-5)
+
+
+def test_mt_overlap_kernel_matches_tree():
+    comm = DenseComm(ring(K))
+    opt = make_optimizer("mt_dsgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    optk = make_optimizer("mt_dsgdm", comm, eta=ETA, mu=MU, p=P,
+                          overlap=True, use_kernel=True,
+                          kernel_interpret=True)
+    pr, sr = _run_rounds(opt, _params(), 4)
+    pk, sk = _run_rounds(optk, _params(), 4)
+    for k in pr:
+        np.testing.assert_allclose(np.asarray(pk[k]), np.asarray(pr[k]),
+                                   atol=3e-5)
+    np.testing.assert_allclose(np.asarray(sk["mix"]["buf_c"]["w"]),
+                               np.asarray(sr["mix"]["buf_c"]["w"]),
+                               atol=3e-5)
+
+
+def test_qg_overlap_matches_oracle():
+    """QG: the stale correction lands on the drifted params, then the
+    quasi-global momentum folds the realized round displacement
+    (xprev − x_new)/(ηp) exactly as in the synchronous form."""
+    comm = DenseComm(ring(K))
+    W = np.asarray(comm.effective_stale_matrix(0), np.float32)
+    opt = make_optimizer("qg_dsgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    pr, sr = _run_rounds(opt, _params(), 4)
+
+    x = _np_params(_params())
+    m = {k: np.zeros_like(v) for k, v in x.items()}
+    xprev = {k: v.copy() for k, v in x.items()}
+    b = np.asarray(_batches())
+    buf, have = None, False
+    for rnd in range(4):
+        if have:
+            mx = _mixW(W, buf)
+            dx = {k: mx[k] - buf[k] for k in x}
+        for i in range(P):
+            for k in x:
+                g = 0.1 * x[k] + float(b[i])
+                x[k] = x[k] - ETA * (g + MU * m[k])
+        if have:
+            for k in x:
+                x[k] = x[k] + dx[k]
+        for k in x:
+            m[k] = MU * m[k] + (1 - MU) * (xprev[k] - x[k]) / (ETA * P)
+            xprev[k] = x[k].copy()
+        buf, have = {k: v.copy() for k, v in x.items()}, True
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pr[k]), x[k], atol=3e-5)
+    np.testing.assert_allclose(np.asarray(sr["m"]["w"]), m["w"], atol=3e-5)
+
+    optk = make_optimizer("qg_dsgdm", comm, eta=ETA, mu=MU, p=P,
+                          overlap=True, use_kernel=True,
+                          kernel_interpret=True)
+    pk, _ = _run_rounds(optk, _params(), 4)
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pk[k]), np.asarray(pr[k]),
+                                   atol=3e-5)
+
+
+def test_cpd_overlap_matches_identity_q_oracle():
+    """CPD with the identity codec: x̂ tracks x exactly, so the overlap
+    round is the PD walk with a γ-scaled stale correction and the payload
+    snapshot cut from x̂ (Alg. 2's consensus estimate)."""
+    comm = DenseComm(ring(K))
+    W = np.asarray(comm.effective_stale_matrix(0), np.float32)
+    opt = make_optimizer("cpd_sgdm", comm, eta=ETA, mu=MU, p=P, gamma=0.4,
+                         compressor=make_compressor("identity"),
+                         overlap=True)
+    pr, sr = _run_rounds(opt, _params(), 4)
+    x, _ = _pd_oracle(lambda r: W, _params(), 4, gamma=0.4)
+    for k in x:
+        np.testing.assert_allclose(np.asarray(pr[k]), x[k], atol=3e-5)
+    np.testing.assert_allclose(np.asarray(sr["xhat"]["w"]), x["w"],
+                               atol=3e-5)
+
+
+def test_overlap_round0_is_gated_noop():
+    """Round 0 has nothing in flight: gate 0 makes the mix an exact no-op
+    while the exchange still runs (uniform trace, uniform wire bytes) —
+    the first round must equal a pure local scan."""
+    comm = DenseComm(ring(K))
+    opt = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P, overlap=True)
+    opt_sync = make_optimizer("pd_sgdm", comm, eta=ETA, mu=MU, p=P)
+    params = _params()
+    pr, sr, _ = opt.round(opt.init(params), params, _grads_fn, _batches())
+    ps, ss, _ = opt_sync.round(opt_sync.init(params), params, _grads_fn,
+                               _batches(), gossip=False)
+    for a, b in zip(jax.tree_util.tree_leaves(pr),
+                    jax.tree_util.tree_leaves(ps)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(sr["mix"]["phase"]) == 1      # armed for round 1
+
+
+def test_overlap_unsupported_combos_raise():
+    comm = DenseComm(ring(K))
+    sharded = ShardedComm(ring(K), axis_names=("w",))
+    bad = [
+        # CPD's x̂_nbrs replica contract breaks under a stale consensus
+        lambda: make_optimizer("cpd_sgdm", sharded, overlap=True),
+        # CPD kernel path has no matrix-domain delayed wire
+        lambda: make_optimizer("cpd_sgdm", comm, overlap=True,
+                               use_kernel=True),
+        # compressed tracking would need a second codec wire per round
+        lambda: make_optimizer("mt_dsgdm", comm, overlap=True,
+                               compressor=make_compressor("sign")),
+        # every-step baselines have no local scan to overlap
+        lambda: make_optimizer("c_sgdm", comm, overlap=True),
+        lambda: make_optimizer("d_sgd", comm, overlap=True),
+        lambda: make_optimizer("choco_sgd", comm, overlap=True),
+    ]
+    for ctor in bad:
+        with pytest.raises(ValueError):
+            ctor()
+
+
+# ------------------------------------------------------------- sharded (slow)
+_SCRIPT_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+    from repro.train.trainer import ShardedTrainer
+
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+
+    def run_one(name, use_kernel):
+        run = RunCfg(model=mcfg,
+                     parallel=ParallelCfg(profile="A", remat="none"),
+                     optim=OptimCfg(name=name, eta=0.05, mu=0.9, p=2,
+                                    weight_decay=1e-4, overlap=True,
+                                    use_kernel=use_kernel,
+                                    kernel_interpret=True))
+        mesh = make_debug_mesh(8, 1)
+        pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+        assert "mix" in pack.state_struct, name
+        K = pack.layout.n_workers
+
+        def batch_fn(t):
+            return train_batch_arrays(
+                mcfg, K, 1, 16,
+                jax.random.fold_in(jax.random.PRNGKey(1), t))
+
+        with mesh:
+            out = ShardedTrainer(pack).train(jax.random.PRNGKey(0),
+                                             batch_fn, 6, log_every=2,
+                                             verbose=False)
+        assert int(np.asarray(out["state"]["step"])) == 6
+        assert int(np.asarray(out["state"]["mix"]["phase"])) == 1
+        return out
+
+    # tree vs kernel on the sharded backend walk the same trajectory
+    for name in ("pd_sgdm", "mt_dsgdm"):
+        a = run_one(name, False)
+        b = run_one(name, True)
+        for x, y in zip(jax.tree_util.tree_leaves(a["params"]),
+                        jax.tree_util.tree_leaves(b["params"])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-5)
+        print(name, "SHARDED_TREE_EQ_KERNEL")
+    run_one("qg_dsgdm", False)
+    print("SHARDED_OVERLAP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_overlap_tree_matches_kernel():
+    """Overlap end-to-end on the sharded backend (8 forced host devices):
+    PD and MT run the same trajectory on the tree and kernel paths, QG
+    trains through the round engine; in-flight phase is armed after the
+    first boundary."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT_SHARDED], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARDED_OVERLAP_OK" in r.stdout

@@ -24,6 +24,17 @@ row pattern                    derived key            tolerance
 ``elastic/claim_bytes``        bytes_saved_frac       |Δ|/baseline ≤ 2%
                                                       (dead-edge accounting
                                                       arithmetic)
+``round_engine/claim_          overlap_local_parity   fresh ≥ 0.5 × baseline
+overlap_hiding``                                      (timing ratio: the
+                                                      overlapped round runs
+                                                      at ≈ the local-compute
+                                                      rate at p ≥ 4)
+``noniid/claim_p4_overlap``    mt_overlap_survives_   fresh ≥ baseline
+                               p4                     (0/1 flag: staleness-
+                                                      refreshed MT stays
+                                                      bounded at p = 4 where
+                                                      synchronous MT
+                                                      diverges)
 =============================  =====================  =====================
 
 A gated (row, key) present in a baseline but missing from the fresh run
@@ -54,6 +65,9 @@ DEFAULT_GATES = [
     ("wire_codecs/*", "x_bf16", "rel_tol", 0.02),
     ("elastic/claim_survivors", "survivors_bounded", "min_frac", 1.0),
     ("elastic/claim_bytes", "bytes_saved_frac", "rel_tol", 0.02),
+    ("round_engine/claim_overlap_hiding", "overlap_local_parity",
+     "min_frac", 0.5),
+    ("noniid/claim_p4_overlap", "mt_overlap_survives_p4", "min_frac", 1.0),
 ]
 
 
