@@ -22,6 +22,11 @@ Sections
   elastic   churn sweep: survivor loss / consensus / wire bytes vs. the
             kill+straggle rate under seeded chaos scripts (standalone
             writes BENCH_elastic.json)
+  pretrain  hierarchical two-level gossip vs. flat ring on the LM
+            pretraining driver: analytic comm rows for the ~100M model
+            plus end-to-end runs of examples/pretrain_decentralized.py
+            (standalone writes BENCH_pretrain.json; env knobs
+            PRETRAIN_STEPS / PRETRAIN_MODEL)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -57,14 +62,21 @@ scraping stdout.  Schema (version 1)::
         {"name": "elastic/claim_survivors",  # chaos-sweep claim row
          "us_per_call": 0.0,
          "derived": {"survivors_bounded": 1.0, "cells": 12.0}},
+        {"name": "pretrain/claim_inter_reduction",  # two-level comm claim
+         "us_per_call": 0.0,
+         "derived": {"inter_reduction_f32": 8.0,
+                     "inter_reduction_bf16": 16.0, "reduction_ok": 1.0}},
+        {"name": "pretrain/claim_equal_loss",  # end-to-end LM driver claim
+         "us_per_call": 0.0,
+         "derived": {"hier_loss_ok": 1.0, "train_comm_reduction": 8.0}},
         ...
       ]
     }
 
 Standalone section runs also write their own committed baselines
 (``BENCH_kernel_path.json``, ``BENCH_wire_codecs.json``,
-``BENCH_noniid.json``, ``BENCH_elastic.json``) which
-``tools/bench_compare.py`` gates fresh runs against.
+``BENCH_noniid.json``, ``BENCH_elastic.json``, ``BENCH_pretrain.json``)
+which ``tools/bench_compare.py`` gates fresh runs against.
 
 ``derived`` values parse to floats where possible; free-form fragments are
 kept under ``"note"``.  Rows are append-only within a run; compare runs by
@@ -79,7 +91,7 @@ import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
             "kernels", "kernel_path", "wire", "noniid", "elastic",
-            "roofline"]
+            "pretrain", "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -141,6 +153,9 @@ def main() -> None:
     if "elastic" in want:
         from benchmarks import elastic_sweep
         elastic_sweep.main()
+    if "pretrain" in want:
+        from benchmarks import pretrain_sweep
+        pretrain_sweep.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

@@ -7,15 +7,27 @@ Execution runs through ``TrainPack.train_round`` (fused p-step rounds,
 donated buffers); checkpoints carry the full optimizer state so
 ``--resume`` continues bit-identically.
 
+``--node-size m`` switches the flat gossip graph to the two-level
+hierarchical round (exact intra-node average + ``--topology`` between
+node leaders), ``--wire-dtype bfloat16`` halves the inter wire, and
+``--inter-codec`` compresses it; ``--json-out`` writes the run record
+(loss curve endpoints, tokens/sec, comm-MB) that
+``benchmarks/pretrain_sweep.py`` consumes — the sweep and this example
+share this one driver path.
+
 Default is a ~100M-param model for a few hundred steps (the deliverable's
 end-to-end scale); ``--quick`` shrinks it for a smoke pass.
 
   PYTHONPATH=src python examples/pretrain_decentralized.py --quick
   PYTHONPATH=src python examples/pretrain_decentralized.py \
       --steps 300 --devices 8      # ~100M params, the full driver
+  PYTHONPATH=src python examples/pretrain_decentralized.py \
+      --quick --node-size 2 --wire-dtype bfloat16   # two-level gossip
 """
 import argparse
+import json
 import os
+import time
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--devices", type=int, default=8)
@@ -23,6 +35,21 @@ ap.add_argument("--steps", type=int, default=300)
 ap.add_argument("--quick", action="store_true")
 ap.add_argument("--optimizer", default="pd_sgdm")
 ap.add_argument("--p", type=int, default=4)
+ap.add_argument("--topology", default="ring",
+                help="gossip graph between workers (flat), or between "
+                     "node leaders when --node-size is set")
+ap.add_argument("--node-size", type=int, default=0,
+                help="two-level gossip: exact intra-node averaging over "
+                     "groups of this many workers (0 = flat)")
+ap.add_argument("--wire-dtype", default="float32",
+                choices=("float32", "bfloat16"),
+                help="dtype of the gossip payload on the wire")
+ap.add_argument("--inter-codec", default="none",
+                help="compress the hierarchical inter-node wire "
+                     "(identity/sign/topk/qsgd; needs --node-size)")
+ap.add_argument("--json-out", default=None,
+                help="write the run record (losses, tokens/sec, comm-MB) "
+                     "to this JSON file")
 ap.add_argument("--ckpt-dir", default=None)
 ap.add_argument("--resume", action="store_true",
                 help="continue from the latest checkpoint in --ckpt-dir")
@@ -30,14 +57,11 @@ args = ap.parse_args()
 os.environ["XLA_FLAGS"] = (
     f"--xla_force_host_platform_device_count={args.devices}")
 
-import dataclasses                                     # noqa: E402
-
 import jax                                             # noqa: E402
 
 from repro.configs.base import (ModelCfg, OptimCfg, ParallelCfg,
                                 RunCfg)                # noqa: E402
 from repro.configs.shapes import InputShape            # noqa: E402
-from repro.core.schedules import warmup_cosine         # noqa: E402
 from repro.data.synthetic import LMStreamCfg, lm_batch  # noqa: E402
 from repro.launch.mesh import make_mesh                # noqa: E402
 from repro.launch.runtime import build_train           # noqa: E402
@@ -56,9 +80,13 @@ else:
     seq, gbatch, steps = 256, 16, args.steps
 
 run = RunCfg(model=mcfg,
-             parallel=ParallelCfg(profile="A", remat="none"),
+             parallel=ParallelCfg(profile="A", remat="none",
+                                  topology=args.topology,
+                                  node_size=args.node_size,
+                                  inter_codec=args.inter_codec),
              optim=OptimCfg(name=args.optimizer, eta=0.25, mu=0.9,
-                            p=args.p, weight_decay=1e-4))
+                            p=args.p, weight_decay=1e-4,
+                            wire_dtype=args.wire_dtype))
 
 mesh = make_mesh((args.devices // 2, 2), ("data", "model"))
 shape = InputShape("pretrain", seq, gbatch, "train")
@@ -67,22 +95,45 @@ K = pack.layout.n_workers
 n_params = mcfg.params_count()
 print(f"model={mcfg.name} params={n_params/1e6:.1f}M workers={K} "
       f"optimizer={run.optim.name} p={run.optim.p} seq={seq} "
-      f"global_batch={gbatch}")
+      f"global_batch={gbatch} topology={args.topology} "
+      f"node_size={args.node_size} wire_dtype={args.wire_dtype}")
 
 data = LMStreamCfg(vocab=mcfg.vocab, seq_len=seq, batch=gbatch // K,
                    n_workers=K)
 trainer = ShardedTrainer(pack, ckpt_dir=args.ckpt_dir,
                          ckpt_every=100 if args.ckpt_dir else 0)
+wall0 = time.time()
 with mesh:
     out = trainer.train(jax.random.PRNGKey(0),
                         lambda t: lm_batch(data, t), steps,
                         log_every=max(steps // 20, 1),
                         resume=args.resume)
+elapsed = time.time() - wall0
 h = out["history"]
 if not h.loss:          # --resume with a checkpoint at/past --steps
     print("no steps run")
     raise SystemExit(0)
 ran = out["steps_run"]
-print(f"loss: {h.loss[0]:.4f} -> {h.loss[-1]:.4f} over {ran} steps")
+tokens_per_s = ran * gbatch * seq / max(elapsed, 1e-9)
+comm_mb = h.comm_mb[-1] if h.comm_mb else 0.0
+print(f"loss: {h.loss[0]:.4f} -> {h.loss[-1]:.4f} over {ran} steps "
+      f"({tokens_per_s:.0f} tok/s, {comm_mb:.1f} comm-MB/worker)")
+
+if args.json_out:
+    record = {
+        "model": mcfg.name, "params": n_params, "workers": K,
+        "optimizer": run.optim.name, "p": run.optim.p,
+        "topology": args.topology, "node_size": args.node_size,
+        "wire_dtype": args.wire_dtype, "inter_codec": args.inter_codec,
+        "steps": ran, "seq": seq, "global_batch": gbatch,
+        "first_loss": h.loss[0], "final_loss": h.loss[-1],
+        "tokens_per_s": tokens_per_s, "comm_mb": comm_mb,
+        "bytes_per_comm_round": trainer.bytes_per_round(),
+        "wall_s": elapsed,
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {args.json_out}")
+
 if ran == steps:        # a short resumed tail is too noisy to judge
     assert h.loss[-1] < h.loss[0], "training failed to reduce loss"

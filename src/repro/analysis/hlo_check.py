@@ -27,7 +27,7 @@ from repro.analysis.hlo_parse import (CollectiveStats, donated_aliases,
 
 __all__ = ["compile_round_text", "check_donation",
            "check_collectives_allowed", "check_wire_bytes",
-           "check_sharded_round"]
+           "check_hier_wire_bytes", "check_sharded_round"]
 
 # an all-reduce at or below this payload is bookkeeping (the scalar loss
 # mean over workers), not gossip traffic
@@ -65,12 +65,18 @@ def check_donation(hlo_text: str, n_donated: int) -> List[str]:
 def check_collectives_allowed(
         stats: CollectiveStats,
         allowed: Iterable[str] = ("collective-permute",),
-        scalar_allreduce_ok: bool = True) -> List[str]:
+        scalar_allreduce_ok: bool = True,
+        node_allreduce_group: Optional[int] = None) -> List[str]:
     """No collectives beyond the expected gossip set.
 
     ``allowed`` ops pass unconditionally; an ``all-reduce`` whose payload
     is ≤ ``SCALAR_ALLREDUCE_BYTES`` passes when ``scalar_allreduce_ok``
-    (the per-round loss mean).  Everything else is a contract violation.
+    (the per-round loss mean).  On a hierarchical round,
+    ``node_allreduce_group`` additionally admits all-reduces whose replica
+    group is exactly one node (the intra-node exact average) — a
+    substantive all-reduce over any *other* group size is still a
+    violation (psum inside the node, ppermute between nodes, nothing
+    else).  Everything else is a contract violation.
     """
     allowed = set(allowed)
     out = []
@@ -80,8 +86,12 @@ def check_collectives_allowed(
         if (scalar_allreduce_ok and call.op == "all-reduce"
                 and call.result_bytes <= SCALAR_ALLREDUCE_BYTES):
             continue
+        if (node_allreduce_group is not None and call.op == "all-reduce"
+                and call.group == int(node_allreduce_group)):
+            continue
         out.append(f"unexpected collective in the round: {call.op} "
-                   f"({call.result_bytes} B payload) — {call.line[:120]}")
+                   f"({call.result_bytes} B payload, group {call.group}) — "
+                   f"{call.line[:120]}")
     return out
 
 
@@ -101,6 +111,42 @@ def check_wire_bytes(stats: CollectiveStats, expected: int,
     return []
 
 
+def check_hier_wire_bytes(stats: CollectiveStats, levels: dict,
+                          *, node_size: int, check_intra: bool = True,
+                          label: str = "") -> List[str]:
+    """Per-level accounted ≡ shipped on a two-level round.
+
+    * inter level: ``collective-permute`` operand bytes per device must
+      equal ``levels["inter_site"]`` (the op-site payload — on the
+      leader-pruned layout every device runs the op, non-leaders shipping
+      zeros, so the HLO accounting is payload × inter-degree regardless
+      of amortization);
+    * intra level: when ``check_intra``, the summed ring-effective wire
+      bytes of every node-group all-reduce must equal
+      ``levels["intra_wire"]`` (tree path only — the kernel layout's
+      intra average covers lane-padded rows, inflating the op beyond the
+      accounted leaf bytes).
+    """
+    who = f" [{label}]" if label else ""
+    out = []
+    got_cp = int(stats.wire_bytes.get("collective-permute", 0))
+    if got_cp != int(levels["inter_site"]):
+        out.append(f"hier inter wire{who}: HLO ships {got_cp} B/device of "
+                   f"collective-permute but the level accounting expects "
+                   f"{int(levels['inter_site'])} B")
+    if check_intra:
+        # every node-group all-reduce is intra traffic, including the tiny
+        # norm-scale leaves (the scalar loss mean has a full-axis group and
+        # never lands here)
+        got_ar = sum(c.wire_bytes * c.mult for c in stats.calls
+                     if c.op == "all-reduce" and c.group == int(node_size))
+        if abs(got_ar - float(levels["intra_wire"])) > 1.0:
+            out.append(f"hier intra wire{who}: HLO ships {got_ar:.0f} "
+                       f"B/device of node-group all-reduce but the level "
+                       f"accounting expects {float(levels['intra_wire']):.0f} B")
+    return out
+
+
 def _count_donated_leaves(pack) -> int:
     return sum(len(jax.tree_util.tree_leaves(t))
                for t in (pack.params_struct, pack.state_struct))
@@ -117,14 +163,28 @@ def check_sharded_round(pack, *, check_bytes: bool = True,
     stats = parse_collectives(txt)
     out = []
     out += check_donation(txt, _count_donated_leaves(pack))
+    top = pack.opt.comm.topology_at(0)
+    hier = (top.name == "hierarchical"
+            and getattr(pack.opt.comm, "membership", None) is None)
+    per_worker = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+        pack.params_struct)
+    if hier:
+        # two-level contract: psum inside the node, ppermute between nodes
+        node_size = int(top.axis_sizes[1])
+        out += check_collectives_allowed(
+            stats, node_allreduce_group=node_size)
+        if check_bytes:
+            levels = pack.opt.hier_bytes_per_level(per_worker)
+            out += check_hier_wire_bytes(
+                stats, levels, node_size=node_size,
+                check_intra=not pack.opt.config.use_kernel, label=label)
+        return out
     out += check_collectives_allowed(stats)
     if check_bytes:
         if expected_wire_bytes is None:
             # params_struct is worker-stacked; the wire ships one worker's
             # leaves per device, so the accounting runs on the unstacked tree
-            per_worker = jax.tree_util.tree_map(
-                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
-                pack.params_struct)
             expected_wire_bytes = pack.opt.bytes_per_comm_round(per_worker)
         out += check_wire_bytes(stats, expected_wire_bytes, label=label)
     return out

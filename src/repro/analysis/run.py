@@ -96,6 +96,26 @@ def phase_dense(full: bool) -> list:
         v = jc.check_round_contract(opt, params)
         _report(f"dense/pd_sgdm/{sched_name}", v, failures)
 
+    # hierarchical two-level rounds: dense simulation factors the round
+    # through node means (W = R ⊗ C) — still one p-scan, zero collectives
+    from repro.core.topology import hierarchical, hierarchical_schedule
+    hier_grid = [("pd_sgdm", False, False), ("pd_sgdm", True, False)]
+    if full:
+        hier_grid += [("mt_dsgdm", False, False), ("pd_sgdm", False, True),
+                      ("mt_dsgdm", True, True)]
+    for name, kernel, overlap in hier_grid:
+        opt = make_optimizer(name, DenseComm(hierarchical(2, 4)), eta=0.05,
+                             mu=0.9, p=3, use_kernel=kernel,
+                             kernel_interpret=True, overlap=overlap)
+        kern = kernel and opt.kernel_comm_supported
+        v = jc.check_round_contract(opt, params, kernel=kern, overlap=overlap)
+        _report(f"dense/{name}/hier-m4/{'kernel' if kern else 'tree'}"
+                + ("/overlap" if overlap else ""), v, failures)
+    opt = make_optimizer("pd_sgdm", DenseComm(hierarchical_schedule(4, 2)),
+                         eta=0.05, mu=0.9, p=2)
+    v = jc.check_round_contract(opt, params)
+    _report("dense/pd_sgdm/hier_one_peer", v, failures)
+
     # elastic membership: the masked matrices must honour the liveness
     # contract every round (check_membership_mask runs inside the
     # aggregate when the backend carries a membership schedule)
@@ -113,6 +133,12 @@ def phase_dense(full: bool) -> list:
         v = jc.check_round_contract(opt, params, overlap=overlap)
         _report(f"dense/{name}/{comp or 'none'}/membership"
                 + ("/overlap" if overlap else ""), v, failures)
+    # elastic hierarchical rounds are dense-only (masked factored matrix)
+    opt = make_optimizer("pd_sgdm", DenseComm(hierarchical(2, 4),
+                                              membership=ms),
+                         eta=0.05, mu=0.9, p=3)
+    v = jc.check_round_contract(opt, params)
+    _report("dense/pd_sgdm/hier-m4/membership", v, failures)
     return failures
 
 
@@ -144,7 +170,8 @@ def _sharded_grid(full: bool):
     return grid
 
 
-def _build_pack(opt_name, codec, use_kernel, schedule, overlap=False):
+def _build_pack(opt_name, codec, use_kernel, schedule, overlap=False,
+                node_size=0, wire_dtype="float32", inter_codec="none"):
     from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
     from repro.configs.shapes import InputShape
     from repro.launch.mesh import make_debug_mesh
@@ -154,10 +181,13 @@ def _build_pack(opt_name, codec, use_kernel, schedule, overlap=False):
                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
     run = RunCfg(model=mcfg,
                  parallel=ParallelCfg(profile="A", remat="none",
-                                      topology_schedule=schedule),
+                                      topology_schedule=schedule,
+                                      node_size=node_size,
+                                      inter_codec=inter_codec),
                  optim=OptimCfg(name=opt_name, p=2, compressor=codec,
                                 use_kernel=use_kernel,
-                                kernel_interpret=True, overlap=overlap))
+                                kernel_interpret=True, overlap=overlap,
+                                wire_dtype=wire_dtype))
     mesh = make_debug_mesh(8, 1)   # 8 workers × TP1: per-device ≡ per-worker
     return build_train(run, mesh, InputShape("t", 16, 8, "train"))
 
@@ -203,6 +233,65 @@ def phase_sharded(full: bool) -> list:
             jx64 = jax.make_jaxpr(pack.train_round)(*args)
         v += jc.check_no_f64(jx64)
         # schedules vary wire bytes by round; byte equality is round-0 only
+        v += hc.check_sharded_round(pack, check_bytes=(schedule == "static"),
+                                    label=label)
+        _report(label, v, failures)
+
+    # hierarchical two-level rounds: psum inside the node, ppermute between
+    # node leaders — per-level accounted ≡ shipped on static graphs
+    from repro.core.topology import hierarchical_inter_shifts
+    # (optimizer, use_kernel, schedule, overlap, wire_dtype, inter_codec)
+    hier_grid = [
+        ("pd_sgdm", False, "static", False, "float32", "none"),
+        ("pd_sgdm", True, "static", False, "float32", "none"),
+        ("pd_sgdm", False, "static", False, "bfloat16", "none"),
+    ]
+    if full:
+        hier_grid += [
+            ("mt_dsgdm", False, "static", False, "float32", "none"),
+            ("pd_sgdm", True, "static", False, "bfloat16", "none"),
+            ("pd_sgdm", False, "hier_one_peer", False, "float32", "none"),
+            ("pd_sgdm", False, "static", True, "float32", "none"),
+            ("pd_sgdm", True, "static", True, "float32", "none"),
+            ("pd_sgdm", False, "static", False, "float32", "identity"),
+            ("cpd_sgdm", False, "static", False, "float32", "none"),  # skip
+        ]
+    for opt_name, use_kernel, schedule, overlap, wdt, icodec in hier_grid:
+        label = (f"sharded/{opt_name}/hier-m4/"
+                 f"{'kernel' if use_kernel else 'tree'}/{schedule}"
+                 + (f"/{wdt}" if wdt != "float32" else "")
+                 + (f"/codec-{icodec}" if icodec != "none" else "")
+                 + ("/overlap" if overlap else ""))
+        try:
+            pack = _build_pack(opt_name, "sign", use_kernel, schedule,
+                               overlap, node_size=4, wire_dtype=wdt,
+                               inter_codec=icodec)
+        except ValueError as e:      # unsupported combo (e.g. CPD+hier)
+            print(f"  skip {label}: {e}")
+            continue
+        args = (pack.params_struct, pack.state_struct,
+                pack.round_batch_struct)
+        jx = jax.make_jaxpr(pack.train_round)(*args)
+        v = []
+        v += jc.check_no_host_callbacks(jx)
+        v += jc.check_round_scan(jx, pack.opt.config.p)
+        expected = None
+        if opt_name == "pd_sgdm" and schedule == "static":
+            ideg = len(hierarchical_inter_shifts(pack.opt.comm.topology))
+            n_arrays = (1 if (use_kernel and pack.opt.kernel_comm_supported)
+                        else len(jax.tree_util.tree_leaves(
+                            pack.params_struct)))
+            expected = ideg * n_arrays
+        if overlap:
+            v += jc.check_overlap_boundary(jx, p=pack.opt.config.p,
+                                           expected=expected)
+        else:
+            v += jc.check_gossip_boundary(jx, expected=expected)
+        if schedule != "static":
+            v += jc.check_schedule_switch(jx, pack.opt.comm.period)
+        with enable_x64():
+            jx64 = jax.make_jaxpr(pack.train_round)(*args)
+        v += jc.check_no_f64(jx64)
         v += hc.check_sharded_round(pack, check_bytes=(schedule == "static"),
                                     label=label)
         _report(label, v, failures)

@@ -130,8 +130,20 @@ class ParallelCfg:
     """
     profile: str = "A"
     topology: str = "ring"          # gossip graph between workers
+    # Hierarchical two-level gossip: group the worker axis into nodes of
+    # `node_size` (0 = flat gossip).  Each round averages exactly inside
+    # every node (fast intra links) and gossips node means between node
+    # leaders over `topology` on the slow links (ring/exponential/
+    # complete inter graph).  On a ("pod","data") two-axis worker layout
+    # node_size must equal the inner-axis size (the pod boundary is the
+    # node boundary).
+    node_size: int = 0
+    # compress the hierarchical inter-node wire with a keyless WireCodec
+    # ("none" | identity | sign | topk | qsgd); flat gossip ignores it
+    inter_codec: str = "none"
     # time-varying gossip: "static" keeps `topology`; otherwise one of
-    # one_peer_exp | alt_axes | random_matching (see core.topology.make_schedule)
+    # one_peer_exp | alt_axes | random_matching | hier_one_peer
+    # (see core.topology.make_schedule; hier_one_peer needs node_size > 0)
     topology_schedule: str = "static"
     schedule_rounds: int = 0        # random_matching cycle length (0 = max(2, ⌈log₂K⌉))
     schedule_seed: int = 0          # random_matching matchings are seeded
@@ -166,6 +178,11 @@ class OptimCfg:
     compressor_block: int = LANE    # sign/topk/qsgd block (LANE = kernel path)
     compressor_fraction: float = 0.01   # topk / randk kept fraction
     compressor_levels: int = 7      # qsgd levels (7 -> 4-bit wire)
+    # dtype of the uncompressed gossip payload (PD/MT/QG x wire and MT's
+    # uncompressed c wire): "float32" | "bfloat16".  bf16 halves the
+    # bytes on every wire the backend ships; the self term and the mixing
+    # accumulation stay f32 (`bytes_per_comm_round` charges 2 B/elem).
+    wire_dtype: str = "float32"
     # Pallas execution path: run the fused round on the flatten-once
     # (rows, 1024) kernel layout — momentum scan, gossip mix and CPD's
     # packed sign wire in one layout, flattened once per round.  The

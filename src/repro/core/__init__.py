@@ -13,10 +13,12 @@ from repro.core.compression import (Compressor, IdentityCompressor,
                                     SignCompressor, TopKCompressor,
                                     contraction_ratio, make_compressor)
 from repro.core.cpdsgdm import CPDSGDM, CPDSGDMConfig
-from repro.core.gossip import CommBackend, DenseComm, ShardedComm
+from repro.core.gossip import (CommBackend, DenseComm, HierarchicalComm,
+                               ShardedComm, hier_bytes_per_round)
 from repro.core.pdsgdm import PDSGDM, PDSGDMConfig
 from repro.core.topology import (MembershipSchedule, Topology,
                                  TopologySchedule, full_membership,
+                                 hierarchical, hierarchical_schedule,
                                  make_schedule, make_topology,
                                  membership_from_events, spectral_gap)
 from repro.core.tracking import (MTDSGDMConfig, MTDSGDm, QGDSGDMConfig,
@@ -26,12 +28,13 @@ from repro.core.wire import WireCodec, make_codec
 __all__ = [
     "topology", "schedules", "wire",
     "Topology", "TopologySchedule", "make_topology", "make_schedule",
-    "spectral_gap",
+    "spectral_gap", "hierarchical", "hierarchical_schedule",
     "MembershipSchedule", "full_membership", "membership_from_events",
     "Compressor", "IdentityCompressor", "SignCompressor", "TopKCompressor",
     "RandKCompressor", "QSGDCompressor", "make_compressor", "contraction_ratio",
     "WireCodec", "make_codec",
-    "CommBackend", "DenseComm", "ShardedComm",
+    "CommBackend", "DenseComm", "ShardedComm", "HierarchicalComm",
+    "hier_bytes_per_round",
     "PDSGDM", "PDSGDMConfig", "CPDSGDM", "CPDSGDMConfig",
     "MTDSGDm", "MTDSGDMConfig", "QGDSGDm", "QGDSGDMConfig",
     "CSGDM", "d_sgd", "pd_sgd", "choco_sgd", "make_optimizer",

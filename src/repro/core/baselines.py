@@ -120,6 +120,11 @@ def make_optimizer(name: str, comm: CommBackend, *, eta: float = 0.1,
                                      overlap=overlap),
                        comm, compressor)
     if name in ("c_sgdm", "csgdm"):
+        if comm.topology.name == "hierarchical":
+            raise ValueError(
+                "c_sgdm is the centralized baseline (complete-graph "
+                "all-reduce every step); node_size / hierarchical gossip "
+                "does not apply.  Drop --node-size for c_sgdm runs.")
         K = comm.topology.n_workers
         comp_comm = type(comm)(complete(K), **(
             {"axis_names": comm.axis_names} if isinstance(comm, ShardedComm) else {}))

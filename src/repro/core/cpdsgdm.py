@@ -94,6 +94,14 @@ class CPDSGDM(PDSGDM):
             raise ValueError(
                 "CPD-SGDM sharded backend needs a shift-structured topology "
                 "(ring/torus/exponential); 'complete' has no neighbour state.")
+        if isinstance(comm, ShardedComm) and comm.topology.name == "hierarchical":
+            raise ValueError(
+                "CPD-SGDM does not compose with the sharded hierarchical "
+                "backend: the xhat_nbrs error-compensation copies track "
+                "per-neighbour wires, and the two-level round (exact intra "
+                "psum + leader ppermute) has no per-edge codec lane.  Use "
+                "PD/MT/QG with node_size (optionally with inter_codec), or "
+                "run CPD on a flat topology.")
         if isinstance(comm, ShardedComm) and comm.period > 1:
             raise ValueError(
                 "CPD-SGDM sharded backend requires a static topology: the "

@@ -50,12 +50,18 @@ import numpy as np
 
 from repro.core.topology import (MembershipSchedule, Topology,
                                  TopologySchedule, active_edge_count,
-                                 masked_matrix)
+                                 hierarchical_inter_shifts,
+                                 hierarchical_self_weight, masked_matrix)
 
-__all__ = ["DenseComm", "ShardedComm", "CommBackend",
-           "gossip_bytes_per_round", "worker_mask_like"]
+__all__ = ["DenseComm", "ShardedComm", "HierarchicalComm", "CommBackend",
+           "gossip_bytes_per_round", "hier_bytes_per_round",
+           "worker_mask_like"]
 
 ShiftKey = Tuple[int, int]  # (topology axis, shift)
+
+# dtypes the gossip wire can ship the uncompressed payload in; decoding is
+# always an f32 upcast before the weighted accumulation
+_WIRE_DTYPES = ("float32", "bfloat16")
 
 
 def worker_mask_like(mask, leaf):
@@ -64,10 +70,32 @@ def worker_mask_like(mask, leaf):
     return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
+def _inter_factor(top: Topology) -> np.ndarray:
+    """The (n_nodes, n_nodes) inter-level factor of a hierarchical
+    topology: W_hier = R ⊗ (1/m)11ᵀ, rebuilt from the axis-0 shifts."""
+    n = int(top.axis_sizes[0])
+    R = np.eye(n) * hierarchical_self_weight(top)
+    for (sh, w) in hierarchical_inter_shifts(top):
+        for i in range(n):
+            R[i, (i + sh) % n] += w
+    return R
+
+
 class CommBackend:
     topology: Topology
     schedule: Optional[TopologySchedule] = None
     membership: Optional[MembershipSchedule] = None
+    wire_dtype: str = "float32"
+
+    @property
+    def wire_itemsize(self) -> int:
+        """Bytes per element of the uncompressed gossip payload."""
+        return 2 if self.wire_dtype == "bfloat16" else 4
+
+    def _check_wire_dtype(self):
+        if self.wire_dtype not in _WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype {self.wire_dtype!r} not in {_WIRE_DTYPES}")
 
     @property
     def period(self) -> int:
@@ -175,12 +203,27 @@ class DenseComm(CommBackend):
 
     topology: Topology  # or a TopologySchedule at construction
     membership: Optional[MembershipSchedule] = None
+    wire_dtype: str = "float32"
 
     def __post_init__(self):
         self._resolve(self.topology)
+        self._check_wire_dtype()
         self._W = jnp.asarray(self.topology.W, dtype=jnp.float32)
         self._Ws = (jnp.asarray(self.schedule.stacked_W(), dtype=jnp.float32)
                     if self.schedule is not None else None)
+        # Hierarchical rounds mix through the factored form — exact intra
+        # mean, then the (n, n) inter factor — mirroring the sharded
+        # execution (and its bf16 wire point) instead of the flat W matmul.
+        tops = (self.schedule.topologies if self.schedule is not None
+                else (self.topology,))
+        if (all(t.name == "hierarchical" for t in tops)
+                and self.membership is None):
+            self._hier_m = int(self.topology.axis_sizes[1])
+            self._hier_R = jnp.asarray(
+                np.stack([_inter_factor(t) for t in tops]), jnp.float32)
+        else:
+            self._hier_m = 0
+            self._hier_R = None
         if self.membership is not None:
             self.membership.validate()
             if self.membership.n_workers != self.topology.n_workers:
@@ -244,7 +287,42 @@ class DenseComm(CommBackend):
         return self._act[jnp.mod(jnp.asarray(r), self._act.shape[0])]
 
     def mix(self, tree, r=None):
+        if self._hier_R is not None:
+            return self._apply_hier(self._hier_R_at(r), tree)
         return self._apply_W(self._W_at(r), tree)
+
+    def _hier_R_at(self, r):
+        if self._hier_R.shape[0] == 1:
+            return self._hier_R[0]
+        if r is None:
+            raise ValueError(
+                "DenseComm with a TopologySchedule needs the round index: "
+                "mix(tree, r=...)")
+        return self._hier_R[jnp.mod(jnp.asarray(r), self._hier_R.shape[0])]
+
+    def _apply_hier(self, R, tree):
+        """Factored hierarchical round: exact intra mean, inter factor on
+        the node means, result rebroadcast in-node — the same program the
+        sharded backend executes (``pmean`` → leader gossip → ``psum``),
+        so the bf16 wire point sits exactly where the slow link is."""
+        m = self._hier_m
+
+        def _mix(leaf):
+            K = leaf.shape[0]
+            assert K == self.topology.n_workers, (
+                f"leaf worker dim {K} != K={self.topology.n_workers}")
+            flat = leaf.reshape(K // m, m, -1).astype(jnp.float32)
+            xa = flat.mean(axis=1)
+            if self.wire_dtype == "bfloat16":
+                diag = jnp.diagonal(R)
+                wire = xa.astype(jnp.bfloat16).astype(jnp.float32)
+                mixed = diag[:, None] * xa + (R - jnp.diag(diag)) @ wire
+            else:
+                mixed = R @ xa
+            out = jnp.broadcast_to(mixed[:, None, :], flat.shape)
+            return out.astype(leaf.dtype).reshape(leaf.shape)
+
+        return jax.tree_util.tree_map(_mix, tree)
 
     def stale_mix(self, tree, r=None):
         if self.membership is None:
@@ -263,9 +341,18 @@ class DenseComm(CommBackend):
             K = leaf.shape[0]
             assert K == self.topology.n_workers, (
                 f"leaf worker dim {K} != K={self.topology.n_workers}")
-            flat = leaf.reshape(K, -1)
-            out = (W @ flat.astype(jnp.float32)).astype(leaf.dtype)
-            return out.reshape(leaf.shape)
+            flat = leaf.reshape(K, -1).astype(jnp.float32)
+            if self.wire_dtype == "bfloat16":
+                # what ships is the off-diagonal payload: each worker keeps
+                # its own value at full precision and receives neighbours'
+                # values bf16-rounded, accumulating in f32 — the sharded
+                # backend's wire semantics, simulated
+                diag = jnp.diagonal(W)
+                wire = flat.astype(jnp.bfloat16).astype(jnp.float32)
+                out = diag[:, None] * flat + (W - jnp.diag(diag)) @ wire
+            else:
+                out = W @ flat
+            return out.astype(leaf.dtype).reshape(leaf.shape)
 
         return jax.tree_util.tree_map(_mix, tree)
 
@@ -303,9 +390,11 @@ class ShardedComm(CommBackend):
     topology: Topology  # or a TopologySchedule at construction
     axis_names: Tuple[str, ...]
     membership: Optional[MembershipSchedule] = None
+    wire_dtype: str = "float32"
 
     def __post_init__(self):
         self._resolve(self.topology)
+        self._check_wire_dtype()
         for top in (self.schedule.topologies if self.schedule is not None
                     else (self.topology,)):
             # 'complete' mixes via pmean over all named axes — grid unused.
@@ -394,17 +483,42 @@ class ShardedComm(CommBackend):
             y = x
             for ax in sorted(per_axis):
                 acc = None
+                payload = self._wire_cast(y)
                 for (kind, arg, w) in per_axis[ax]:
-                    if kind == "shift":
-                        v = y if arg == 0 else self._receive_from(y, ax, arg)
+                    if kind == "shift" and arg == 0:
+                        v = y.astype(jnp.float32)       # self term: no wire
+                    elif kind == "shift":
+                        v = self._unwire_cast(
+                            self._receive_from(payload, ax, arg))
                     else:
-                        v = self._receive_perm(y, ax, arg)
-                    term = v.astype(jnp.float32) * jnp.float32(w)
+                        v = self._unwire_cast(
+                            self._receive_perm(payload, ax, arg))
+                    term = v * jnp.float32(w)
                     acc = term if acc is None else acc + term
                 y = acc.astype(x.dtype)
             return y
 
         return jax.tree_util.tree_map(mix_leaf, tree)
+
+    def _wire_cast(self, x):
+        """What actually ships: the neighbour payload in the wire dtype
+        (the self term never crosses the wire and stays full precision).
+        The bf16 payload ships bitcast to u16: XLA's convert mover happily
+        slides a float down-cast past the ppermute (re-widening the wire
+        to 4 B/elem), but never commutes converts across integer bitcasts,
+        so the 2 B/elem wire is pinned on every backend."""
+        if self.wire_dtype == "bfloat16":
+            return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16),
+                                                jnp.uint16)
+        return x
+
+    def _unwire_cast(self, v):
+        """Received payload back to f32 for the mixing accumulation
+        (inverse of :meth:`_wire_cast`)."""
+        if self.wire_dtype == "bfloat16":
+            return jax.lax.bitcast_convert_type(
+                v, jnp.bfloat16).astype(jnp.float32)
+        return v.astype(jnp.float32)
 
     def _mix_with_masked(self, top: Topology, act, tree):
         """One gossip round under a specific topology with only ``act``
@@ -453,11 +567,12 @@ class ShardedComm(CommBackend):
 
         def mix_leaf(x):
             acc = x.astype(jnp.float32) * diag
+            payload = self._wire_cast(x)
             for c, (_coeff, pairs) in zip(coeffs, entries):
                 if not pairs:
                     continue
-                v = jax.lax.ppermute(x, name, pairs)
-                acc = acc + v.astype(jnp.float32) * c
+                v = self._unwire_cast(jax.lax.ppermute(payload, name, pairs))
+                acc = acc + v * c
             return acc.astype(x.dtype)
 
         return jax.tree_util.tree_map(mix_leaf, tree)
@@ -510,31 +625,294 @@ class ShardedComm(CommBackend):
         return out
 
 
+@dataclasses.dataclass
+class HierarchicalComm(ShardedComm):
+    """Two-level sharded backend: exact intra-node average + inter-node
+    gossip between node leaders.
+
+    Workers live on the ``(n_nodes, node_size)`` grid of a
+    ``"hierarchical"`` topology (or a schedule of them — e.g.
+    ``hierarchical_schedule``'s one-peer-exp inter rounds).  Each round
+    executes the factored matrix ``W_inter ⊗ (1/m)11ᵀ`` as:
+
+    1. **intra** — grouped ``pmean`` over the node's ``m`` workers (the
+       only non-ppermute collective the round contract allows), on the
+       fast in-host links;
+    2. **inter** — ``ppermute`` of the node mean between node *leaders*
+       only (pruned source→dest pairs), optionally bf16
+       (``wire_dtype``) or codec-compressed (``inter_codec``) — the slow
+       cross-host wire, amortized over the node's ``m`` workers;
+    3. **rebroadcast** — grouped ``psum`` of the leader's mixed value
+       back to its node (intra links again).
+
+    Two mesh layouts are supported:
+
+    * ``axis_names = (name,)`` — one flat worker axis of size
+      ``n_nodes × node_size``; worker ``i·m + j`` is node ``i`` member
+      ``j`` and member 0 is the leader.  Intra steps are
+      ``axis_index_groups`` collectives, the inter ppermute is pruned to
+      leaders.
+    * ``axis_names = (inter, intra)`` — the node boundary *is* a mesh
+      axis (e.g. ``("pod", "data")``); ``node_size`` must equal the
+      intra-axis size.  Every device holds its node mean after the full-
+      axis ``pmean``, so the inter ppermute runs unpruned (per-device
+      bytes are the same; there is no leader amortization) and no
+      rebroadcast is needed.
+
+    ``inter_codec`` compresses the inter wire with any keyless
+    :class:`repro.core.wire.WireCodec` (identity/sign/qsgd/topk; randk
+    needs a shared key and is rejected).  The self term stays full
+    precision, so a lossy codec makes this standard *biased* compressed
+    gossip — identity is bit-exact with no codec.  Elastic membership is
+    dense-only (a masked two-level program is not expressible as pruned
+    grouped collectives); use ``DenseComm`` with a hierarchical topology
+    to simulate churn.
+    """
+
+    inter_codec: Optional[object] = None   # keyless WireCodec or None
+
+    def __post_init__(self):
+        self._resolve(self.topology)
+        self._check_wire_dtype()
+        for top in (self.schedule.topologies if self.schedule is not None
+                    else (self.topology,)):
+            if top.name != "hierarchical" or len(top.axis_sizes) != 2:
+                raise ValueError(
+                    "HierarchicalComm needs hierarchical (n_nodes, "
+                    f"node_size) topologies; got {top.name!r} with grid "
+                    f"{top.axis_sizes}")
+        if len(self.axis_names) not in (1, 2):
+            raise ValueError(
+                "HierarchicalComm maps onto one flat worker axis or an "
+                f"(inter, intra) axis pair; got {self.axis_names}")
+        if self.membership is not None:
+            raise ValueError(
+                "elastic membership on HierarchicalComm is not supported: "
+                "masked two-level rounds are not expressible as pruned "
+                "grouped collectives — run hierarchical churn on DenseComm")
+        if self.inter_codec is not None:
+            if getattr(self.inter_codec, "name", "") == "randk":
+                raise ValueError(
+                    "randk inter_codec needs a shared per-round key; use "
+                    "identity/sign/qsgd/topk on the inter wire")
+            if self.wire_dtype != "float32":
+                raise ValueError(
+                    "inter_codec already defines the wire encoding; "
+                    "combine it with wire_dtype='float32'")
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.topology.axis_sizes[0])
+
+    @property
+    def node_size(self) -> int:
+        return int(self.topology.axis_sizes[1])
+
+    @property
+    def hier_leader_pruned(self) -> bool:
+        """True when only node leaders ship the inter wire (flat-axis
+        layout) — per-worker inter bytes amortize over ``node_size``."""
+        return len(self.axis_names) == 1
+
+    def inter_degree(self, r: int = 0) -> int:
+        return len(hierarchical_inter_shifts(self.topology_at(r)))
+
+    def _node_groups(self):
+        m, n = self.node_size, self.n_nodes
+        return [[i * m + j for j in range(m)] for i in range(n)]
+
+    def _level_ops(self, top: Topology):
+        """The three per-layout primitives of one two-level round:
+        ``node_avg`` (exact intra mean, f32), ``recv(payload, shift)``
+        (inter-node exchange of an arbitrary payload array) and
+        ``rebroadcast`` (mixed leader value back to its node)."""
+        n, m = int(top.axis_sizes[0]), int(top.axis_sizes[1])
+        if len(self.axis_names) == 2:
+            inter_name, intra_name = self.axis_names
+
+            def node_avg(x):
+                if m == 1:
+                    return x.astype(jnp.float32)
+                return jax.lax.pmean(x.astype(jnp.float32), intra_name)
+
+            def recv(payload, sh):
+                perm = [(j, (j - sh) % n) for j in range(n)]
+                return jax.lax.ppermute(payload, inter_name, perm)
+
+            # every device already holds its node mean post-pmean, so the
+            # unpruned ppermute leaves all of them consistent — no step 3
+            def rebroadcast(acc):
+                return acc
+
+            return node_avg, recv, rebroadcast
+
+        name = self.axis_names[0]
+        groups = self._node_groups()
+
+        def node_avg(x):
+            if m == 1:
+                return x.astype(jnp.float32)
+            return jax.lax.pmean(x.astype(jnp.float32), name,
+                                 axis_index_groups=groups)
+
+        def recv(payload, sh):
+            # leaders only: non-paired destinations receive zeros, which
+            # the rebroadcast below overwrites
+            pairs = [(s * m, ((s - sh) % n) * m) for s in range(n)]
+            return jax.lax.ppermute(payload, name, pairs)
+
+        if m == 1:
+            def rebroadcast(acc):
+                return acc
+        else:
+            def rebroadcast(acc):
+                is_leader = jnp.equal(
+                    jnp.mod(jax.lax.axis_index(name), m), 0)
+                only_leader = jnp.where(is_leader, acc,
+                                        jnp.zeros_like(acc))
+                return jax.lax.psum(only_leader, name,
+                                    axis_index_groups=groups)
+
+        return node_avg, recv, rebroadcast
+
+    def _inter_mix(self, xa, top, recv, *, wire=None, unwire=None):
+        """Weighted inter-node accumulation on a node mean ``xa`` (f32).
+        ``wire``/``unwire`` optionally restrict what ships to a payload
+        slice (kernel used_rows) and pad it back after decode."""
+        inter = hierarchical_inter_shifts(top)
+        ws = hierarchical_self_weight(top)
+        if not inter:
+            return xa
+        if wire is None:
+            wire = unwire = lambda v: v
+        acc = xa * jnp.float32(ws)
+        src = wire(xa)
+        if self.inter_codec is not None:
+            pay = self.inter_codec.pack(src)
+            for (sh, w) in inter:
+                got = {k: recv(v, sh) for k, v in pay.items()}
+                dec = self.inter_codec.unpack(got, src.size, src.shape,
+                                              jnp.float32)
+                acc = acc + unwire(dec) * jnp.float32(w)
+        else:
+            payload = self._wire_cast(src)
+            for (sh, w) in inter:
+                v = self._unwire_cast(recv(payload, sh))
+                acc = acc + unwire(v) * jnp.float32(w)
+        return acc
+
+    def _mix_with(self, top: Topology, tree):
+        """One two-level round under a specific hierarchical topology."""
+        node_avg, recv, rebroadcast = self._level_ops(top)
+
+        def mix_leaf(x):
+            xa = node_avg(x)
+            acc = self._inter_mix(xa, top, recv)
+            return rebroadcast(acc).astype(x.dtype)
+
+        return jax.tree_util.tree_map(mix_leaf, tree)
+
+    def mix_mat(self, x_mat, *, plan=None, r: int = 0):
+        """Kernel-path round on the flatten-once ``(rows, LANE)`` matrix:
+        the intra levels run on the full matrix (alignment-tail zeros
+        average to zero and stay zero), while the inter wire ships only
+        the plan's ``used_rows`` slice — accounted ≡ shipped.  Static
+        topologies only (schedules go through :meth:`mix`)."""
+        top = self.topology_at(r)
+        node_avg, recv, rebroadcast = self._level_ops(top)
+        u = None if plan is None else int(plan.used_rows)
+        if u is None or u >= x_mat.shape[-2]:
+            wire = unwire = None
+        else:
+            def wire(v):
+                return v[..., :u, :]
+            unwire = plan.pad_wire
+        xa = node_avg(x_mat)
+        acc = self._inter_mix(xa, top, recv, wire=wire, unwire=unwire)
+        return rebroadcast(acc).astype(x_mat.dtype)
+
+    def shift_views(self, tree):
+        raise NotImplementedError(
+            "HierarchicalComm has no flat per-shift views: the inter wire "
+            "moves node means between leaders, not raw worker tensors")
+
+
+def _wire_leaf_bytes(tree, backend: CommBackend) -> int:
+    """Σ leaf bytes as they ship on the wire: leaf dtype, downshifted to
+    the backend's wire dtype when that is narrower (bf16 x-wire)."""
+    wi = getattr(backend, "wire_itemsize", 4)
+    return sum(int(np.prod(l.shape)) * min(int(l.dtype.itemsize), wi)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
 def gossip_bytes_per_round(tree, backend: CommBackend,
                            bits_per_element: float | None = None,
                            r: int = 0) -> int:
     """Per-worker bytes sent in communication round ``r`` (comm-cost model).
 
-    Full precision: round-r degree × Σ leaf bytes.  With compression, pass
+    Full precision: round-r degree × Σ leaf bytes (at the backend's wire
+    dtype — bf16 halves the uncompressed payload).  With compression, pass
     the compressor's ``wire_bits_per_element``.  Under a time-varying
     schedule the degree — and hence the bytes — varies by round; under a
     membership schedule dead edges ship zero bytes, so the multiplier is
-    the round's active-edge count averaged over workers (a float).  The
-    optimizer's ``bytes_per_round_cycle`` collects the full joint cycle.
+    the round's active-edge count averaged over workers (a float).
+    Hierarchical topologies charge the slow-link level only (the headline
+    figure): see :func:`hier_bytes_per_round` for the per-level split.
+    The optimizer's ``bytes_per_round_cycle`` collects the joint cycle.
     """
+    top = backend.topology_at(r)
+    if top.name == "hierarchical" and backend.membership is None:
+        return hier_bytes_per_round(tree, backend, r=r)["inter"]
     total_elems = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
-    deg = backend.topology_at(r).degree
+    deg = top.degree
     if backend.membership is not None:
         epw = backend.edges_per_worker(r)
         if bits_per_element is None:
-            bytes_ = sum(
-                int(np.prod(l.shape)) * l.dtype.itemsize
-                for l in jax.tree_util.tree_leaves(tree))
-            return epw * bytes_
+            return epw * _wire_leaf_bytes(tree, backend)
         return float(epw * total_elems * bits_per_element / 8.0)
     if bits_per_element is None:
-        bytes_ = sum(
-            int(np.prod(l.shape)) * l.dtype.itemsize
-            for l in jax.tree_util.tree_leaves(tree))
-        return deg * bytes_
+        return deg * _wire_leaf_bytes(tree, backend)
     return int(deg * total_elems * bits_per_element / 8.0)
+
+
+def hier_bytes_per_round(tree, backend: CommBackend, r: int = 0) -> dict:
+    """Per-level comm-cost split of one hierarchical round.
+
+    Returns a dict of per-worker byte figures for round ``r``:
+
+    * ``"inter"`` — slow-link bytes per *worker*: inter-degree × payload
+      (codec wire bytes when ``inter_codec`` is set, else leaf bytes at
+      the wire dtype), divided by ``node_size`` when only leaders ship
+      (flat-axis layout / dense simulation) — the headline accounting.
+    * ``"inter_site"`` — slow-link bytes at the collective-permute op
+      site per participating device (no leader amortization): what the
+      HLO byte check reads off the compiled program.
+    * ``"intra_wire"`` — fast-link bytes per worker: ring all-reduce
+      wire cost ``2(m−1)/m × f32 bytes`` per intra collective (average +
+      rebroadcast on the flat-axis layout; average only on the two-axis
+      layout, where no rebroadcast ships).
+    * ``"intra_result"`` — Σ all-reduce *result* bytes (what the HLO
+      parser reports per op), for accounted ≡ shipped per level.
+    """
+    top = backend.topology_at(r)
+    if top.name != "hierarchical":
+        raise ValueError(f"not a hierarchical topology: {top.name!r}")
+    m = int(top.axis_sizes[1])
+    leaves = jax.tree_util.tree_leaves(tree)
+    elems = sum(int(np.prod(l.shape)) for l in leaves)
+    ideg = len(hierarchical_inter_shifts(top))
+    codec = getattr(backend, "inter_codec", None)
+    if codec is not None:
+        payload = sum(codec.wire_bytes(int(np.prod(l.shape)))
+                      for l in leaves)
+    else:
+        payload = _wire_leaf_bytes(tree, backend)
+    pruned = bool(getattr(backend, "hier_leader_pruned", True))
+    site = ideg * payload
+    n_intra = 0 if m == 1 else (2 if pruned else 1)
+    return {
+        "inter": site / m if pruned else float(site),
+        "inter_site": site,
+        "intra_wire": n_intra * (2.0 * (m - 1) / m) * 4 * elems,
+        "intra_result": n_intra * 4 * elems,
+    }

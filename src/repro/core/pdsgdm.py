@@ -24,7 +24,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gossip import CommBackend, DenseComm
+from repro.core.gossip import CommBackend, DenseComm, HierarchicalComm
 
 __all__ = ["PDSGDMConfig", "PDSGDM"]
 
@@ -364,7 +364,8 @@ class PDSGDM:
         return ((self.comm.schedule is None or self.comm.period == 1)
                 and self.comm.membership is None
                 and not top.perms
-                and top.name not in ("complete", "disconnected"))
+                and top.name not in ("complete", "disconnected",
+                                     "hierarchical"))
 
     def _gossip_mat(self, x_mat, r, *, plan=None):
         """Gossip mix on the kernel layout.  Static shift-structured graphs
@@ -380,6 +381,12 @@ class PDSGDM:
         """
         from repro.kernels import ops as kops
         if not self._mat_wire_static():
+            comm = self.comm
+            if (isinstance(comm, HierarchicalComm)
+                    and (comm.schedule is None or comm.period == 1)):
+                # two-level round on the matrix: intra pmean on the full
+                # rows, inter wire sliced to used_rows (accounted ≡ shipped)
+                return comm.mix_mat(x_mat, plan=plan)
             return self.comm.mix(x_mat, r=r)
         top = self.comm.topology
         u = plan.used_rows if plan is not None else None
@@ -389,18 +396,38 @@ class PDSGDM:
         y = x_mat
         for ax in sorted(per_axis):
             views, weights = [], []
+            payload = self._wire_cast_mat(y)
             for (sh, w) in per_axis[ax]:
                 if sh == 0:
                     views.append(y)
                 elif u is not None and u < y.shape[-2]:
-                    views.append(plan.pad_wire(
-                        self._shift_view_mat(plan.wire(y), ax, sh)))
+                    views.append(plan.pad_wire(self._unwire_cast_mat(
+                        self._shift_view_mat(plan.wire(payload), ax, sh))))
                 else:
-                    views.append(self._shift_view_mat(y, ax, sh))
+                    views.append(self._unwire_cast_mat(
+                        self._shift_view_mat(payload, ax, sh)))
                 weights.append(w)
             y = kops.gossip_mix_mat(tuple(views), tuple(weights),
                                     interpret=self.config.kernel_interpret)
         return y
+
+    def _wire_cast_mat(self, v):
+        """The neighbour payload in the backend's wire dtype (bf16 halves
+        the kernel-path bytes; the self view stays f32).  Bitcast to u16
+        so the down-cast cannot slide past the ppermute (see
+        ``CommBackend._wire_cast``)."""
+        if getattr(self.comm, "wire_dtype", "float32") == "bfloat16":
+            return jax.lax.bitcast_convert_type(v.astype(jnp.bfloat16),
+                                                jnp.uint16)
+        return v
+
+    def _unwire_cast_mat(self, v):
+        """Received kernel payload back to f32 (inverse of
+        ``_wire_cast_mat``)."""
+        if getattr(self.comm, "wire_dtype", "float32") == "bfloat16":
+            return jax.lax.bitcast_convert_type(
+                v, jnp.bfloat16).astype(jnp.float32)
+        return v.astype(jnp.float32)
 
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
         """One gossip round on the kernel layout (``counts`` unused here;
@@ -411,10 +438,13 @@ class PDSGDM:
     def _stale_gossip_mat(self, x_mat, r, *, plan=None):
         """Stale mix on the kernel matrix.  Static full-membership graphs
         reuse the shift-structured AXPY wire (stale ≡ regular there: no
-        membership mask to shift by one round); elastic/scheduled comms
-        route through ``comm.stale_mix`` on the matrix, which keys the
-        membership mask on the delivery round r+1."""
-        if self._mat_wire_static():
+        membership mask to shift by one round); hierarchical comms carry
+        no membership either, so stale ≡ regular and the plan-sliced wire
+        applies too; elastic/scheduled comms route through
+        ``comm.stale_mix`` on the matrix, which keys the membership mask
+        on the delivery round r+1."""
+        if self._mat_wire_static() or isinstance(self.comm,
+                                                 HierarchicalComm):
             return self._gossip_mat(x_mat, r, plan=plan)
         return self.comm.stale_mix(x_mat, r=r)
 
@@ -529,22 +559,52 @@ class PDSGDM:
         return params, state, losses
 
     # -- comm-cost model ----------------------------------------------------------
-    def _mat_wire_bytes(self, params) -> int:
-        """f32 bytes of one neighbour exchange on the kernel layout: the
-        ``used_rows`` wire extent (Σ per-leaf ceil(size/1024) rows × 1024)
-        that actually ships — master copies stay f32 across the round."""
+    def _mat_wire_rows(self, params) -> int:
+        """``used_rows`` wire extent of the kernel layout: Σ per-leaf
+        ceil(size/1024) rows."""
         import numpy as np
         from repro.kernels import LANE
-        rows = sum(-(-int(np.prod(l.shape, dtype=np.int64)) // LANE)
+        return sum(-(-int(np.prod(l.shape, dtype=np.int64)) // LANE)
                    for l in jax.tree_util.tree_leaves(params))
-        return rows * LANE * 4
+
+    def _mat_wire_bytes(self, params) -> int:
+        """Bytes of one neighbour exchange on the kernel layout: the
+        ``used_rows`` wire extent (Σ per-leaf ceil(size/1024) rows × 1024)
+        at the wire dtype — master copies stay f32 across the round, but a
+        bf16 wire ships the neighbour payload at 2 B/elem."""
+        from repro.kernels import LANE
+        item = min(4, getattr(self.comm, "wire_itemsize", 4))
+        return self._mat_wire_rows(params) * LANE * item
 
     def _kernel_wire_active(self) -> bool:
         return (self.config.use_kernel and self.kernel_comm_supported
                 and self._mat_wire_static())
 
+    def _kernel_hier_active(self) -> bool:
+        """Whether the round gossips through ``HierarchicalComm.mix_mat``
+        (kernel layout, static hierarchical graph) — the inter payload is
+        then the ``(used_rows, 1024)`` matrix, not the leaf tree."""
+        return (self.config.use_kernel and self.kernel_comm_supported
+                and isinstance(self.comm, HierarchicalComm)
+                and (self.comm.schedule is None or self.comm.period == 1))
+
+    def hier_bytes_per_level(self, params, r: int = 0) -> dict:
+        """Per-level byte split of one hierarchical round (see
+        :func:`repro.core.gossip.hier_bytes_per_round`); on the kernel
+        path the payload is the flatten-once ``used_rows × 1024`` matrix."""
+        from repro.core.gossip import hier_bytes_per_round
+        from repro.kernels import LANE
+        payload = params
+        if self._kernel_hier_active():
+            payload = [jax.ShapeDtypeStruct(
+                (self._mat_wire_rows(params) * LANE,), jnp.float32)]
+        return hier_bytes_per_round(payload, self.comm, r=r)
+
     def bytes_per_comm_round(self, params, r: int = 0) -> int:
         from repro.core.gossip import gossip_bytes_per_round
+        top = self.comm.topology_at(r)
+        if top.name == "hierarchical" and self.comm.membership is None:
+            return self.hier_bytes_per_level(params, r=r)["inter"]
         if self._kernel_wire_active():
             deg = self.comm.topology_at(r).degree
             return deg * self._mat_wire_bytes(params)

@@ -37,6 +37,10 @@ __all__ = [
     "complete",
     "exponential",
     "disconnected",
+    "hierarchical",
+    "hierarchical_schedule",
+    "hierarchical_inter_shifts",
+    "hierarchical_self_weight",
     "spectral_gap",
     "mixing_gap",
     "cycle_spectral_gap",
@@ -277,6 +281,66 @@ def disconnected(K: int) -> Topology:
     return Topology("disconnected", np.eye(K), ((0, 0, 1.0),), (K,))
 
 
+def _hier_compose(sub: Topology, n_nodes: int, node_size: int) -> Topology:
+    """Lift an inter-node graph ``sub`` over ``n_nodes`` to the two-level
+    worker grid ``(n_nodes, node_size)``: W = W_inter ⊗ W_intra with
+    W_intra = (1/m)11ᵀ (exact in-node average)."""
+    m = int(node_size)
+    C = np.full((m, m), 1.0 / m)
+    W = np.kron(sub.W, C)
+    shifts = (tuple((0, sh, w) for (_, sh, w) in sub.shifts)
+              + tuple((1, s, 1.0 / m) for s in range(m)))
+    return Topology("hierarchical", W, shifts, (int(n_nodes), m),
+                    symmetric=bool(np.allclose(W, W.T)))
+
+
+def hierarchical(n_nodes: int, node_size: int, *,
+                 inter: str = "ring") -> Topology:
+    """Two-level gossip graph: exact intra-node average × inter-node graph.
+
+    Workers live on the grid ``(n_nodes, node_size)``; each round averages
+    exactly inside every node (the complete graph on the fast intra links)
+    and gossips between nodes over ``inter`` ("ring" / "exponential" /
+    "complete") on the slow links.  The mixing matrix factors as::
+
+        W_hier = W_intra · W_inter = (I ⊗ (1/m)11ᵀ)(W_inter ⊗ I)
+               = W_inter ⊗ (1/m)11ᵀ
+
+    (axis 1 is applied after axis 0 by ``structure_matrix``, matching the
+    sharded execution order: average in-node first, then only node leaders
+    ship the slow-link wire).  ρ(W_hier) = ρ(W_inter over nodes): the intra
+    factor collapses each node to its mean, so mixing quality is set
+    entirely by the inter graph while inter-node bytes drop by the
+    node-size factor (only leaders ship, amortized over m workers).
+    """
+    n, m = int(n_nodes), int(node_size)
+    if n < 1 or m < 1:
+        raise ValueError(
+            f"hierarchical: need n_nodes ≥ 1 and node_size ≥ 1, got "
+            f"({n_nodes}, {node_size})")
+    sub = make_topology(inter, (n,))
+    if sub.perms:
+        raise ValueError(
+            f"hierarchical: inter graph {inter!r} must be shift-structured")
+    return _hier_compose(sub, n, m)
+
+
+def hierarchical_inter_shifts(top: Topology) -> tuple:
+    """Non-self inter-node exchanges of a hierarchical topology, as
+    ``(shift, weight)`` pairs on the node axis (axis 0)."""
+    n = int(top.axis_sizes[0])
+    return tuple((sh % n, w) for (ax, sh, w) in top.shifts
+                 if ax == 0 and sh % n != 0)
+
+
+def hierarchical_self_weight(top: Topology) -> float:
+    """Inter-level self weight of a hierarchical topology (the mass each
+    node keeps of its own post-average value)."""
+    n = int(top.axis_sizes[0])
+    return float(sum(w for (ax, sh, w) in top.shifts
+                     if ax == 0 and sh % n == 0))
+
+
 def make_topology(name: str, worker_grid: Sequence[int]) -> Topology:
     """Build topology by name for a worker grid (product = K)."""
     worker_grid = tuple(int(g) for g in worker_grid)
@@ -292,6 +356,12 @@ def make_topology(name: str, worker_grid: Sequence[int]) -> Topology:
         return exponential(K)
     if name == "disconnected":
         return disconnected(K)
+    if name == "hierarchical":
+        if len(worker_grid) != 2:
+            raise ValueError(
+                "hierarchical topology needs a (n_nodes, node_size) worker "
+                f"grid; got {worker_grid}")
+        return hierarchical(worker_grid[0], worker_grid[1])
     raise ValueError(f"unknown topology {name!r}")
 
 
@@ -396,6 +466,25 @@ def one_peer_exponential_schedule(K: int,
     return TopologySchedule("one_peer_exp", tuple(tops))
 
 
+def hierarchical_schedule(n_nodes: int, node_size: int,
+                          self_weight: float = 0.5) -> TopologySchedule:
+    """Two-level schedule: one-peer exponential *between nodes*, exact
+    average inside every node, every round.
+
+    Round ``j`` lifts the one-peer exponential round ``R_j`` over nodes to
+    ``R_j ⊗ (1/m)11ᵀ``, so each round ships exactly one inter-node wire per
+    node (degree 1 on the slow links) while the cycle product
+    ``(∏R_j) ⊗ (1/m)11ᵀ`` reaches exact averaging when ``n_nodes`` is a
+    power of two (``cycle_rho = 1``) — hypercube mixing at leader bytes.
+    """
+    n, m = int(n_nodes), int(node_size)
+    if n == 1:
+        return static_schedule(hierarchical(1, m))
+    base = one_peer_exponential_schedule(n, self_weight)
+    tops = tuple(_hier_compose(t, n, m) for t in base.topologies)
+    return TopologySchedule("hier_one_peer", tops)
+
+
 def alternating_axes_schedule(shape: Sequence[int],
                               self_weight: float | None = None
                               ) -> TopologySchedule:
@@ -467,6 +556,12 @@ def make_schedule(name: str, worker_grid: Sequence[int], *,
         return one_peer_exponential_schedule(K)
     if key in ("alt_axes", "alternating_axes"):
         return alternating_axes_schedule(grid if len(grid) > 1 else (K,))
+    if key in ("hier_one_peer", "hierarchical_one_peer"):
+        if len(grid) != 2:
+            raise ValueError(
+                "hier_one_peer needs a (n_nodes, node_size) worker grid; "
+                f"got {grid}")
+        return hierarchical_schedule(grid[0], grid[1])
     if key in ("random_matching", "random_match"):
         if len(grid) > 1:
             raise ValueError(

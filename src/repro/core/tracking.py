@@ -110,6 +110,13 @@ class MTDSGDm(PDSGDM):
                 "(full-precision c overlaps on both backends) or run "
                 "synchronous rounds.")
         if self.codec is not None and isinstance(comm, ShardedComm):
+            if comm.topology.name == "hierarchical":
+                raise ValueError(
+                    "MT-DSGDm compressed tracking does not compose with the "
+                    "sharded hierarchical backend: the correction wire would "
+                    "need its own codec lane through the two-level round.  "
+                    "Use the hierarchical inter_codec for x compression, or "
+                    "run compressed tracking on a flat topology.")
             if comm.topology.name == "complete":
                 raise ValueError(
                     "MT-DSGDm compressed tracking on the sharded backend "
@@ -469,7 +476,13 @@ class MTDSGDm(PDSGDM):
         degree; under elastic membership the active-edge count averaged
         over workers, dead edges shipping zero bytes)."""
         from repro.core.gossip import gossip_bytes_per_round
-        deg = self.comm.topology_at(r).degree
+        top = self.comm.topology_at(r)
+        if top.name == "hierarchical" and self.comm.membership is None:
+            # x and the uncompressed c ship through identical two-level
+            # rounds (compressed tracking + hierarchical is rejected at
+            # construction) — hier_bytes_per_level below doubles per level
+            return self.hier_bytes_per_level(params, r=r)["inter"]
+        deg = top.degree
         epw = self.comm.edges_per_worker(r)
         if self._kernel_wire_active():
             x_bytes = deg * self._mat_wire_bytes(params)
@@ -484,9 +497,16 @@ class MTDSGDm(PDSGDM):
             # uncompressed c ships on the same used_rows kernel wire as x
             c_payload = self._mat_wire_bytes(params)
         else:
-            c_payload = sum(int(np.prod(l.shape, dtype=np.int64)) * 4
+            item = min(4, getattr(self.comm, "wire_itemsize", 4))
+            c_payload = sum(int(np.prod(l.shape, dtype=np.int64)) * item
                             for l in leaves)
         return x_bytes + epw * c_payload
+
+    def hier_bytes_per_level(self, params, r: int = 0) -> dict:
+        """MT gossips the ``(x, c)`` pair: every level of the two-level
+        round runs twice per exchange, so each accounted entry doubles."""
+        levels = super().hier_bytes_per_level(params, r=r)
+        return {k: 2 * v for k, v in levels.items()}
 
 
 class QGDSGDm(PDSGDM):

@@ -116,6 +116,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     print(f"--- {arch} × {shape_name} × "
           f"{'2x16x16' if multi_pod else '16x16'} {tag}")
     print(f"memory_analysis: {mem}")
@@ -184,6 +186,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
+def _hier_overrides(multi_pod: bool):
+    """Two-level gossip on the production meshes: 16 workers → 4 nodes of
+    4 on the single-pod worker axis; on the 2×16×16 multi-pod mesh the
+    ("pod","data") layout requires node_size == data-axis size (the pod
+    boundary is the node boundary)."""
+    node_size = 16 if multi_pod else 4
+
+    def ov(run):
+        return dataclasses.replace(
+            run, parallel=dataclasses.replace(run.parallel,
+                                              node_size=node_size))
+    return ov
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -191,6 +207,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--hier", action="store_true",
+                    help="compile the two-level gossip round (node_size 4 "
+                         "single-pod / 16 multi-pod); artifacts tagged "
+                         "__hier")
     ap.add_argument("--outdir", default="artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -204,13 +224,18 @@ def main():
         for arch in archs:
             for shp in shapes:
                 mesh_tag = "2x16x16" if mp else "16x16"
-                path = os.path.join(args.outdir,
-                                    f"{arch}__{shp}__{mesh_tag}.json")
+                fname = f"{arch}__{shp}__{mesh_tag}"
+                if args.hier:
+                    fname += "__hier"
+                path = os.path.join(args.outdir, fname + ".json")
                 if args.skip_existing and os.path.exists(path):
                     print(f"skip (exists): {arch} × {shp} × {mesh_tag}")
                     continue
                 try:
-                    run_one(arch, shp, mp, args.outdir)
+                    run_one(arch, shp, mp, args.outdir,
+                            overrides=(_hier_overrides(mp) if args.hier
+                                       else None),
+                            tag=("hier" if args.hier else ""))
                 except Exception as e:  # noqa: BLE001
                     traceback.print_exc()
                     failures.append((arch, shp, mesh_tag, repr(e)[:200]))

@@ -33,9 +33,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelCfg, RunCfg
 from repro.configs.shapes import InputShape, train_batch_specs
 from repro.core import make_compressor, make_optimizer
-from repro.core.gossip import DenseComm, ShardedComm
-from repro.core.topology import (disconnected, make_schedule, make_topology,
-                                 torus)
+from repro.core.gossip import DenseComm, HierarchicalComm, ShardedComm
+from repro.core.topology import (disconnected, hierarchical, make_schedule,
+                                 make_topology, torus)
 from repro.launch.sharding import (Layout, batch_spec_tree, cache_spec_tree,
                                    make_layout, param_spec_tree, to_shardings)
 from repro.models import make_model
@@ -118,23 +118,73 @@ def build_comm(run: RunCfg, layout: Layout, membership=None):
     the fused round engine switches between them on the traced round index.
     ``membership`` (a ``MembershipSchedule``) masks dead/straggling workers
     out of each round's mixing matrix (elastic fleets).
+
+    ``parallel.node_size > 0`` selects two-level gossip
+    (:class:`HierarchicalComm`): exact intra-node averaging over groups of
+    ``node_size`` workers + ``parallel.topology`` between node leaders
+    (optionally codec-compressed via ``parallel.inter_codec``).  On a
+    two-axis worker layout the inner axis is the node.
     """
     waxes = layout.worker_axes
     sizes = layout.worker_sizes
+    wd = getattr(run.optim, "wire_dtype", "float32")
     if not waxes:
-        return DenseComm(disconnected(1), membership=membership)
+        return DenseComm(disconnected(1), membership=membership,
+                         wire_dtype=wd)
     sched_name = getattr(run.parallel, "topology_schedule", "static")
+    node_size = int(getattr(run.parallel, "node_size", 0) or 0)
+    if node_size:
+        K = int(layout.n_workers)
+        if len(waxes) == 2:
+            if node_size != sizes[1]:
+                raise ValueError(
+                    f"node_size {node_size} must equal the inner worker "
+                    f"axis size {sizes[1]} on a two-axis layout "
+                    f"{waxes}: the node boundary is the mesh axis")
+        elif K % node_size != 0:
+            raise ValueError(
+                f"node_size {node_size} does not divide the worker count "
+                f"{K}")
+        n_nodes = K // node_size
+        if sched_name in ("hier_one_peer", "hierarchical_one_peer"):
+            first = make_schedule("hier_one_peer", (n_nodes, node_size))
+        elif sched_name == "static":
+            first = hierarchical(n_nodes, node_size,
+                                 inter=run.parallel.topology)
+        else:
+            raise ValueError(
+                f"topology_schedule {sched_name!r} does not compose with "
+                "node_size (hierarchical rounds support 'static' and "
+                "'hier_one_peer')")
+        return HierarchicalComm(first, axis_names=waxes,
+                                membership=membership, wire_dtype=wd,
+                                inter_codec=_make_inter_codec(run))
     if sched_name != "static":
         sched = make_schedule(
             sched_name, sizes, base_topology=run.parallel.topology,
             rounds=run.parallel.schedule_rounds,
             seed=run.parallel.schedule_seed)
-        return ShardedComm(sched, axis_names=waxes, membership=membership)
+        return ShardedComm(sched, axis_names=waxes, membership=membership,
+                           wire_dtype=wd)
     if len(waxes) == 1:
         topo = make_topology(run.parallel.topology, sizes)
     else:
         topo = torus(sizes)  # hierarchical pod×ring mixing
-    return ShardedComm(topo, axis_names=waxes, membership=membership)
+    return ShardedComm(topo, axis_names=waxes, membership=membership,
+                       wire_dtype=wd)
+
+
+def _make_inter_codec(run: RunCfg):
+    """The keyless WireCodec for the hierarchical inter-node wire, from
+    ``parallel.inter_codec`` (shape knobs shared with the compressor)."""
+    from repro.core.wire import make_codec
+    name = str(getattr(run.parallel, "inter_codec", "none")).lower()
+    if name in ("none", ""):
+        return None
+    o = run.optim
+    comp = make_compressor(
+        name, **_compressor_kwargs(dataclasses.replace(o, compressor=name)))
+    return make_codec(comp)
 
 
 def _compressor_kwargs(o) -> dict:

@@ -35,6 +35,17 @@ def main():
                          "local scan and mix it one round late (stale "
                          "delayed mixing; unsupported optimizer combos "
                          "raise at construction)")
+    ap.add_argument("--node-size", type=int, default=None,
+                    help="hierarchical two-level gossip: exact intra-node "
+                         "averaging over groups of this many workers, "
+                         "--topology between node leaders only")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=("float32", "bfloat16"),
+                    help="dtype of the gossip payload on the wire "
+                         "(bfloat16 halves it; accumulation stays f32)")
+    ap.add_argument("--inter-codec", default=None,
+                    help="compress the hierarchical inter-node wire "
+                         "(identity|sign|topk|qsgd; needs --node-size)")
     ap.add_argument("--compressor", default=None,
                     help="cpd_sgdm/choco wire codec: "
                          "identity|sign|topk|randk|qsgd")
@@ -102,12 +113,19 @@ def main():
             optim, compressor_block=args.compressor_block)
     if args.track_compressed:
         optim = dataclasses.replace(optim, track_compressed=True)
+    if args.wire_dtype:
+        optim = dataclasses.replace(optim, wire_dtype=args.wire_dtype)
     parallel = run.parallel
     if args.topology:
         parallel = dataclasses.replace(parallel, topology=args.topology)
     if args.topology_schedule:
         parallel = dataclasses.replace(
             parallel, topology_schedule=args.topology_schedule)
+    if args.node_size is not None:
+        parallel = dataclasses.replace(parallel, node_size=args.node_size)
+    if args.inter_codec:
+        parallel = dataclasses.replace(parallel,
+                                       inter_codec=args.inter_codec)
     run = dataclasses.replace(run, optim=optim, parallel=parallel)
 
     n_dev = len(jax.devices())

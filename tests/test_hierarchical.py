@@ -1,0 +1,303 @@
+"""Hierarchical two-level gossip: topology factoring, dense round
+semantics (incl. the bf16 inter wire), per-level byte accounting, the
+composition guards, and (slow tier) dense ≡ sharded equivalence on 8
+forced host devices."""
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DenseComm, HierarchicalComm, make_optimizer
+from repro.core.gossip import hier_bytes_per_round
+from repro.core.topology import (MembershipSchedule, hierarchical,
+                                 hierarchical_inter_shifts,
+                                 hierarchical_schedule,
+                                 hierarchical_self_weight, make_topology,
+                                 ring)
+from repro.core.wire import IdentityCodec
+
+
+# ---------------------------------------------------------------- topology
+
+def test_w_is_kron_of_inter_and_intra_average():
+    top = hierarchical(2, 4)
+    C = np.full((4, 4), 0.25)
+    np.testing.assert_allclose(top.W, np.kron(ring(2).W, C))
+    assert top.name == "hierarchical"
+    assert top.axis_sizes == (2, 4)
+    np.testing.assert_allclose(top.W.sum(axis=1), 1.0)   # row-stochastic
+    top.validate()
+
+
+def test_structure_matrix_is_block_support():
+    top = hierarchical(4, 2)
+    S = top.structure_matrix()
+    # worker i·m+j talks to everyone in its node and in neighbour nodes
+    W = np.kron(ring(4).W, np.full((2, 2), 0.5))
+    np.testing.assert_array_equal(S != 0, W != 0)
+
+
+def test_inter_shifts_and_self_weight():
+    top = hierarchical(4, 2)
+    shifts = dict(hierarchical_inter_shifts(top))
+    # ring(4) between nodes: shifts ±1 (mod 4 → {1, 3}), equal weight
+    assert set(shifts) == {1, 3}
+    w = ring(4).W[0, 1]
+    assert shifts[1] == pytest.approx(w)
+    assert shifts[3] == pytest.approx(w)
+    assert hierarchical_self_weight(top) == pytest.approx(ring(4).W[0, 0])
+
+
+def test_schedule_cycle_reaches_exact_average():
+    sched = hierarchical_schedule(4, 2)
+    assert sched.name == "hier_one_peer"
+    assert sched.period == 2          # ceil(log2 4) one-peer-exp rounds
+    P = np.eye(8)
+    for top in sched.topologies:
+        assert top.name == "hierarchical"
+        P = top.W @ P
+    # (∏ R_j) ⊗ (1/m)11ᵀ = the exact global average on a power of two
+    np.testing.assert_allclose(P, np.full((8, 8), 1.0 / 8), atol=1e-12)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        hierarchical(0, 4)
+    with pytest.raises(ValueError):
+        make_topology("hierarchical", (8,))   # needs a (n, m) grid
+
+
+# ---------------------------------------------------------- dense semantics
+
+def _stacked(K, d=7, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (K, d),
+                             dtype=jnp.float32)
+
+
+def test_dense_hier_mix_equals_W_matmul():
+    top = hierarchical(2, 4)
+    x = _stacked(8)
+    mixed = DenseComm(top).mix([x])[0]
+    np.testing.assert_allclose(np.asarray(mixed),
+                               np.asarray(top.W) @ np.asarray(x),
+                               atol=1e-5)
+
+
+def test_dense_hier_bf16_wire_matches_oracle():
+    """bf16 quantization sits exactly on the inter wire: node means are
+    exact (f32), the self term is full precision, only the *shipped*
+    neighbour means round through bf16."""
+    top = hierarchical(2, 4)
+    x = _stacked(8, seed=3)
+    got = DenseComm(top, wire_dtype="bfloat16").mix([x])[0]
+
+    R = jnp.asarray(ring(2).W, dtype=jnp.float32)
+    xa = x.reshape(2, 4, -1).mean(axis=1)             # exact intra mean
+    wire = xa.astype(jnp.bfloat16).astype(jnp.float32)
+    diag = jnp.diagonal(R)
+    mixed = diag[:, None] * xa + (R - jnp.diag(diag)) @ wire
+    oracle = jnp.broadcast_to(mixed[:, None, :], (2, 4, x.shape[1]))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(oracle).reshape(8, -1), atol=1e-6)
+
+    exact = DenseComm(top).mix([x])[0]
+    err = np.abs(np.asarray(got) - np.asarray(exact)).max()
+    assert 0 < err < 2e-2            # quantized, but at bf16 resolution
+
+
+def test_dense_hier_all_active_membership_is_plain_round():
+    top = hierarchical(2, 2)
+    ms = MembershipSchedule("full", np.ones((1, 4), bool),
+                            np.ones((1, 4), bool))
+    x = _stacked(4, seed=5)
+    got = DenseComm(top, membership=ms).stale_mix([x], r=0)[0]
+    want = DenseComm(top).mix([x])[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------- byte accounting
+
+_TREE = [jax.ShapeDtypeStruct((1024,), jnp.float32),
+         jax.ShapeDtypeStruct((160,), jnp.float32)]
+_ELEMS = 1024 + 160
+
+
+def test_hier_bytes_leader_pruned_f32():
+    lv = hier_bytes_per_round(_TREE, DenseComm(hierarchical(2, 4)))
+    site = 1 * 4 * _ELEMS            # ideg(ring(2)) = 1 × f32 payload
+    assert lv["inter_site"] == site
+    assert lv["inter"] == pytest.approx(site / 4)      # leaders only
+    assert lv["intra_wire"] == pytest.approx(
+        2 * (2 * 3 / 4) * 4 * _ELEMS)                  # avg + rebroadcast
+    assert lv["intra_result"] == 2 * 4 * _ELEMS
+
+
+def test_hier_bytes_bf16_halves_inter_only():
+    f32 = hier_bytes_per_round(_TREE, DenseComm(hierarchical(2, 4)))
+    bf16 = hier_bytes_per_round(
+        _TREE, DenseComm(hierarchical(2, 4), wire_dtype="bfloat16"))
+    assert bf16["inter"] == pytest.approx(f32["inter"] / 2)
+    assert bf16["intra_wire"] == pytest.approx(f32["intra_wire"])
+
+
+def test_hier_bytes_two_axis_unpruned():
+    comm = HierarchicalComm(hierarchical(2, 4), ("pod", "data"))
+    assert comm.hier_leader_pruned is False
+    lv = hier_bytes_per_round(_TREE, comm)
+    assert lv["inter"] == lv["inter_site"]   # no leader amortization
+    assert lv["intra_wire"] == pytest.approx(
+        1 * (2 * 3 / 4) * 4 * _ELEMS)        # average only, no rebroadcast
+
+
+def test_optimizer_headline_bytes_and_mt_doubling():
+    pd = make_optimizer("pd_sgdm", DenseComm(hierarchical(2, 4)))
+    lv = pd.hier_bytes_per_level(_TREE)
+    assert pd.bytes_per_comm_round(_TREE) == pytest.approx(lv["inter"])
+    mt = make_optimizer("mt_dsgdm", DenseComm(hierarchical(2, 4)))
+    mt_lv = mt.hier_bytes_per_level(_TREE)
+    assert mt_lv == {k: 2 * v for k, v in lv.items()}   # (x, c) pair
+    assert mt.bytes_per_comm_round(_TREE) == pytest.approx(2 * lv["inter"])
+
+
+def test_flat_ring_vs_hier_reduction_arithmetic():
+    """The sweep's headline: ring(8) vs (2 nodes × 4, bf16) = 16×."""
+    flat = make_optimizer("pd_sgdm", DenseComm(ring(8)))
+    hier = make_optimizer("pd_sgdm", DenseComm(hierarchical(2, 4),
+                                               wire_dtype="bfloat16"))
+    red = flat.bytes_per_comm_round(_TREE) / hier.bytes_per_comm_round(_TREE)
+    assert red == pytest.approx(16.0)
+
+
+# ------------------------------------------------------------------ guards
+
+def test_c_sgdm_rejects_hierarchical():
+    with pytest.raises(ValueError, match="centralized baseline"):
+        make_optimizer("c_sgdm", DenseComm(hierarchical(2, 4)))
+
+
+def test_cpd_rejects_sharded_hierarchical():
+    from repro.core import SignCompressor
+    comm = HierarchicalComm(hierarchical(2, 2), ("d",))
+    with pytest.raises(ValueError, match="CPD-SGDM does not compose"):
+        make_optimizer("cpd_sgdm", comm, compressor=SignCompressor())
+
+
+def test_mt_compressed_rejects_sharded_hierarchical():
+    from repro.core import SignCompressor
+    comm = HierarchicalComm(hierarchical(2, 2), ("d",))
+    with pytest.raises(ValueError):
+        make_optimizer("mt_dsgdm", comm, compressor=SignCompressor())
+
+
+def test_hier_comm_rejects_membership():
+    ms = MembershipSchedule("full", np.ones((1, 4), bool),
+                            np.ones((1, 4), bool))
+    with pytest.raises(ValueError, match="membership"):
+        HierarchicalComm(hierarchical(2, 2), ("d",), membership=ms)
+
+
+def test_hier_comm_rejects_flat_topology():
+    with pytest.raises(ValueError, match="hierarchical"):
+        HierarchicalComm(ring(4), ("d",))
+
+
+def test_inter_codec_guards():
+    with pytest.raises(ValueError, match="randk"):
+        HierarchicalComm(hierarchical(2, 2), ("d",),
+                         inter_codec=types.SimpleNamespace(name="randk"))
+    with pytest.raises(ValueError, match="wire encoding"):
+        HierarchicalComm(hierarchical(2, 2), ("d",),
+                         wire_dtype="bfloat16",
+                         inter_codec=IdentityCodec())
+
+
+# --------------------------------------------- dense ≡ sharded (slow tier)
+
+_SCRIPT_HIER_EQUIV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelCfg, OptimCfg, ParallelCfg, RunCfg
+    from repro.configs.shapes import InputShape, train_batch_arrays
+    from repro.core import PDSGDM, PDSGDMConfig
+    from repro.core.gossip import DenseComm
+    from repro.core.topology import hierarchical
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.runtime import build_train
+    from repro.models import make_model
+
+    WIRE = os.environ.get("TEST_WIRE", "float32")
+    mcfg = ModelCfg(name="tiny", arch_type="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=128)
+    run = RunCfg(model=mcfg,
+                 parallel=ParallelCfg(profile="A", remat="none",
+                                      topology="ring", node_size=2),
+                 optim=OptimCfg(name="pd_sgdm", eta=0.05, mu=0.9, p=2,
+                                weight_decay=1e-4, wire_dtype=WIRE))
+    mesh = make_debug_mesh(4, 2)   # 4 workers x TP2 -> 2 nodes of 2
+    pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
+    K = pack.layout.n_workers
+    assert K == 4, K
+    params, state = pack.init_fn(jax.random.PRNGKey(0))
+    batches = [train_batch_arrays(mcfg, K, 2, 16,
+               jax.random.fold_in(jax.random.PRNGKey(1), t))
+               for t in range(6)]
+    for b in batches:
+        params, state, loss = pack.train_step(params, state, b)
+    sharded_final = jax.tree_util.tree_map(np.asarray, params)
+
+    # dense single-device simulation of the identical two-level round
+    model = make_model(mcfg)
+    params2 = jax.vmap(lambda k: model.init(jax.random.PRNGKey(0)))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    comm = DenseComm(hierarchical(2, 2), wire_dtype=WIRE)
+    opt = PDSGDM(PDSGDMConfig(eta=0.05, mu=0.9, p=2, weight_decay=1e-4),
+                 comm)
+    st = opt.init(params2)
+    gradf = jax.vmap(jax.value_and_grad(lambda p, b: model.loss(p, b)[0]))
+    stepf = jax.jit(lambda st, p, b: opt.step(st, p, gradf(p, b)[1]))
+    for b in batches:
+        params2, st = stepf(st, params2, b)
+    sim_final = jax.tree_util.tree_map(np.asarray, params2)
+
+    errs = [np.abs(a - b).max() for a, b in
+            zip(jax.tree_util.tree_leaves(sharded_final),
+                jax.tree_util.tree_leaves(sim_final))]
+    print("max leaf err:", max(errs))
+    # both paths quantize at the same point (the shipped node mean), so
+    # trajectories agree up to reduction order even at bf16
+    assert max(errs) < 5e-4, max(errs)
+    print("HIER_EQUIV_OK", WIRE)
+""")
+
+
+def _run(script, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    if env_extra:
+        env.update(env_extra)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_hier_equals_dense_sim():
+    """grouped pmean + leader ppermute + psum ≡ dense kron-W round."""
+    out = _run(_SCRIPT_HIER_EQUIV, {"TEST_WIRE": "float32"})
+    assert "HIER_EQUIV_OK float32" in out
+
+
+@pytest.mark.slow
+def test_sharded_hier_equals_dense_sim_bf16():
+    """the bitcast-pinned bf16 inter wire ≡ dense bf16 round-trip sim."""
+    out = _run(_SCRIPT_HIER_EQUIV, {"TEST_WIRE": "bfloat16"})
+    assert "HIER_EQUIV_OK bfloat16" in out

@@ -1,0 +1,119 @@
+"""Canned-HLO units for the two-level round contract: the parser must
+classify psum-inside-node (all-reduce with a node-sized replica group)
+vs. collective-permute-between-nodes, and the per-level byte check must
+hold accounted ≡ shipped.  Pure text — no jax tracing, no devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_check import (check_collectives_allowed,
+                                      check_hier_wire_bytes)
+from repro.analysis.hlo_parse import parse_collectives
+from repro.core.gossip import DenseComm, hier_bytes_per_round
+from repro.core.topology import hierarchical
+
+# One two-level round on K = 8 (2 nodes × 4), payload f32[1024] (4096 B):
+# grouped all-reduce (intra average) → leader collective-permute (inter)
+# → grouped all-reduce (rebroadcast), plus the scalar loss mean over the
+# full worker axis.  Replica groups use the brace form the node-grouped
+# collectives lower to.
+CANNED_F32 = """
+HloModule jit_hier_round
+
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %avg = f32[1024]{0} all-reduce(%a), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %cp = f32[1024]{0} collective-permute(%avg), source_target_pairs={{0,4},{4,0}}, channel_id=1
+  %reb = f32[1024]{0} all-reduce(%cp), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %loss = f32[] all-reduce(%l), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+}
+"""
+
+# the bf16 wire ships as a u16 bitcast (2048 B) — converts pinned off the
+# collective by the integer bitcast, see ShardedComm._wire_cast
+CANNED_BF16 = CANNED_F32.replace(
+    "%cp = f32[1024]{0} collective-permute",
+    "%cp = u16[1024]{0} collective-permute")
+
+_TREE = [jax.ShapeDtypeStruct((1024,), jnp.float32)]
+
+
+def _levels(wire_dtype="float32"):
+    return hier_bytes_per_round(
+        _TREE, DenseComm(hierarchical(2, 4), wire_dtype=wire_dtype))
+
+
+def test_parser_classifies_levels_by_group():
+    st = parse_collectives(CANNED_F32)
+    by_group = {}
+    for c in st.calls:
+        if c.op == "all-reduce":
+            by_group.setdefault(c.group, []).append(c)
+    assert len(by_group[4]) == 2        # intra: node-sized replica groups
+    assert len(by_group[8]) == 1        # the full-axis scalar loss mean
+    assert st.counts["collective-permute"] == 1
+    cp = next(c for c in st.calls if c.op == "collective-permute")
+    assert cp.result_bytes == 1024 * 4
+    assert cp.wire_bytes == 1024 * 4    # point-to-point: wire = payload
+
+
+def test_allowed_needs_node_group_opt_in():
+    st = parse_collectives(CANNED_F32)
+    # default contract: the substantive node all-reduces are violations
+    errs = check_collectives_allowed(st)
+    assert len(errs) == 2 and all("all-reduce" in e for e in errs)
+    # node_allreduce_group admits exactly the node-sized groups; the
+    # scalar loss mean still rides the scalar exemption
+    assert check_collectives_allowed(st, node_allreduce_group=4) == []
+    # a wrong node size admits nothing
+    errs = check_collectives_allowed(st, node_allreduce_group=2)
+    assert len(errs) == 2
+
+
+def test_hier_wire_bytes_accounted_equals_shipped():
+    st = parse_collectives(CANNED_F32)
+    assert check_hier_wire_bytes(st, _levels(), node_size=4) == []
+
+
+def test_hier_wire_bytes_bf16():
+    st = parse_collectives(CANNED_BF16)
+    lv = _levels("bfloat16")
+    assert lv["inter_site"] == 1024 * 2
+    assert check_hier_wire_bytes(st, lv, node_size=4) == []
+    # the f32 accounting must reject the halved wire (and vice versa)
+    assert check_hier_wire_bytes(st, _levels(), node_size=4)
+    assert check_hier_wire_bytes(parse_collectives(CANNED_F32), lv,
+                                 node_size=4)
+
+
+def test_hier_wire_bytes_flags_intra_mismatch():
+    # drop the rebroadcast: intra traffic is half the accounted figure
+    st = parse_collectives(CANNED_F32.replace(
+        "  %reb = f32[1024]{0} all-reduce(%cp), "
+        "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add\n", ""))
+    errs = check_hier_wire_bytes(st, _levels(), node_size=4)
+    assert len(errs) == 1 and "intra" in errs[0]
+    # check_intra=False (the kernel layout's padded rows) skips it
+    assert check_hier_wire_bytes(st, _levels(), node_size=4,
+                                 check_intra=False) == []
+
+
+def test_hier_wire_bytes_tiny_node_leaves_are_intra():
+    """Node-group all-reduces below the scalar exemption (tiny norm-scale
+    leaves) still count as intra traffic — the byte check must not drop
+    them."""
+    extra = ("  %norm.avg = f32[32]{0} all-reduce(%s), "
+             "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add\n"
+             "  %norm.reb = f32[32]{0} all-reduce(%norm.avg), "
+             "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add\n")
+    st = parse_collectives(CANNED_F32.replace("  %loss", extra + "  %loss"))
+    lv = hier_bytes_per_round(
+        [jax.ShapeDtypeStruct((1024,), jnp.float32),
+         jax.ShapeDtypeStruct((32,), jnp.float32)],
+        DenseComm(hierarchical(2, 4)))
+    # inter accounting includes the 32-elem leaf the canned cp doesn't
+    # ship — only the intra side balances here
+    errs = check_hier_wire_bytes(st, lv, node_size=4)
+    assert len(errs) == 1 and "inter" in errs[0]
+    got = sum(c.wire_bytes * c.mult for c in st.calls
+              if c.op == "all-reduce" and c.group == 4)
+    assert got == pytest.approx(lv["intra_wire"])

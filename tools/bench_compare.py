@@ -35,6 +35,17 @@ overlap_hiding``                                      (timing ratio: the
                                                       bounded at p = 4 where
                                                       synchronous MT
                                                       diverges)
+``pretrain/claim_inter_        inter_reduction_f32,   |Δ|/baseline ≤ 2%
+reduction``                    inter_reduction_bf16   (byte-accounting
+                                                      arithmetic: two-level
+                                                      vs flat-ring wires)
+``pretrain/claim_inter_        reduction_ok           fresh ≥ baseline
+reduction``                                           (0/1 flag: both inter
+                                                      reductions ≥ 2×)
+``pretrain/claim_equal_loss``  hier_loss_ok           fresh ≥ baseline
+                                                      (0/1 flag: two-level
+                                                      LM run's final loss ≤
+                                                      1.05 × flat ring's)
 =============================  =====================  =====================
 
 A gated (row, key) present in a baseline but missing from the fresh run
@@ -68,6 +79,12 @@ DEFAULT_GATES = [
     ("round_engine/claim_overlap_hiding", "overlap_local_parity",
      "min_frac", 0.5),
     ("noniid/claim_p4_overlap", "mt_overlap_survives_p4", "min_frac", 1.0),
+    ("pretrain/claim_inter_reduction", "inter_reduction_f32",
+     "rel_tol", 0.02),
+    ("pretrain/claim_inter_reduction", "inter_reduction_bf16",
+     "rel_tol", 0.02),
+    ("pretrain/claim_inter_reduction", "reduction_ok", "min_frac", 1.0),
+    ("pretrain/claim_equal_loss", "hier_loss_ok", "min_frac", 1.0),
 ]
 
 
