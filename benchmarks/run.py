@@ -27,6 +27,10 @@ Sections
             plus end-to-end runs of examples/pretrain_decentralized.py
             (standalone writes BENCH_pretrain.json; env knobs
             PRETRAIN_STEPS / PRETRAIN_MODEL)
+  embedding sparse embedding-row wire on the power-law (Zipf) lookup
+            workload: bytes/round vs rows touched (batch sweep), flat in
+            table size (table sweep), plus a fused sparse round timing
+            (standalone writes BENCH_embedding.json)
   roofline  dry-run HLO analysis against TPU v5e hardware ceilings
 
 Output formats
@@ -69,14 +73,20 @@ scraping stdout.  Schema (version 1)::
         {"name": "pretrain/claim_equal_loss",  # end-to-end LM driver claim
          "us_per_call": 0.0,
          "derived": {"hier_loss_ok": 1.0, "train_comm_reduction": 8.0}},
+        {"name": "embedding/claim_bytes_scale",  # sparse-wire scaling claim
+         "us_per_call": 0.0,
+         "derived": {"bytes_scale_with_touched": 1.0,
+                     "sparse_vs_dense_x": 99.0,
+                     "bytes_flat_in_table": 1.0}},
         ...
       ]
     }
 
 Standalone section runs also write their own committed baselines
 (``BENCH_kernel_path.json``, ``BENCH_wire_codecs.json``,
-``BENCH_noniid.json``, ``BENCH_elastic.json``, ``BENCH_pretrain.json``)
-which ``tools/bench_compare.py`` gates fresh runs against.
+``BENCH_noniid.json``, ``BENCH_elastic.json``, ``BENCH_pretrain.json``,
+``BENCH_embedding.json``) which ``tools/bench_compare.py`` gates fresh
+runs against.
 
 ``derived`` values parse to floats where possible; free-form fragments are
 kept under ``"note"``.  Rows are append-only within a run; compare runs by
@@ -91,7 +101,7 @@ import time
 
 SECTIONS = ["fig1", "fig2", "fig3", "speedup", "round", "toposweep",
             "kernels", "kernel_path", "wire", "noniid", "elastic",
-            "pretrain", "roofline"]
+            "pretrain", "embedding", "roofline"]
 
 
 def _write_bench_json(sections, wall_s) -> str:
@@ -156,6 +166,9 @@ def main() -> None:
     if "pretrain" in want:
         from benchmarks import pretrain_sweep
         pretrain_sweep.main()
+    if "embedding" in want:
+        from benchmarks import embedding_wire
+        embedding_wire.main()
     if "roofline" in want:
         from benchmarks import roofline
         roofline.main()

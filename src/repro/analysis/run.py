@@ -45,6 +45,7 @@ def _dense_grid(full: bool):
         ("pd_sgdm", None, True, False),
         ("cpd_sgdm", "sign", True, False),
         ("cpd_sgdm", "qsgd", False, False),
+        ("cpd_sgdm", "sparse", True, False),
         ("mt_dsgdm", None, False, False),
         ("pd_sgdm", None, False, True),
         ("mt_dsgdm", None, True, True),
@@ -56,6 +57,7 @@ def _dense_grid(full: bool):
             ("cpd_sgdm", "topk", False, False),
             ("cpd_sgdm", "randk", False, False),
             ("cpd_sgdm", "identity", False, False),
+            ("cpd_sgdm", "sparse+sign", False, False),
             ("qg_dsgdm", None, False, False),
             ("mt_dsgdm", None, True, False),
             ("pd_sgdm", None, True, True),
@@ -148,6 +150,7 @@ def _sharded_grid(full: bool):
         ("pd_sgdm", "sign", False, "static", False),
         ("pd_sgdm", "sign", True, "static", False),
         ("cpd_sgdm", "sign", False, "static", False),
+        ("cpd_sgdm", "sparse", True, "static", False),
         ("pd_sgdm", "sign", False, "one_peer_exp", False),
         ("pd_sgdm", "sign", False, "static", True),
         ("pd_sgdm", "sign", True, "static", True),
@@ -158,6 +161,7 @@ def _sharded_grid(full: bool):
             ("cpd_sgdm", "qsgd", False, "static", False),
             ("cpd_sgdm", "topk", False, "static", False),
             ("cpd_sgdm", "randk", False, "static", False),
+            ("cpd_sgdm", "sparse+qsgd", False, "static", False),
             ("mt_dsgdm", "sign", False, "static", False),
             ("pd_sgdm", "sign", False, "random_matching", False),
             ("pd_sgdm", "sign", True, "one_peer_exp", False),

@@ -173,11 +173,15 @@ class OptimCfg:
     # shape knobs.  Every named compressor has a first-class wire format
     # (repro.core.wire): sign → packed bits + scales, topk → (idx, val)
     # slots, randk → values only (indices key-derived), qsgd → uintN
-    # levels + norms.  Irrelevant knobs are ignored per operator.
+    # levels + norms, sparse → (row index, row values) pairs of the
+    # touched rows only (compose the inner value codec with sparse+sign /
+    # sparse+qsgd).  Irrelevant knobs are ignored per operator.
     compressor: str = "sign"        # identity | sign | topk | randk | qsgd
-    compressor_block: int = LANE    # sign/topk/qsgd block (LANE = kernel path)
+    #                               # | sparse | sparse+sign | sparse+qsgd
+    compressor_block: int = LANE    # sign/topk/qsgd/sparse row width
     compressor_fraction: float = 0.01   # topk / randk kept fraction
     compressor_levels: int = 7      # qsgd levels (7 -> 4-bit wire)
+    compressor_rows: int = 64       # sparse: shipped-row budget per leaf
     # dtype of the uncompressed gossip payload (PD/MT/QG x wire and MT's
     # uncompressed c wire): "float32" | "bfloat16".  bf16 halves the
     # bytes on every wire the backend ships; the self term and the mixing

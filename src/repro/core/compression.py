@@ -31,6 +31,7 @@ __all__ = [
     "TopKCompressor",
     "RandKCompressor",
     "QSGDCompressor",
+    "SparseRowsCompressor",
     "make_compressor",
     "sign_pack",
     "sign_unpack",
@@ -272,6 +273,59 @@ class QSGDCompressor(Compressor):
         return max(1.0 / d, 1.0 - d_eff / (4.0 * self.levels ** 2))
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseRowsCompressor(Compressor):
+    """Ship only the ``max_rows`` largest rows (by L2 norm) of each leaf's
+    blockwise layout — the push-by-key wire for embedding-dominated
+    workloads where each round touches a few thousand rows of a huge table.
+
+    Each leaf is viewed as ``nb = ceil(d / block)`` rows of ``block``
+    elements (the flatten-once kernel rows); the wire carries
+    ``R = min(max_rows, nb)`` (int32 row index, row payload) pairs.  The
+    row payload is the ``inner`` codec applied to the gathered (R, block)
+    row matrix: ``"f32"`` ships raw rows (lossless on the touched set),
+    ``"sign"`` / ``"qsgd"`` compose the existing blockwise operators
+    row-wise.  Untouched rows decode to exact 0, so when ≤ R rows are
+    non-zero (the embedding regime) the f32 wire satisfies Q(x) = x.
+
+    δ: the selected rows are the top-R by norm, so the kept energy is at
+    least R/nb of ‖x‖² — composed with the inner operator's own δ.
+    """
+
+    name: str = "sparse_rows"
+    max_rows: int = 64
+    inner: str = "f32"     # "f32" | "sign" | "qsgd"
+    levels: int = 7        # inner="qsgd" quantization levels
+    block: int = SIGN_BLOCK
+
+    def _inner_row_bytes(self) -> int:
+        """Exact wire bytes per shipped row (excluding the row index)."""
+        if self.inner == "f32":
+            return 4 * self.block
+        if self.inner == "sign":
+            return self.block // 8 + 4          # bits + f32 scale
+        if self.inner == "qsgd":
+            from repro.core.wire import qsgd_bits
+            return self.block * qsgd_bits(self.levels) // 8 + 4
+        raise ValueError(f"unknown sparse inner codec {self.inner!r}")
+
+    def wire_bits_per_element(self, dtype=jnp.float32):
+        # per *touched* element rate (the honest denominator for this
+        # codec: bytes scale with rows touched, not with leaf size)
+        return 8.0 * (4 + self._inner_row_bytes()) / self.block
+
+    def delta_lower_bound(self, d):
+        nb = -(-int(d) // self.block)
+        keep = min(self.max_rows, nb) / nb      # top-R rows keep ≥ R/nb energy
+        if self.inner == "f32":
+            return keep
+        inner_delta = (SignCompressor(block=self.block) if self.inner == "sign"
+                       else QSGDCompressor(levels=self.levels,
+                                           block=self.block)
+                       ).delta_lower_bound(min(d, self.block))
+        return keep * inner_delta
+
+
 def make_compressor(name: str, **kw) -> Compressor:
     name = name.lower()
     if name in ("identity", "none", "full"):
@@ -284,4 +338,8 @@ def make_compressor(name: str, **kw) -> Compressor:
         return RandKCompressor(**kw)
     if name == "qsgd":
         return QSGDCompressor(**kw)
+    if name in ("sparse", "sparse_rows"):
+        return SparseRowsCompressor(**kw)
+    if name.startswith("sparse+"):          # composed: sparse+sign, sparse+qsgd
+        return SparseRowsCompressor(inner=name.split("+", 1)[1], **kw)
     raise ValueError(f"unknown compressor {name!r}")

@@ -425,22 +425,22 @@ class CPDSGDM(PDSGDM):
         interp = self.config.kernel_interpret
         payload = self.codec.rows_pack(plan.flatten(diff),
                                        counts=plan.row_counts(),
-                                       interpret=interp)
+                                       interpret=interp, plan=plan)
         q_self = plan.unflatten(self.codec.rows_unpack(payload,
-                                                       interpret=interp),
+                                                       interpret=interp,
+                                                       plan=plan),
                                 dtype=jnp.float32)
         new_state["xhat"] = tmap(
             lambda h, q: jnp.where(commit_self, h + q, h), xhat, q_self)
-        u = plan.used_rows
+        wire = self.codec.rows_wire(payload, plan)
         nbrs = dict(new_state["xhat_nbrs"])
         for (ax, sh, _w) in self.comm.nonself_shifts():
             k = self._key(ax, sh)
-            recv = {name: plan.pad_wire(
-                        self.comm._receive_from_committed(
-                            arr[..., :u, :], ax, sh, commit))
-                    for name, arr in payload.items()}
+            recv = self.codec.rows_unwire(
+                {name: self.comm._receive_from_committed(arr, ax, sh, commit)
+                 for name, arr in wire.items()}, plan)
             q_recv = plan.unflatten(
-                self.codec.rows_unpack(recv, interpret=interp),
+                self.codec.rows_unpack(recv, interpret=interp, plan=plan),
                 dtype=jnp.float32)
             nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
         new_state["xhat_nbrs"] = nbrs
@@ -488,21 +488,22 @@ class CPDSGDM(PDSGDM):
         interp = self.config.kernel_interpret
         payload = self.codec.rows_pack(plan.flatten(diff),
                                        counts=plan.row_counts(),
-                                       interpret=interp)
+                                       interpret=interp, plan=plan)
         q_self = plan.unflatten(self.codec.rows_unpack(payload,
-                                                       interpret=interp),
+                                                       interpret=interp,
+                                                       plan=plan),
                                 dtype=jnp.float32)
         new_state["xhat"] = tmap(lambda h, q: h + q, xhat, q_self)
         if isinstance(self.comm, ShardedComm):
-            u = plan.used_rows
+            wire = self.codec.rows_wire(payload, plan)
             nbrs = dict(new_state["xhat_nbrs"])
             for (ax, sh, _w) in self.comm.nonself_shifts():
                 k = self._key(ax, sh)
-                recv = {name: plan.pad_wire(
-                            self.comm._receive_from(arr[..., :u, :], ax, sh))
-                        for name, arr in payload.items()}
+                recv = self.codec.rows_unwire(
+                    {name: self.comm._receive_from(arr, ax, sh)
+                     for name, arr in wire.items()}, plan)
                 q_recv = plan.unflatten(
-                    self.codec.rows_unpack(recv, interpret=interp),
+                    self.codec.rows_unpack(recv, interpret=interp, plan=plan),
                     dtype=jnp.float32)
                 nbrs[k] = tmap(lambda h, q: h + q, nbrs[k], q_recv)
             new_state["xhat_nbrs"] = nbrs
@@ -582,8 +583,9 @@ class CPDSGDM(PDSGDM):
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
         """Alg. 2 lines 6-9 entirely on the kernel layout: consensus from
         stored copies, one Pallas codec pack, the payload tree through the
-        wire (sliced to ``plan.used_rows`` so alignment padding never
-        ships), error-compensation updates — no tree rematerialization."""
+        wire (trimmed to its wire extent by ``rows_wire`` — dense payloads
+        drop alignment padding, sparse payloads are already compact),
+        error-compensation updates — no tree rematerialization."""
         assert plan is not None, "CPD-SGDM matrix comm needs the KernelPlan"
         cfg = self.config
         gamma = jnp.float32(cfg.gamma)
@@ -602,20 +604,22 @@ class CPDSGDM(PDSGDM):
 
         # lines 7-9: codec pack on the matrix, payload on the wire.
         payload = self.codec.rows_pack(x_new - xhat, counts=counts,
-                                       interpret=interp)
+                                       interpret=interp, plan=plan)
         new_mats = dict(mats)
         new_mats["xhat"] = xhat + self.codec.rows_unpack(payload,
-                                                         interpret=interp)
+                                                         interpret=interp,
+                                                         plan=plan)
         if isinstance(self.comm, ShardedComm):
-            u = plan.used_rows
+            wire = self.codec.rows_wire(payload, plan)
             nbrs = dict(mats["xhat_nbrs"])
             for (ax, sh, _w) in self.comm.nonself_shifts():
                 k = self._key(ax, sh)
-                recv = {name: plan.pad_wire(
-                            self.comm._receive_from(arr[..., :u, :], ax, sh))
-                        for name, arr in payload.items()}
+                recv = self.codec.rows_unwire(
+                    {name: self.comm._receive_from(arr, ax, sh)
+                     for name, arr in wire.items()}, plan)
                 nbrs[k] = nbrs[k] + self.codec.rows_unpack(recv,
-                                                           interpret=interp)
+                                                           interpret=interp,
+                                                           plan=plan)
             new_mats["xhat_nbrs"] = nbrs
         return x_new, new_mats
 

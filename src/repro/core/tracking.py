@@ -441,8 +441,9 @@ class MTDSGDm(PDSGDM):
     def comm_round_mat(self, x_mat, mats, counts, r, *, plan=None):
         """Dual gossip on the kernel layout: x and c mix matrix-to-matrix;
         compressed tracking packs c with the codec's rows kernels and
-        ships the payload sliced to ``plan.used_rows`` (alignment padding
-        never crosses the wire), exactly like CPD-SGDM's drift wire."""
+        ships the payload trimmed to its wire extent by ``rows_wire``
+        (alignment padding never crosses the wire; sparse payloads are
+        already compact), exactly like CPD-SGDM's drift wire."""
         x_new = self._gossip_mat(x_mat, r, plan=plan)
         c = mats["c"]
         if self.codec is None:
@@ -450,20 +451,20 @@ class MTDSGDm(PDSGDM):
         else:
             interp = self.config.kernel_interpret
             payload = self.codec.rows_pack(c, counts=counts,
-                                           interpret=interp)
-            q_self = self.codec.rows_unpack(payload, interpret=interp)
+                                           interpret=interp, plan=plan)
+            q_self = self.codec.rows_unpack(payload, interpret=interp,
+                                            plan=plan)
             if isinstance(self.comm, ShardedComm):
                 assert plan is not None, (
                     "MT-DSGDm matrix comm needs the KernelPlan")
-                u = plan.used_rows
+                wire = self.codec.rows_wire(payload, plan)
                 c_new = jnp.float32(self.comm.self_weight()) * q_self
                 for (ax, sh, w) in self.comm.nonself_shifts():
-                    recv = {name: plan.pad_wire(
-                                self.comm._receive_from(arr[..., :u, :],
-                                                        ax, sh))
-                            for name, arr in payload.items()}
+                    recv = self.codec.rows_unwire(
+                        {name: self.comm._receive_from(arr, ax, sh)
+                         for name, arr in wire.items()}, plan)
                     c_new = c_new + jnp.float32(w) * self.codec.rows_unpack(
-                        recv, interpret=interp)
+                        recv, interpret=interp, plan=plan)
             else:
                 c_new = self._gossip_mat(q_self, r)
         return x_new, {**mats, "c": c_new}

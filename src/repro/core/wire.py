@@ -10,21 +10,27 @@ apart.
 
 Payload layouts (per leaf of ``n`` elements, ``nb = ceil(n / block)``):
 
-=========  =====================================================  ==========
-codec      payload (dict of arrays)                               bytes
-=========  =====================================================  ==========
-identity   ``vals``   f32 (n,)                                    4·n
-sign       ``bits``   u8 (nb, block/8), ``scales`` f32 (nb,)      nb·(block/8+4)
-topk       ``idx``    i32 (nb, W), ``vals`` f32 (nb, W)           nb·W·8
-randk      ``vals``   f32 (k,)  — ``idx`` derived from the key    k·4
-qsgd       ``levels`` u8 (nb, block·bits/8), ``norms`` f32 (nb,)  nb·(block·bits/8+4)
-=========  =====================================================  ==========
+===========  =====================================================  ==========
+codec        payload (dict of arrays)                               bytes
+===========  =====================================================  ==========
+identity     ``vals``   f32 (n,)                                    4·n
+sign         ``bits``   u8 (nb, block/8), ``scales`` f32 (nb,)      nb·(block/8+4)
+topk         ``idx``    i32 (nb, W), ``vals`` f32 (nb, W)           nb·W·8
+randk        ``vals``   f32 (k,)  — ``idx`` derived from the key    k·4
+qsgd         ``levels`` u8 (nb, block·bits/8), ``norms`` f32 (nb,)  nb·(block·bits/8+4)
+sparse_rows  ``rowidx`` i32 (R,) + inner payload of the gathered    R·(4+row)
+             (R, block) row matrix (f32 / sign / qsgd rows)
+===========  =====================================================  ==========
 
 with ``W = max(1, ceil(fraction·block))`` (top-k slot width, uniform across
 blocks so the payload is rectangular — tail blocks fill unused slots with
-``(idx 0, val 0)`` placeholders that unpack to nothing) and
+``(idx 0, val 0)`` placeholders that unpack to nothing),
 ``bits = qsgd_bits(levels)`` ∈ {2, 4, 8} (smallest byte-divisor holding the
-``2·levels+1`` symmetric quantization levels).
+``2·levels+1`` symmetric quantization levels), and for the sparse-rows
+codec ``R = min(max_rows, nb)`` (the static touched-row budget) and
+``row`` the inner codec's per-row bytes — ``4·block`` (f32),
+``block/8 + 4`` (sign), ``block·bits/8 + 4`` (qsgd).  See
+``docs/WIRE_FORMATS.md`` for the full reference table.
 
 Two execution domains share one semantics:
 
@@ -58,14 +64,15 @@ import numpy as np
 from repro.core.compression import (Compressor, IdentityCompressor,
                                     QSGDCompressor, RandKCompressor,
                                     SIGN_BLOCK, SignCompressor,
-                                    TopKCompressor, sign_pack, sign_unpack,
-                                    sign_wire_bytes)
+                                    SparseRowsCompressor, TopKCompressor,
+                                    sign_pack, sign_unpack, sign_wire_bytes)
 
 __all__ = [
     "WireCodec", "IdentityCodec", "SignCodec", "TopKCodec", "RandKCodec",
-    "QSGDCodec", "make_codec", "topk_rows", "topk_rows_unpack", "qsgd_rows",
-    "qsgd_rows_unpack", "qsgd_bits", "topk_width", "payload_nbytes",
-    "wire_key",
+    "QSGDCodec", "SparseRowsCodec", "make_codec", "topk_rows",
+    "topk_rows_unpack", "qsgd_rows", "qsgd_rows_unpack", "qsgd_bits",
+    "sign_rows", "sign_rows_unpack", "sparse_row_select", "topk_width",
+    "payload_nbytes", "wire_key",
 ]
 
 Payload = Dict[str, jnp.ndarray]
@@ -218,6 +225,80 @@ def qsgd_rows_unpack(packed: jnp.ndarray, norms: jnp.ndarray, *,
     return jnp.where(norms > 0, vals, 0.0)
 
 
+def _tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Fixed binary-tree sum over the last axis.  ``jnp.sum``'s reduction
+    strategy (and hence its float summation order) varies with the operand
+    shape, so the same 1024-lane row summed as part of a (1, B) per-leaf
+    matrix and a (N·S, B) collapsed kernel matrix can differ by 1 ulp.
+    Here every step is an elementwise add of the two halves — XLA has no
+    reassociation freedom — so the result is bit-identical regardless of
+    how many rows ride along.  The sparse wire uses this for its row-norm
+    selection and sign-inner scales, keeping the per-leaf and kernel
+    payloads exact against each other."""
+    n = x.shape[-1]
+    p = 1 << max(n - 1, 0).bit_length()
+    if p != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])
+    while x.shape[-1] > 1:
+        x = x[..., 0::2] + x[..., 1::2]
+    return x[..., 0]
+
+
+def sign_rows(x: jnp.ndarray, counts: Optional[jnp.ndarray] = None):
+    """Blockwise scaled-sign pack on (R, B) rows — the sparse wire's inner
+    sign codec (padding assumed zero; ``counts`` is each row's true
+    length, the scale divisor).  Returns
+    ``(packed (R, B/8) u8, scales (R,) f32)``.  The scale sum is the
+    shape-independent :func:`_tree_sum`, and the count divisor is applied
+    as an explicit reciprocal multiply: when the gathered counts are
+    constant-foldable (single-row leaf) XLA strength-reduces a division
+    to exactly this form, so spelling it out keeps data-dependent and
+    folded paths bit-identical (same trick as ``qsgd_rows_unpack``).
+    (The Pallas sign kernel's own scale keeps ``jnp.sum`` semantics; the
+    two sign wires are distinct formats and never compared bitwise.)"""
+    R, B = x.shape
+    x = x.astype(jnp.float32)
+    if counts is None:
+        counts = jnp.full((R,), float(B), jnp.float32)
+    counts = jnp.asarray(counts, jnp.float32).reshape(R)
+    scales = _tree_sum(jnp.abs(x)) * (jnp.float32(1.0)
+                                      / jnp.maximum(counts, 1.0))
+    bits = (x >= 0).astype(jnp.uint8).reshape(R, B // 8, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    packed = jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+    return packed, scales
+
+
+def sign_rows_unpack(packed: jnp.ndarray, scales: jnp.ndarray, *,
+                     block: int) -> jnp.ndarray:
+    """Inverse of :func:`sign_rows` → (R, block) f32 = scale·sign.  A
+    zero row packs to scale 0 and decodes to exact ±0 everywhere (adding
+    it is the identity); padding lanes decode to ±scale and are discarded
+    by the per-leaf ``[:n]`` slice / ``KernelPlan.unflatten``, exactly as
+    the dense sign codec's are."""
+    R = packed.shape[0]
+    bytes_ = packed.reshape(R, block // 8, 1)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (bytes_ >> shifts) & jnp.uint8(1)
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    return signs.reshape(R, block) * scales.reshape(R, 1)
+
+
+def sparse_row_select(x: jnp.ndarray, budget: int) -> jnp.ndarray:
+    """The touched-row selector of the sparse wire: indices of the
+    ``budget`` largest rows of (R, B) ``x`` by squared L2 row norm, sorted
+    ascending (i32).  ``lax.top_k`` returns distinct indices, so a payload
+    never carries duplicate rows; untouched (all-zero) rows have norm 0
+    and are only selected when fewer than ``budget`` rows are touched —
+    they ship zeros and decode to exact 0, so an under-full budget is
+    lossless padding, not error.  Norms use the shape-independent
+    :func:`_tree_sum` so the per-leaf and kernel paths select identical
+    rows (a 1-ulp norm drift could flip a selection near a tie)."""
+    norms = _tree_sum(jnp.square(x.astype(jnp.float32)))
+    _, idx = jax.lax.top_k(norms, budget)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
 # ------------------------------------------------------------------- codecs
 @dataclasses.dataclass(frozen=True)
 class WireCodec:
@@ -247,11 +328,25 @@ class WireCodec:
         raise NotImplementedError
 
     # -- (rows, 1024) kernel domain ---------------------------------------
-    def rows_pack(self, mat, counts=None, *, interpret=None) -> Payload:
+    def rows_pack(self, mat, counts=None, *, interpret=None,
+                  plan=None) -> Payload:
         raise NotImplementedError(f"{self.name}: no kernel wire format")
 
-    def rows_unpack(self, payload: Payload, *, interpret=None):
+    def rows_unpack(self, payload: Payload, *, interpret=None, plan=None):
         raise NotImplementedError(f"{self.name}: no kernel wire format")
+
+    def rows_wire(self, payload: Payload, plan) -> Payload:
+        """Trim a rows-domain payload to its wire extent before a neighbour
+        exchange.  Default (dense rows payloads): slice every array to
+        ``plan.used_rows`` so block-alignment padding never ships.  Compact
+        payloads (sparse rows) override to the identity."""
+        u = plan.used_rows
+        return {k: v[..., :u, :] for k, v in payload.items()}
+
+    def rows_unwire(self, wire: Payload, plan) -> Payload:
+        """Receiver-side inverse of :meth:`rows_wire`: re-pad each array to
+        the kernel row extent for the unpack kernel."""
+        return {k: plan.pad_wire(v) for k, v in wire.items()}
 
     # -- accounting --------------------------------------------------------
     def wire(self, payload: Payload) -> Payload:
@@ -301,13 +396,13 @@ class SignCodec(WireCodec):
         return sign_unpack(payload["bits"], payload["scales"], n, shape,
                            dtype, self.block)
 
-    def rows_pack(self, mat, counts=None, *, interpret=None):
+    def rows_pack(self, mat, counts=None, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         bits, scales = kops.sign_pack(mat, counts=counts,
                                       interpret=interpret)
         return {"bits": bits, "scales": scales}
 
-    def rows_unpack(self, payload, *, interpret=None):
+    def rows_unpack(self, payload, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         return kops.sign_unpack(payload["bits"], payload["scales"],
                                 interpret=interpret)
@@ -346,14 +441,14 @@ class TopKCodec(WireCodec):
         q = topk_rows_unpack(payload["idx"], payload["vals"], self.block)
         return q.reshape(-1)[:n].reshape(shape).astype(dtype)
 
-    def rows_pack(self, mat, counts=None, *, interpret=None):
+    def rows_pack(self, mat, counts=None, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         idx, vals = kops.topk_pack(mat, counts=counts,
                                    fraction=self.fraction,
                                    interpret=interpret)
         return {"idx": idx, "vals": vals}
 
-    def rows_unpack(self, payload, *, interpret=None):
+    def rows_unpack(self, payload, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         return kops.topk_unpack(payload["idx"], payload["vals"],
                                 interpret=interpret)
@@ -427,13 +522,13 @@ class QSGDCodec(WireCodec):
                              levels=self.levels, block=self.block)
         return q.reshape(-1)[:n].reshape(shape).astype(dtype)
 
-    def rows_pack(self, mat, counts=None, *, interpret=None):
+    def rows_pack(self, mat, counts=None, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         packed, norms = kops.qsgd_pack(mat, levels=self.levels,
                                        interpret=interpret)
         return {"levels": packed, "norms": norms}
 
-    def rows_unpack(self, payload, *, interpret=None):
+    def rows_unpack(self, payload, *, interpret=None, plan=None):
         from repro.kernels import ops as kops
         return kops.qsgd_unpack(payload["levels"], payload["norms"],
                                 levels=self.levels, interpret=interpret)
@@ -441,6 +536,158 @@ class QSGDCodec(WireCodec):
     def wire_bytes(self, n):
         nb = -(-int(n) // self.block)
         return nb * (self.block * self.bits // 8 + 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseRowsCodec(WireCodec):
+    """Touched-rows wire: (row index, row values) pairs — push-by-key for
+    embedding-dominated workloads.
+
+    Each leaf is viewed as its blockwise ``(nb, block)`` rows (identical to
+    the flatten-once kernel rows when ``block == LANE``); the payload ships
+    the ``R = min(max_rows, nb)`` top rows by squared L2 norm as an i32
+    ``rowidx`` vector plus the ``inner`` codec's payload of the gathered
+    ``(R, block)`` row matrix (``"f32"`` raw rows / ``"sign"`` /
+    ``"qsgd"``).  Untouched rows decode to exact 0, so when at most R rows
+    are non-zero — the power-law embedding regime — the f32 wire is
+    *lossless* (Q(x) = x) at ``R·(4 + 4·block)`` bytes instead of ``4·n``.
+
+    Rows domain: selection and the inner codec run in jnp on the compact
+    gathered matrix (identical code to the per-leaf path, so the two
+    domains are bit-exact by construction); the Pallas gather/scatter pair
+    (``repro.kernels.row_gather``) only moves rows.  Both rows entry points
+    require the :class:`~repro.kernels.ops.KernelPlan`: per-leaf budgets
+    come from the plan's row segments, keeping kernel payloads identical
+    to the per-leaf payloads leaf by leaf.  ``rows_wire`` is the identity —
+    the payload is already compact, nothing to trim.
+    """
+
+    name: str = "sparse_rows"
+    max_rows: int = 64
+    inner: str = "f32"     # "f32" | "sign" | "qsgd"
+    levels: int = 7        # inner="qsgd" quantization levels
+    block: int = SIGN_BLOCK
+
+    @property
+    def rows_supported(self):
+        return True
+
+    def budget(self, n: int) -> int:
+        """Static shipped-row count for an n-element leaf."""
+        return min(self.max_rows, -(-int(n) // self.block))
+
+    def plan_budget(self, plan) -> int:
+        """Total shipped rows S on a kernel plan: Σ per-leaf budgets."""
+        return sum(min(self.max_rows, s.n_rows) for s in plan.slots)
+
+    def plan_select(self, mat, plan) -> jnp.ndarray:
+        """Global touched-row indices on the flatten-once layout,
+        (..., S) i32: per-leaf top-budget selection (squared-L2 row norm,
+        sorted ascending) offset by the leaf's ``row_start``.  Leaf row
+        segments are disjoint and ordered, so the concatenation is
+        globally distinct and sorted — the scatter kernel's contract."""
+        norms = _tree_sum(jnp.square(mat.astype(jnp.float32)))
+        parts = []
+        for s in plan.slots:
+            seg = norms[..., s.row_start:s.row_start + s.n_rows]
+            _, li = jax.lax.top_k(seg, min(self.max_rows, s.n_rows))
+            parts.append(jnp.sort(li, axis=-1).astype(jnp.int32)
+                         + jnp.int32(s.row_start))
+        return jnp.concatenate(parts, axis=-1)
+
+    # -- inner (value) codec on the gathered (..., R, block) row matrix ----
+    # Row-independent jnp in *both* domains (kernels only move rows), so
+    # the per-leaf and kernel payload values are bit-exact for free.
+    def _inner_pack(self, g, gcnt) -> Payload:
+        lead, s = g.shape[:-2], g.shape[-2]
+        if self.inner == "f32":
+            return {"rows": g.astype(jnp.float32)}
+        g2 = g.reshape(-1, self.block)
+        if self.inner == "sign":
+            bits, scales = sign_rows(g2, gcnt.reshape(-1))
+            return {"bits": bits.reshape(lead + (s, self.block // 8)),
+                    "scales": scales.reshape(lead + (s,))}
+        if self.inner == "qsgd":
+            packed, norms = qsgd_rows(g2, levels=self.levels)
+            return {"levels": packed.reshape(lead + (s, packed.shape[-1])),
+                    "norms": norms.reshape(lead + (s,))}
+        raise ValueError(f"unknown sparse inner codec {self.inner!r}")
+
+    def _inner_unpack(self, payload: Payload) -> jnp.ndarray:
+        if self.inner == "f32":
+            return payload["rows"].astype(jnp.float32)
+        if self.inner == "sign":
+            bits = payload["bits"]
+            lead, s = bits.shape[:-2], bits.shape[-2]
+            g = sign_rows_unpack(bits.reshape(-1, self.block // 8),
+                                 payload["scales"].reshape(-1),
+                                 block=self.block)
+            return g.reshape(lead + (s, self.block))
+        if self.inner == "qsgd":
+            lv = payload["levels"]
+            lead, s = lv.shape[:-2], lv.shape[-2]
+            g = qsgd_rows_unpack(lv.reshape(-1, lv.shape[-1]),
+                                 payload["norms"].reshape(-1),
+                                 levels=self.levels, block=self.block)
+            return g.reshape(lead + (s, self.block))
+        raise ValueError(f"unknown sparse inner codec {self.inner!r}")
+
+    def _row_payload_bytes(self) -> int:
+        """Exact wire bytes per shipped row, excluding the i32 index."""
+        if self.inner == "f32":
+            return 4 * self.block
+        if self.inner == "sign":
+            return self.block // 8 + 4
+        if self.inner == "qsgd":
+            return self.block * qsgd_bits(self.levels) // 8 + 4
+        raise ValueError(f"unknown sparse inner codec {self.inner!r}")
+
+    # -- per-leaf (tree) domain -------------------------------------------
+    def pack(self, x, key=None):
+        rows, counts = _to_rows(x, self.block)
+        idx = sparse_row_select(rows, self.budget(x.size))
+        g = jnp.take(rows, idx, axis=0)
+        gcnt = jnp.take(counts, idx, axis=0)
+        return {"rowidx": idx, **self._inner_pack(g, gcnt)}
+
+    def unpack(self, payload, n, shape, dtype, key=None):
+        nb = -(-int(n) // self.block)
+        g = self._inner_unpack(payload)
+        q = jnp.zeros((nb, self.block), jnp.float32).at[
+            payload["rowidx"]].add(g)
+        return q.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+    # -- (rows, 1024) kernel domain ---------------------------------------
+    def rows_pack(self, mat, counts=None, *, interpret=None, plan=None):
+        if plan is None:
+            raise ValueError("sparse_rows rows_pack needs the KernelPlan: "
+                             "per-leaf row segments set the index budgets")
+        from repro.kernels import ops as kops
+        if counts is None:
+            counts = plan.row_counts()
+        idx = self.plan_select(mat, plan)
+        g = kops.row_gather(mat, idx, counts=counts, interpret=interpret)
+        gcnt = jnp.take(jnp.asarray(counts, jnp.float32).reshape(plan.rows),
+                        idx, axis=0)
+        return {"rowidx": idx, **self._inner_pack(g, gcnt)}
+
+    def rows_unpack(self, payload, *, interpret=None, plan=None):
+        if plan is None:
+            raise ValueError("sparse_rows rows_unpack needs the KernelPlan: "
+                             "the scatter extent is the plan's row count")
+        from repro.kernels import ops as kops
+        return kops.row_scatter(payload["rowidx"], self._inner_unpack(payload),
+                                rows=plan.rows, interpret=interpret)
+
+    def rows_wire(self, payload, plan):
+        return dict(payload)         # already compact: every entry ships
+
+    def rows_unwire(self, wire, plan):
+        return dict(wire)
+
+    # -- accounting --------------------------------------------------------
+    def wire_bytes(self, n):
+        return self.budget(n) * (4 + self._row_payload_bytes())
 
 
 def make_codec(comp: Compressor) -> WireCodec:
@@ -453,6 +700,9 @@ def make_codec(comp: Compressor) -> WireCodec:
         return RandKCodec(fraction=comp.fraction)
     if isinstance(comp, QSGDCompressor):
         return QSGDCodec(levels=comp.levels, block=comp.block)
+    if isinstance(comp, SparseRowsCompressor):
+        return SparseRowsCodec(max_rows=comp.max_rows, inner=comp.inner,
+                               levels=comp.levels, block=comp.block)
     if isinstance(comp, IdentityCompressor):
         return IdentityCodec()
     raise TypeError(f"no wire codec for compressor {comp!r}")

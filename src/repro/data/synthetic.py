@@ -11,6 +11,10 @@ and every worker — is exactly reproducible:
   (non-IID splits) is controlled by ``dirichlet_alpha`` — decentralized
   methods are sensitive to it, so Fig. 1-3 use the paper-like IID setting
   and the ablations exercise non-IID.
+* ``embed_batch``: power-law (Zipf) embedding-row lookups with a planted
+  regression table — the sparse-wire regime, where each step's gradient
+  touches a handful of rows of a huge table and the interesting quantity
+  is bytes-on-the-wire as a function of rows *touched*, not table size.
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["LMStreamCfg", "lm_batch", "ClassStreamCfg", "class_batch",
-           "worker_class_probs"]
+           "worker_class_probs", "EmbedStreamCfg", "embed_batch",
+           "touched_row_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,3 +118,60 @@ def class_batch(cfg: ClassStreamCfg, step: int):
         return {"images": imgs, "labels": labels.astype(jnp.int32)}
 
     return jax.vmap(one_worker)(kw, probs)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedStreamCfg:
+    """Zipf embedding lookups: ``batch`` row ids per worker per step, row
+    popularity ∝ rank^(-zipf_a) — a few hot rows take most of the traffic,
+    so each step touches far fewer distinct rows than the table holds."""
+    n_rows: int = 16384      # embedding-table rows
+    dim: int = 64            # embedding dimension
+    batch: int = 64          # lookups per worker per step
+    n_workers: int = 8
+    seed: int = 0
+    zipf_a: float = 1.1      # power-law exponent over row ranks
+    noise: float = 0.1       # target observation noise
+
+
+def _zipf_logits(cfg: EmbedStreamCfg) -> jnp.ndarray:
+    ranks = jnp.arange(1, cfg.n_rows + 1, dtype=jnp.float32)
+    return -cfg.zipf_a * jnp.log(ranks)
+
+
+def _planted_embed_table(cfg: EmbedStreamCfg) -> jnp.ndarray:
+    """The ground-truth table the regression targets are read from —
+    deterministic in ``cfg.seed`` alone (fixed for a run)."""
+    key = jax.random.PRNGKey(cfg.seed + 3000)
+    return jax.random.normal(key, (cfg.n_rows, cfg.dim)) * 0.5
+
+
+def embed_batch(cfg: EmbedStreamCfg, step: int):
+    """(n_workers, batch) int32 row ids + (n_workers, batch) f32 targets.
+
+    target = Σ_dim planted_table[id] + noise: a linear readout of the true
+    row, so an embedding-table regression has learnable signal and its
+    gradient w.r.t. the table is non-zero exactly on the touched rows.
+    Deterministic in (seed, worker, step), like ``lm_batch``.
+    """
+    table = _planted_embed_table(cfg)
+    logits = _zipf_logits(cfg)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    kw = jax.random.split(key, cfg.n_workers)
+
+    def one_worker(k):
+        k1, k2 = jax.random.split(k)
+        ids = jax.random.categorical(k1, logits, shape=(cfg.batch,))
+        targets = (jnp.sum(table[ids], axis=-1)
+                   + cfg.noise * jax.random.normal(k2, (cfg.batch,)))
+        return {"ids": ids.astype(jnp.int32),
+                "targets": targets.astype(jnp.float32)}
+
+    return jax.vmap(one_worker)(kw)
+
+
+def touched_row_mask(ids: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """(n_rows,) bool: the table rows a batch of lookups touches — exactly
+    the rows an embedding gradient (and so the sparse wire) is non-zero
+    on."""
+    return jnp.zeros((n_rows,), bool).at[ids.reshape(-1)].set(True)

@@ -4,6 +4,7 @@ momentum       — fused SGDM update (PD-SGDM inner loop)
 sign_compress  — blockwise scaled-sign + bit-pack (sign wire codec)
 topk_select    — per-row magnitude top-k select/scatter (top-k wire codec)
 qsgd_quant     — s-level quantize + uintN bit-pack (QSGD wire codec)
+row_gather     — scalar-prefetch touched-row gather/scatter (sparse wire)
 gossip_mix     — fused W-row neighbour AXPY after ppermute
 
 The three wire-codec kernel pairs all operate on the flatten-once

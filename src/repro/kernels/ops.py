@@ -40,7 +40,8 @@ from repro.kernels import topk_select as tk
 __all__ = ["KernelPlan", "PLAN_BLOCK_ROWS", "LANE", "default_interpret",
            "momentum_update_mat", "gossip_mix_mat", "sign_pack",
            "sign_unpack", "topk_pack", "topk_unpack", "qsgd_pack",
-           "qsgd_unpack", "momentum_update_tree", "gossip_mix_tree"]
+           "qsgd_unpack", "row_gather", "row_scatter",
+           "momentum_update_tree", "gossip_mix_tree"]
 
 from repro.kernels import LANE  # noqa: E402  (the single lane definition)
 
@@ -292,6 +293,49 @@ def qsgd_unpack(packed, norms, *, levels: int,
                                  norms.reshape(-1, 1), levels=levels,
                                  interpret=interpret)
     return out.reshape(lead + (rows, LANE))
+
+
+def row_gather(x_mat, idx, counts=None, *, interpret: bool | None = None):
+    """(..., rows, 1024) + idx (..., S) i32 → gathered (..., S, 1024) f32 —
+    the sparse wire's payload builder (``repro.kernels.row_gather``).
+
+    ``counts``: per-row valid lengths (:meth:`KernelPlan.row_counts`,
+    shared across workers); gathered rows keep only their valid prefix.
+    Scalar-prefetch grids cannot be vmapped, so leading worker dims run as
+    a static Python loop — K kernel launches, one per simulated worker
+    (the sharded production path has no lead dim).
+    """
+    from repro.kernels import row_gather as rg
+    if counts is not None:
+        counts = jnp.asarray(counts, jnp.float32).reshape(x_mat.shape[-2])
+    lead = x_mat.shape[:-2]
+    if not lead:
+        return rg.row_gather_pallas(x_mat, idx, counts, interpret=interpret)
+    k = int(np.prod(lead))
+    xs = x_mat.reshape((k,) + x_mat.shape[-2:])
+    ids = idx.reshape(k, idx.shape[-1])
+    out = jnp.stack([rg.row_gather_pallas(xs[i], ids[i], counts,
+                                          interpret=interpret)
+                     for i in range(k)])
+    return out.reshape(lead + out.shape[-2:])
+
+
+def row_scatter(idx, vals, *, rows: int, interpret: bool | None = None):
+    """Inverse of :func:`row_gather`: idx (..., S) + vals (..., S, 1024) →
+    (..., rows, 1024) f32 with ``out[idx[j]] += vals[j]`` per worker and
+    untouched rows exactly 0."""
+    from repro.kernels import row_gather as rg
+    lead = vals.shape[:-2]
+    if not lead:
+        return rg.row_scatter_pallas(idx, vals, rows=rows,
+                                     interpret=interpret)
+    k = int(np.prod(lead))
+    ids = idx.reshape(k, idx.shape[-1])
+    vs = vals.reshape((k,) + vals.shape[-2:])
+    out = jnp.stack([rg.row_scatter_pallas(ids[i], vs[i], rows=rows,
+                                           interpret=interpret)
+                     for i in range(k)])
+    return out.reshape(lead + out.shape[-2:])
 
 
 # -------------------------------------------------------------------- tree ops

@@ -17,7 +17,8 @@ from repro.kernels import LANE
 
 __all__ = ["momentum_update_ref", "sign_pack_ref", "sign_pack_rows_ref",
            "sign_unpack_ref", "gossip_mix_ref", "topk_rows_ref",
-           "topk_rows_unpack_ref", "qsgd_rows_ref", "qsgd_rows_unpack_ref"]
+           "topk_rows_unpack_ref", "qsgd_rows_ref", "qsgd_rows_unpack_ref",
+           "row_gather_ref", "row_scatter_ref"]
 
 
 def momentum_update_ref(x, m, g, lr, *, mu, wd=0.0, nesterov=False):
@@ -61,6 +62,27 @@ def sign_unpack_ref(packed, scales, block: int = LANE):
         lambda p, s: _sign_unpack(p.reshape(1, block // 8), s.reshape(1),
                                   block, (block,), jnp.float32, block)
     )(packed, scales.reshape(rows))
+
+
+def row_gather_ref(x, idx, counts=None):
+    """Oracle for ``row_gather_pallas``: out[j] = x[idx[j]] with lanes ≥
+    the row's true length (``counts``) zeroed.  Pure data movement — the
+    kernel must be bit-exact against this."""
+    x = x.astype(jnp.float32)
+    rows, lane = x.shape
+    g = jnp.take(x, idx, axis=0)
+    if counts is None:
+        return g
+    cnt = jnp.take(jnp.asarray(counts, jnp.float32).reshape(rows), idx)
+    lanes = jnp.arange(lane, dtype=jnp.float32)[None, :]
+    return jnp.where(lanes < cnt[:, None], g, 0.0)
+
+
+def row_scatter_ref(idx, vals, *, rows: int):
+    """Oracle for ``row_scatter_pallas``: zeros.at[idx].add(vals) — with
+    the distinct-indices contract this is a pure permutation write."""
+    return jnp.zeros((rows, vals.shape[-1]),
+                     jnp.float32).at[idx].add(vals.astype(jnp.float32))
 
 
 def gossip_mix_ref(tensors, weights):

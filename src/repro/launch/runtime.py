@@ -200,6 +200,10 @@ def _compressor_kwargs(o) -> dict:
     if name == "qsgd":
         return {"levels": o.compressor_levels,
                 "block": o.compressor_block}
+    if name in ("sparse", "sparse_rows") or name.startswith("sparse+"):
+        return {"max_rows": o.compressor_rows,
+                "levels": o.compressor_levels,
+                "block": o.compressor_block}
     return {}
 
 

@@ -48,14 +48,18 @@ def main():
                          "(identity|sign|topk|qsgd; needs --node-size)")
     ap.add_argument("--compressor", default=None,
                     help="cpd_sgdm/choco wire codec: "
-                         "identity|sign|topk|randk|qsgd")
+                         "identity|sign|topk|randk|qsgd|sparse|"
+                         "sparse+sign|sparse+qsgd")
     ap.add_argument("--compressor-fraction", type=float, default=None,
                     help="topk/randk kept fraction")
     ap.add_argument("--compressor-levels", type=int, default=None,
                     help="qsgd quantization levels (7 = 4-bit wire)")
     ap.add_argument("--compressor-block", type=int, default=None,
-                    help="sign/topk/qsgd block width (1024 = kernel lane; "
-                         "other widths use the per-leaf jnp wire)")
+                    help="sign/topk/qsgd/sparse block width (1024 = kernel "
+                         "lane; other widths use the per-leaf jnp wire)")
+    ap.add_argument("--compressor-rows", type=int, default=None,
+                    help="sparse wire: shipped-row budget per leaf "
+                         "(bytes/round scale with it, not with table size)")
     ap.add_argument("--track-compressed", action="store_true",
                     help="mt_dsgdm: ship the gradient-tracking correction "
                          "through the --compressor wire codec instead of "
@@ -111,6 +115,9 @@ def main():
     if args.compressor_block is not None:
         optim = dataclasses.replace(
             optim, compressor_block=args.compressor_block)
+    if args.compressor_rows is not None:
+        optim = dataclasses.replace(
+            optim, compressor_rows=args.compressor_rows)
     if args.track_compressed:
         optim = dataclasses.replace(optim, track_compressed=True)
     if args.wire_dtype:

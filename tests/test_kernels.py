@@ -343,7 +343,8 @@ def test_kernel_round_equals_jnp_round_dense_pdsgdm():
         tol=2e-5)
 
 
-@pytest.mark.parametrize("comp_name", ["sign", "topk", "qsgd"])
+@pytest.mark.parametrize("comp_name", ["sign", "topk", "qsgd", "sparse",
+                                       "sparse+sign"])
 def test_kernel_round_equals_perleaf_oracle_dense_cpdsgdm(comp_name):
     """CPD-SGDM with every kernel-wire codec: the Pallas pack on the
     flatten-once layout must reproduce the per-leaf jnp codec — per-leaf
@@ -366,11 +367,16 @@ def test_kernel_round_equals_perleaf_oracle_dense_cpdsgdm(comp_name):
     """
     from repro.core import (CPDSGDM, CPDSGDMConfig, QSGDCompressor,
                             SignCompressor, TopKCompressor)
+    from repro.core.compression import SparseRowsCompressor
     from repro.core.gossip import DenseComm
     from repro.core.topology import ring
     comp = {"sign": SignCompressor(),
             "topk": TopKCompressor(fraction=0.02),
-            "qsgd": QSGDCompressor(levels=7)}[comp_name]
+            "qsgd": QSGDCompressor(levels=7),
+            # max_rows=2 < the 3-row leaf: real selection, not pass-through
+            "sparse": SparseRowsCompressor(max_rows=2),
+            "sparse+sign": SparseRowsCompressor(max_rows=2,
+                                                inner="sign")}[comp_name]
     K, P = 4, 4
 
     def make(uk):
@@ -385,6 +391,9 @@ def test_kernel_round_equals_perleaf_oracle_dense_cpdsgdm(comp_name):
     out_mat = _run_rounds(opt_mat, K, P)
     out_tree = _run_rounds(opt_tree, K, P)
     out_leaf = _run_rounds(opt_leaf, K, P)
+    # sparse wires stay at 0.0 too: the kernels only move rows, the inner
+    # codec is the same jnp in both domains (sign ends in an exact ±1·scale
+    # product); only qsgd's decode ends in a contractable multiply
     oracle_tol = 0.0 if comp_name != "qsgd" else 6e-7   # ≤1 ulp (fma)
     _assert_round_outputs_close(out_tree, out_leaf, tol=oracle_tol)
     _assert_round_outputs_close(out_mat, out_tree, tol=2e-5)
@@ -469,7 +478,8 @@ _SCRIPT_SHARDED_KERNEL = textwrap.dedent("""
     # coincide with the per-device tree blocks, so the equivalence is tight
     # for every compressed wire (sign / top-k / QSGD), not just sign.
     for opt_name, comp in [("pd_sgdm", "sign"), ("cpd_sgdm", "sign"),
-                           ("cpd_sgdm", "topk"), ("cpd_sgdm", "qsgd")]:
+                           ("cpd_sgdm", "topk"), ("cpd_sgdm", "qsgd"),
+                           ("cpd_sgdm", "sparse")]:
         finals = []
         for uk in (False, True):
             run = RunCfg(model=mcfg,
@@ -478,7 +488,8 @@ _SCRIPT_SHARDED_KERNEL = textwrap.dedent("""
                                         weight_decay=1e-4, use_kernel=uk,
                                         compressor=comp,
                                         compressor_fraction=0.01,
-                                        compressor_levels=7))
+                                        compressor_levels=7,
+                                        compressor_rows=2))
             mesh = make_debug_mesh(8, 1)
             pack = build_train(run, mesh, InputShape("t", 16, 8, "train"))
             K = pack.layout.n_workers
@@ -519,3 +530,4 @@ def test_kernel_round_equals_jnp_round_sharded():
     assert "KERNEL_ROUND_EQ_OK cpd_sgdm sign" in out
     assert "KERNEL_ROUND_EQ_OK cpd_sgdm topk" in out
     assert "KERNEL_ROUND_EQ_OK cpd_sgdm qsgd" in out
+    assert "KERNEL_ROUND_EQ_OK cpd_sgdm sparse" in out

@@ -1,0 +1,195 @@
+"""Sparse embedding-row wire: gather/scatter kernels vs the jnp oracles
+(bit-exact), the lossless touched-within-budget property, empty-touch
+zeros, composed inner codecs, byte-scaling shape, and the power-law
+embedding workload's determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_codec
+from repro.core.compression import SparseRowsCompressor
+from repro.core.wire import payload_nbytes, sparse_row_select
+from repro.data.synthetic import (EmbedStreamCfg, embed_batch,
+                                  touched_row_mask)
+from repro.kernels import LANE
+from repro.kernels import ops as kops
+from repro.kernels.ref import row_gather_ref, row_scatter_ref
+
+
+def _rows_matrix(key, rows):
+    return jax.random.normal(key, (rows, LANE), jnp.float32) * 1.7
+
+
+def test_row_gather_kernel_matches_oracle():
+    """Counts-aware gather: compacted payload bit-equal to the jnp oracle,
+    including the masked tail lanes of partially-used rows."""
+    rows, s = 8, 3
+    x = _rows_matrix(jax.random.PRNGKey(0), rows)
+    idx = jnp.asarray([1, 4, 7], jnp.int32)
+    counts = jnp.asarray([LANE, 13, LANE, LANE, 500, LANE, LANE, 1],
+                         jnp.float32)
+    got = kops.row_gather(x, idx, counts=counts)
+    want = row_gather_ref(x, idx, counts=counts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (s, LANE)
+    # masked lanes really are exact zeros, kept lanes untouched values
+    np.testing.assert_array_equal(np.asarray(got[1, 500:]),
+                                  np.zeros(LANE - 500, np.float32))
+    np.testing.assert_array_equal(np.asarray(got[1, :500]),
+                                  np.asarray(x[4, :500]))
+    np.testing.assert_array_equal(np.asarray(got[0, :13]),
+                                  np.asarray(x[1, :13]))
+    np.testing.assert_array_equal(np.asarray(got[0, 13:]),
+                                  np.zeros(LANE - 13, np.float32))
+    # counts=None gathers raw rows
+    np.testing.assert_array_equal(
+        np.asarray(kops.row_gather(x, idx)),
+        np.asarray(row_gather_ref(x, idx)))
+
+
+def test_row_scatter_kernel_matches_oracle():
+    rows = 8
+    idx = jnp.asarray([0, 2, 5], jnp.int32)
+    vals = _rows_matrix(jax.random.PRNGKey(1), 3)
+    got = kops.row_scatter(idx, vals, rows=rows)
+    want = row_scatter_ref(idx, vals, rows=rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # unselected rows are exact zeros; zero payload decodes to exact zeros
+    np.testing.assert_array_equal(np.asarray(got[1]),
+                                  np.zeros(LANE, np.float32))
+    z = kops.row_scatter(idx, jnp.zeros_like(vals), rows=rows)
+    np.testing.assert_array_equal(np.asarray(z),
+                                  np.zeros((rows, LANE), np.float32))
+
+
+def test_row_gather_scatter_stacked_lead_dim():
+    """The ops wrappers loop the scalar-prefetch kernels over a lead worker
+    dim (grids with scalar prefetch cannot vmap) — results must match the
+    oracle per slice."""
+    k_lead, rows, s = 3, 6, 2
+    x = jax.random.normal(jax.random.PRNGKey(2), (k_lead, rows, LANE))
+    idx = jnp.stack([jnp.sort(jax.random.choice(
+        jax.random.PRNGKey(10 + i), rows, (s,), replace=False)).astype(
+            jnp.int32) for i in range(k_lead)])
+    counts = jnp.full((rows,), LANE, jnp.float32).at[0].set(37.0)
+    g = kops.row_gather(x, idx, counts=counts)
+    assert g.shape == (k_lead, s, LANE)
+    for i in range(k_lead):
+        np.testing.assert_array_equal(
+            np.asarray(g[i]),
+            np.asarray(row_gather_ref(x[i], idx[i], counts=counts)))
+    sc = kops.row_scatter(idx, g, rows=rows)
+    assert sc.shape == (k_lead, rows, LANE)
+    for i in range(k_lead):
+        np.testing.assert_array_equal(
+            np.asarray(sc[i]),
+            np.asarray(row_scatter_ref(idx[i], g[i], rows=rows)))
+
+
+def test_scatter_of_gather_reconstructs_selected_rows():
+    rows = 10
+    x = _rows_matrix(jax.random.PRNGKey(3), rows)
+    idx = jnp.asarray([2, 3, 9], jnp.int32)
+    back = kops.row_scatter(idx, kops.row_gather(x, idx), rows=rows)
+    np.testing.assert_array_equal(np.asarray(back[np.asarray(idx)]),
+                                  np.asarray(x[np.asarray(idx)]))
+    untouched = np.setdiff1d(np.arange(rows), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(back[untouched]),
+                                  np.zeros((len(untouched), LANE)))
+
+
+def test_sparse_row_select_picks_top_norm_rows_sorted():
+    x = _rows_matrix(jax.random.PRNGKey(4), 12)
+    x = x.at[jnp.asarray([1, 6, 10])].mul(100.0)   # dominant rows
+    idx = np.asarray(sparse_row_select(x, 3))
+    np.testing.assert_array_equal(idx, [1, 6, 10])  # sorted ascending
+    assert idx.dtype == np.int32
+
+
+def test_sparse_f32_lossless_when_touched_within_budget():
+    """The embedding-regime guarantee: when at most ``max_rows`` blocks of
+    the leaf are non-zero, the f32-inner sparse wire satisfies Q(x) = x
+    bit-exactly — on a ragged leaf (last block partial) too."""
+    comp = SparseRowsCompressor(max_rows=4)
+    codec = make_codec(comp)
+    n = 10 * LANE + 37
+    x = np.zeros(n, np.float32)
+    rng = np.random.default_rng(0)
+    for b in (0, 4, 10):                  # block 10 is the 37-element tail
+        lo, hi = b * LANE, min((b + 1) * LANE, n)
+        x[lo:hi] = rng.normal(size=hi - lo)
+    x = jnp.asarray(x)
+    q = codec.unpack(codec.pack(x, None), n, x.shape, x.dtype)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+@pytest.mark.parametrize("inner", ["f32", "sign", "qsgd"])
+def test_sparse_empty_touch_ships_exact_zero(inner):
+    comp = SparseRowsCompressor(max_rows=4, inner=inner)
+    codec = make_codec(comp)
+    n = 6 * LANE + 5
+    x = jnp.zeros((n,), jnp.float32)
+    q = codec.unpack(codec.pack(x, None), n, x.shape, x.dtype)
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(n, np.float32))
+
+
+def test_sparse_qsgd_composed_roundtrip():
+    """sparse+qsgd: untouched rows exact zero, touched rows within the
+    inner quantizer's step size."""
+    levels = 7
+    comp = SparseRowsCompressor(max_rows=3, inner="qsgd", levels=levels)
+    codec = make_codec(comp)
+    n = 8 * LANE
+    x = np.zeros(n, np.float32)
+    rng = np.random.default_rng(1)
+    for b in (2, 5):
+        x[b * LANE:(b + 1) * LANE] = rng.normal(size=LANE)
+    x = jnp.asarray(x)
+    q = np.asarray(codec.unpack(codec.pack(x, None), n, x.shape, x.dtype))
+    xr = np.asarray(x).reshape(8, LANE)
+    qr = q.reshape(8, LANE)
+    for b in (0, 1, 3, 4, 6, 7):
+        np.testing.assert_array_equal(qr[b], np.zeros(LANE, np.float32))
+    for b in (2, 5):
+        step = np.linalg.norm(xr[b]) / levels
+        assert np.abs(qr[b] - xr[b]).max() <= step + 1e-6
+
+
+def test_sparse_wire_bytes_flat_in_leaf_size():
+    """Accounted bytes scale with the row budget, not the leaf size — the
+    whole point of the codec — and match the shipped payload exactly."""
+    codec = make_codec(SparseRowsCompressor(max_rows=64))
+    big = [codec.wire_bytes(n * LANE) for n in (256, 1024, 4096)]
+    assert big[0] == big[1] == big[2]            # flat past the budget
+    assert (make_codec(SparseRowsCompressor(max_rows=128)).wire_bytes(
+        4096 * LANE) == 2 * big[0])              # linear in the budget
+    n = 300 * LANE
+    wire = jax.eval_shape(
+        lambda a: codec.wire(codec.pack(a, None)),
+        jax.ShapeDtypeStruct((n,), jnp.float32))
+    assert payload_nbytes(wire) == codec.wire_bytes(n)
+
+
+def test_embed_batch_deterministic_and_power_law():
+    cfg = EmbedStreamCfg(n_rows=4096, dim=32, batch=64, n_workers=4,
+                         seed=5, zipf_a=1.2)
+    b1 = embed_batch(cfg, step=3)
+    b2 = embed_batch(cfg, step=3)
+    np.testing.assert_array_equal(np.asarray(b1["ids"]),
+                                  np.asarray(b2["ids"]))
+    np.testing.assert_array_equal(np.asarray(b1["targets"]),
+                                  np.asarray(b2["targets"]))
+    b3 = embed_batch(cfg, step=4)
+    assert not np.array_equal(np.asarray(b1["ids"]), np.asarray(b3["ids"]))
+    ids = np.asarray(b1["ids"])
+    assert ids.shape == (4, 64) and ids.dtype == np.int32
+    assert ids.min() >= 0 and ids.max() < cfg.n_rows
+    # Zipf head: the hottest row takes far more than the uniform share
+    # (uniform would give 256/4096 = 0.0625 lookups per row)
+    _, counts = np.unique(ids, return_counts=True)
+    assert counts.max() >= 20
+    # the sparse regime: far fewer distinct rows touched than the table
+    mask = np.asarray(touched_row_mask(b1["ids"], cfg.n_rows))
+    assert mask.sum() == len(np.unique(ids))
+    assert mask.sum() < 0.1 * cfg.n_rows

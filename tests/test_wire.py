@@ -13,6 +13,7 @@ import pytest
 from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor,
                         QSGDCompressor, RandKCompressor, SignCompressor,
                         TopKCompressor, make_codec)
+from repro.core.compression import SparseRowsCompressor
 from repro.core.gossip import DenseComm
 from repro.core.topology import ring
 from repro.core.wire import payload_nbytes
@@ -27,12 +28,20 @@ COMPRESSORS = [
     QSGDCompressor(levels=7),
     QSGDCompressor(levels=16),
     QSGDCompressor(levels=1),
+    SparseRowsCompressor(max_rows=2),
+    SparseRowsCompressor(max_rows=2, inner="sign"),
+    SparseRowsCompressor(max_rows=3, inner="qsgd"),
 ]
 
-_ids = lambda c: f"{c.name}-{getattr(c, 'block', getattr(c, 'levels', ''))}" \
-    if c.name in ("sign", "qsgd") else \
-    (f"{c.name}-{getattr(c, 'fraction', '')}" if c.name in ("topk", "randk")
-     else c.name)
+
+def _ids(c):
+    if c.name in ("sign", "qsgd"):
+        return f"{c.name}-{getattr(c, 'block', getattr(c, 'levels', ''))}"
+    if c.name in ("topk", "randk"):
+        return f"{c.name}-{c.fraction}"
+    if c.name == "sparse_rows":
+        return f"{c.name}-{c.max_rows}-{c.inner}"
+    return c.name
 
 
 @pytest.mark.parametrize("comp", COMPRESSORS, ids=_ids)
@@ -82,7 +91,9 @@ def test_compressed_wire_under_half_bf16_baseline():
     baseline = 2 * n                     # bf16 full-precision gossip
     for comp in [SignCompressor(), SignCompressor(block=64),
                  TopKCompressor(fraction=0.01), RandKCompressor(),
-                 RandKCompressor(fraction=0.05), QSGDCompressor()]:
+                 RandKCompressor(fraction=0.05), QSGDCompressor(),
+                 SparseRowsCompressor(),                # 64 of 1024 rows
+                 SparseRowsCompressor(inner="sign")]:
         ratio = make_codec(comp).wire_bytes(n) / baseline
         assert ratio < 0.5, (comp, ratio)
     # an 8-bit qsgd wire is definitionally ~half of bf16 (plus norms):
@@ -153,6 +164,7 @@ _SCRIPT_SHARDED_SHIPPED = textwrap.dedent("""
     from repro.core import (CPDSGDM, CPDSGDMConfig, IdentityCompressor,
                             QSGDCompressor, RandKCompressor, SignCompressor,
                             TopKCompressor)
+    from repro.core.compression import SparseRowsCompressor
     from repro.core.gossip import ShardedComm
     from repro.core.topology import ring
     from repro.launch.mesh import make_mesh
@@ -171,7 +183,8 @@ _SCRIPT_SHARDED_SHIPPED = textwrap.dedent("""
 
     cases = [IdentityCompressor(), SignCompressor(), SignCompressor(block=64),
              TopKCompressor(fraction=0.01), RandKCompressor(fraction=0.05),
-             QSGDCompressor(levels=7)]
+             QSGDCompressor(levels=7),
+             SparseRowsCompressor(max_rows=2, inner="sign")]
     params = {"a": jnp.zeros((8, 1500)), "b": jnp.zeros((8, 33, 65))}
     bf16_baseline = ring(8).degree * (1500 + 33 * 65) * 2
     for comp in cases:
@@ -220,5 +233,5 @@ def test_accounted_bytes_equal_shipped_bytes_sharded():
     full-precision baseline."""
     out = _run_sub(_SCRIPT_SHARDED_SHIPPED)
     assert "ALL_SHIPPED_OK" in out
-    for name in ["identity", "sign", "topk", "randk", "qsgd"]:
+    for name in ["identity", "sign", "topk", "randk", "qsgd", "sparse_rows"]:
         assert f"SHIPPED_OK {name}" in out

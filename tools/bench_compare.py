@@ -46,6 +46,16 @@ reduction``                                           (0/1 flag: both inter
                                                       (0/1 flag: two-level
                                                       LM run's final loss ≤
                                                       1.05 × flat ring's)
+``embedding/claim_bytes_       bytes_scale_with_      fresh ≥ baseline
+scale``                        touched                (0/1 flag: bytes
+                                                      monotone in rows
+                                                      touched AND flat in
+                                                      table size, ≥ 4× under
+                                                      dense f32 at 1% touch)
+``embedding/claim_bytes_       sparse_vs_dense_x      |Δ|/baseline ≤ 2%
+scale``                                               (byte-accounting
+                                                      arithmetic: dense f32
+                                                      wire / sparse wire)
 =============================  =====================  =====================
 
 A gated (row, key) present in a baseline but missing from the fresh run
@@ -85,6 +95,9 @@ DEFAULT_GATES = [
      "rel_tol", 0.02),
     ("pretrain/claim_inter_reduction", "reduction_ok", "min_frac", 1.0),
     ("pretrain/claim_equal_loss", "hier_loss_ok", "min_frac", 1.0),
+    ("embedding/claim_bytes_scale", "bytes_scale_with_touched",
+     "min_frac", 1.0),
+    ("embedding/claim_bytes_scale", "sparse_vs_dense_x", "rel_tol", 0.02),
 ]
 
 
